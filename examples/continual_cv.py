@@ -1,0 +1,45 @@
+"""End-to-end continual-learning driver (paper Table II / Figs. 8-9 style):
+compare Immed / LazyTune / SimFreeze / ETuner on a chosen model and
+benchmark, with per-method time/energy/accuracy and the controller's
+decision log.
+
+    PYTHONPATH=src python examples/continual_cv.py --arch mobilenetv2 \
+        --bench nc --scenarios 4 --batches 8 --inferences 30
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import run_method
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mobilenetv2",
+                    choices=["mobilenetv2", "resnet50", "deit-tiny"])
+    ap.add_argument("--bench", default="nc",
+                    choices=["nc", "ni", "nic", "s-cifar"])
+    ap.add_argument("--scenarios", type=int, default=4)
+    ap.add_argument("--batches", type=int, default=8)
+    ap.add_argument("--inferences", type=int, default=30)
+    ap.add_argument("--seeds", type=int, default=1)
+    args = ap.parse_args()
+
+    base = None
+    for method in ("immed", "lazytune", "simfreeze", "etuner"):
+        r = run_method(args.arch, args.bench, method,
+                       seeds=tuple(range(args.seeds)),
+                       scenarios=args.scenarios, batches=args.batches,
+                       inferences=args.inferences)
+        if base is None:
+            base = r
+        print(f"{method:10s} acc={r['acc']*100:6.2f}% "
+              f"time={r['time_s']:7.1f}s ({r['time_s']/base['time_s']*100:5.1f}%) "
+              f"energy={r['energy_j']:7.1f}J ({r['energy_j']/base['energy_j']*100:5.1f}%) "
+              f"rounds={r['rounds']:.0f} tflops={r['tflops']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

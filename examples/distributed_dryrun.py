@@ -1,0 +1,25 @@
+"""Lower+compile one (arch x shape) cell on the production mesh and print
+its roofline terms — a thin, readable wrapper over repro.launch.dryrun.
+
+    PYTHONPATH=src python examples/distributed_dryrun.py \
+        --arch gemma2-2b --shape train_4k --mesh single
+"""
+import argparse
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import run_cell
+
+    record = run_cell(args.arch, args.shape, args.mesh)
+    print(json.dumps(record, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Quickstart: ETuner vs immediate fine-tuning on a tiny continual-learning
+stream (CPU, ~1 minute).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.configs import get_reduced
+from repro.core import (ETunerConfig, ETunerController, LazyTuneConfig,
+                        SimFreezeConfig)
+from repro.data import streams
+from repro.models import build_model
+from repro.runtime.continual import ContinualRuntime
+
+
+def main():
+    model = build_model(get_reduced("mobilenetv2"))
+    bench = streams.nc_benchmark(num_classes=10, num_scenarios=4, batches=8,
+                                 batch_size=16)
+    for name, (lazy, freeze) in [("Immediate", (False, False)),
+                                 ("ETuner", (True, True))]:
+        ctrl = ETunerController(model, ETunerConfig(
+            lazytune=lazy, simfreeze=freeze, detect_scenario_changes=False,
+            lazytune_cfg=LazyTuneConfig(max_batches_needed=8),
+            simfreeze_cfg=SimFreezeConfig(freeze_interval=6)))
+        rt = ContinualRuntime(model, bench, ctrl, pretrain_epochs=2)
+        res = rt.run(inferences_total=24)
+        print(f"{name:10s} {res.summary()}")
+        bd = {k: round(v, 2) for k, v in res.breakdown.items()}
+        print(f"           breakdown: {bd}")
+        print(f"           controller: {ctrl.stats()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""End-to-end LM training driver: train a dense decoder LM for a few
+hundred steps on synthetic next-token data with the full substrate —
+AdamW + cosine schedule, checkpoint manager (async, crash-safe), and
+SimFreeze freezing groups mid-run (recompile-cached, exactly like the
+production path).
+
+Default preset is CPU-sized (~6M params); --preset 100m builds a ~100M
+model (same code path, heavier).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.core import SimFreeze, SimFreezeConfig
+from repro.models import build_model
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+
+PRESETS = {
+    "tiny": dict(num_layers=4, d_model=128, num_heads=4, num_kv_heads=2,
+                 head_dim=32, d_ff=512, vocab_size=2048),
+    "100m": dict(num_layers=12, d_model=768, num_heads=12, num_kv_heads=4,
+                 head_dim=64, d_ff=3072, vocab_size=32768),
+}
+
+
+def synthetic_batch(rng, vocab, batch, seq):
+    # Markov-ish synthetic stream: next token correlated with current
+    toks = rng.integers(0, vocab, (batch, seq + 1))
+    toks[:, 1:] = (toks[:, :-1] * 31 + toks[:, 1:]) % vocab
+    return {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+            "targets": jnp.asarray(toks[:, 1:], jnp.int32)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--freeze-at", type=int, default=120,
+                    help="step at which SimFreeze-style prefix freezing kicks in")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(name=f"train-lm-{args.preset}", family="dense",
+                      remat="none", **PRESETS[args.preset])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"model: {cfg.name}  params={n_params/1e6:.1f}M  groups={model.num_freeze_units}")
+
+    opt_cfg = AdamWConfig(lr=3e-3)
+    opt_state = adamw_init(params, opt_cfg)
+    mgr = CheckpointManager(args.ckpt_dir, keep=2)
+
+    # resume if a checkpoint exists (crash-safe restart path)
+    restored, step0 = mgr.restore_latest((params, opt_state))
+    if restored is not None:
+        params, opt_state = restored
+        print(f"resumed from step {step0}")
+    step0 = max(step0, 0)
+
+    from repro.core.freeze_plan import FreezePlan
+
+    step_cache = {}
+
+    def make_step(plan):
+        def train_step(params, opt_state, batch, lr_scale):
+            (loss, m), grads = jax.value_and_grad(
+                lambda p: model.loss(p, batch, plan), has_aux=True)(params)
+            params, opt_state = adamw_update(grads, opt_state, params,
+                                             opt_cfg, lr_scale=lr_scale)
+            return params, opt_state, loss
+
+        return jax.jit(train_step)
+
+    rng = np.random.default_rng(0)
+    plan = None
+    t0 = time.time()
+    losses = []
+    for step in range(step0, args.steps):
+        if step == args.freeze_at:
+            G = model.num_freeze_units
+            plan = FreezePlan(groups=tuple(i < G // 2 for i in range(G)),
+                              embed=True)
+            print(f"step {step}: freezing prefix {G//2}/{G} groups + embed "
+                  f"(recompile, cached)")
+        key = plan
+        if key not in step_cache:
+            step_cache[key] = make_step(plan)
+        batch = synthetic_batch(rng, cfg.vocab_size, args.batch, args.seq)
+        lr = cosine_schedule(step, warmup=20, total=args.steps)
+        params, opt_state, loss = step_cache[key](params, opt_state, batch, lr)
+        losses.append(float(loss))
+        if step % 20 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss={float(loss):.4f} "
+                  f"({(step - step0 + 1) / (time.time() - t0):.1f} it/s)")
+        if step % 50 == 49:
+            mgr.save(step, (params, opt_state))
+    mgr.save(args.steps - 1, (params, opt_state), block=True)
+    assert losses[-1] < losses[0], "training must reduce loss"
+    print(f"done: loss {losses[0]:.3f} -> {losses[-1]:.3f}; "
+          f"checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

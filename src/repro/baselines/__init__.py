@@ -1,0 +1,22 @@
+"""SOTA efficient-training baselines the paper compares against (§V-C,
+Tables V & VII). All expose the ETunerController event API so they plug
+into runtime/continual.py unchanged:
+
+- StaticController     — fixed-interval lazy tuning (Table VII S1..S4)
+- EgeriaController     — knowledge-guided *module* freezing, strictly
+                         front-to-back (Wang et al., EuroSys'23)
+- SlimFitController    — weight-update-magnitude freezing (Ardakani'23)
+- RigLController       — sparse training w/ magnitude-drop/gradient-regrow
+                         (Evci et al., ICML'20)
+- EkyaController       — fixed-window scheduling + trial-and-error config
+                         search (Bhardwaj et al., NSDI'22)
+
+Each can be combined with LazyTune (the paper integrates its inter-tuning
+optimization into every baseline for Table V) via `with_lazytune=True`.
+"""
+from repro.baselines.controllers import (EgeriaController, EkyaController,
+                                         RigLController, SlimFitController,
+                                         StaticController)
+
+__all__ = ["StaticController", "EgeriaController", "SlimFitController",
+           "RigLController", "EkyaController"]

@@ -1,0 +1,4 @@
+from repro.checkpoint import ckpt
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["ckpt", "CheckpointManager"]

@@ -1,0 +1,85 @@
+"""Config registry: ``get_config(name)`` / ``get_reduced(name)`` /
+``ARCHS`` (the 10 assigned architectures) / ``LM_SHAPES``."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import (LM_SHAPES, LONG_500K, DECODE_32K, PREFILL_32K,
+                                TRAIN_4K, ModelConfig, ShapeConfig)
+from repro.configs import paper_models
+
+# The 10 assigned architectures, in assignment order.
+ARCHS = (
+    "qwen2-vl-72b",
+    "jamba-1.5-large-398b",
+    "gemma2-2b",
+    "granite-20b",
+    "gemma2-27b",
+    "qwen1.5-32b",
+    "rwkv6-3b",
+    "qwen3-moe-30b-a3b",
+    "kimi-k2-1t-a32b",
+    "musicgen-medium",
+)
+
+_MODULES = {
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "gemma2-2b": "gemma2_2b",
+    "granite-20b": "granite_20b",
+    "gemma2-27b": "gemma2_27b",
+    "qwen1.5-32b": "qwen1_5_32b",
+    "rwkv6-3b": "rwkv6_3b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "musicgen-medium": "musicgen_medium",
+}
+
+PAPER_MODELS: Dict[str, ModelConfig] = {
+    "resnet50": paper_models.RESNET50,
+    "mobilenetv2": paper_models.MOBILENETV2,
+    "deit-tiny": paper_models.DEIT_TINY,
+    "bert-base": paper_models.BERT_BASE,
+}
+
+_PAPER_REDUCED = {
+    "resnet50": paper_models.resnet_reduced,
+    "mobilenetv2": paper_models.mobilenet_reduced,
+    "deit-tiny": paper_models.deit_reduced,
+    "bert-base": paper_models.bert_reduced,
+}
+
+
+def _module(name: str):
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get_config(name: str) -> ModelConfig:
+    if name in _MODULES:
+        return _module(name).CONFIG
+    if name in PAPER_MODELS:
+        return PAPER_MODELS[name]
+    raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES) + sorted(PAPER_MODELS)}")
+
+
+def get_reduced(name: str) -> ModelConfig:
+    if name in _MODULES:
+        return _module(name).reduced()
+    if name in _PAPER_REDUCED:
+        return _PAPER_REDUCED[name]()
+    raise KeyError(name)
+
+
+def get_shape(name: str) -> ShapeConfig:
+    for s in LM_SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+def cell_is_applicable(cfg: ModelConfig, shape: ShapeConfig) -> str:
+    """'' if the (arch, shape) cell runs, else a skip reason."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return "skip: full quadratic attention at 524288 ctx (DESIGN.md §4)"
+    return ""

@@ -1,0 +1,187 @@
+"""Configuration dataclasses for the repro framework.
+
+Every architecture is described by a frozen (hashable) ``ModelConfig`` so it
+can be used as a static argument to ``jax.jit`` and as a cache key for the
+compiled-function cache that LazyTune amortizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One (input-shape × step-kind) cell of the dry-run matrix."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+# The four assigned LM shapes (identical across all 10 archs).
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+LM_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Unified architecture description covering dense / MoE / hybrid / SSM
+    decoder LMs plus the paper's own CV/NLP models."""
+
+    name: str
+    family: str  # dense | moe | hybrid | ssm | vlm | audio | cnn | vit | encoder
+    num_layers: int = 0
+    d_model: int = 0
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    vocab_size: int = 0
+
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_period: int = 1          # MoE layer every `moe_period` layers (1 = all)
+    capacity_factor: float = 1.25
+    moe_d_ff: int = 0            # expert hidden size (defaults to d_ff)
+    router_aux_coef: float = 0.01
+
+    # --- attention flavour ---
+    sliding_window: int = 0          # >0: local attention window
+    local_global_period: int = 0     # gemma2: alternate local/global every k layers
+    attn_logit_softcap: float = 0.0  # gemma2: 50.0
+    final_logit_softcap: float = 0.0 # gemma2: 30.0
+    qkv_bias: bool = False           # qwen1.5 / qwen2
+    rope_theta: float = 10000.0
+    mrope_sections: Tuple[int, ...] = ()  # qwen2-vl M-RoPE (t,h,w) sections
+
+    # --- hybrid / ssm ---
+    attn_period: int = 0         # jamba: 1 attention layer every `attn_period`
+    mamba_state: int = 16        # SSM state dimension N
+    mamba_conv: int = 4
+    mamba_expand: int = 2
+    rwkv_head_size: int = 64
+
+    # --- misc ---
+    post_norms: bool = False     # gemma2: post-attn/post-ffn norms
+    norm_eps: float = 1e-6
+    act: str = "silu"            # 'silu' | 'gelu'
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+
+    # --- modality frontend stub ---
+    frontend: str = "none"       # none | vision_stub | audio_stub
+    frontend_dim: int = 0        # raw patch/frame embedding dim
+    frontend_tokens: int = 0     # number of prefix tokens supplied by the stub
+
+    # --- CV / NLP paper models ---
+    image_size: int = 0
+    num_classes: int = 0
+    width_mult: float = 1.0
+
+    # --- execution ---
+    scan_layers: bool = True     # scan-over-layers (big LMs) vs unrolled (paper models)
+    remat: str = "full"          # 'none' | 'full' | 'dots'
+    attn_chunk: int = 2048       # blockwise (flash-style) attention above this seq len
+    attn_q_block: int = 2048     # blockwise attention q block
+    attn_k_block: int = 2048     # blockwise attention kv block
+    scan_unroll: bool = False    # unroll the layer scan (roofline dry-runs)
+    ssm_chunk: int = 128         # mamba/rwkv chunk length (sequence blocking)
+    ssm_dtype: str = "float32"   # mamba state-expansion dtype (bf16 = less HBM traffic)
+    moe_local_dispatch: bool = False  # per-data-shard top-k routing (no global
+                                      # token gather; capacity split per shard)
+    attn_batch_shard: bool = False  # batch-shard attention over (data x model)
+                                    # when heads don't divide the model axis
+    shard_head_dim: bool = False # fallback to head_dim sharding when heads < tp
+    # sub-quadratic? (controls long_500k applicability)
+    subquadratic: bool = False
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ----- derived -----
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def expert_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    @property
+    def is_lm(self) -> bool:
+        return self.family in ("dense", "moe", "hybrid", "ssm", "vlm", "audio")
+
+    def layer_kind(self, i: int) -> str:
+        """Kind of block at layer index i: 'attn' | 'mamba' | 'rwkv'."""
+        if self.family == "ssm":
+            return "rwkv"
+        if self.attn_period:
+            # jamba: one attention layer per attn_period, at position attn_period//2
+            return "attn" if (i % self.attn_period) == self.attn_period // 2 else "mamba"
+        return "attn"
+
+    def layer_is_moe(self, i: int) -> bool:
+        if not self.num_experts:
+            return False
+        return (i % self.moe_period) == (self.moe_period - 1)
+
+    def layer_window(self, i: int) -> int:
+        """Sliding window size for layer i (0 = global)."""
+        if self.local_global_period and self.sliding_window:
+            return self.sliding_window if i % self.local_global_period == 0 else 0
+        return self.sliding_window
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6ND model-FLOPs and memory napkin math)."""
+        if self.family == "cnn" or self.family == "vit" or self.family == "encoder":
+            return -1  # counted from the actual pytree instead
+        d, ff, V = self.d_model, self.d_ff, self.vocab_size
+        emb = V * d * (1 if self.tie_embeddings else 2)
+        total = emb
+        for i in range(self.num_layers):
+            kind = self.layer_kind(i)
+            if kind == "attn":
+                total += d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+                if self.qkv_bias:
+                    total += self.q_dim + 2 * self.kv_dim
+            elif kind == "mamba":
+                di = self.mamba_expand * d
+                total += d * 2 * di + di * (2 * self.mamba_state + 1) \
+                    + self.mamba_conv * di + di * d + di  # in/x/dt/conv/out
+            elif kind == "rwkv":
+                total += 4 * d * d + d * d  # r,k,v,g,o (wkv6 core)
+                total += 2 * d * d // 8     # data-dependent decay low-rank (approx)
+            if self.layer_is_moe(i):
+                total += self.num_experts * 3 * d * self.expert_ff + d * self.num_experts
+            else:
+                total += 3 * d * ff if self.act in ("silu", "gelu") else 2 * d * ff
+            total += 2 * d  # norms
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top-k experts)."""
+        if not self.num_experts:
+            return self.param_count()
+        d = self.d_model
+        total = self.param_count()
+        for i in range(self.num_layers):
+            if self.layer_is_moe(i):
+                inactive = (self.num_experts - self.experts_per_token)
+                total -= inactive * 3 * d * self.expert_ff
+        return total

@@ -1,0 +1,26 @@
+"""ETuner core: the paper's contribution as composable JAX-adjacent modules.
+
+- cka: layer self-representational similarity (Eq. 1)
+- curvefit: NNLS accuracy-curve estimator (Optimus-style)
+- lazytune: inter-tuning round scheduler (Alg. 1 l.1-2, 10-21)
+- simfreeze: intra-tuning CKA-guided freeze/unfreeze (Alg. 1 l.4-9, 22-26)
+- ood: energy-score scenario-change detection
+- freeze_plan: plan -> stop_gradient segments / grad masks / allreduce skips
+- controller: the combined event-driven ETuner policy
+- semi: SimSiam objective for unlabeled data (§IV-C)
+"""
+from repro.core.cka import cka, layerwise_cka
+from repro.core.controller import ETunerConfig, ETunerController
+from repro.core.curvefit import AccuracyCurve, fit_accuracy_curve
+from repro.core.freeze_plan import (FreezePlan, LayerFreezePlan, all_active,
+                                    lm_segments)
+from repro.core.lazytune import LazyTune, LazyTuneConfig
+from repro.core.ood import EnergyOODConfig, EnergyOODDetector
+from repro.core.simfreeze import SimFreeze, SimFreezeConfig
+
+__all__ = [
+    "cka", "layerwise_cka", "ETunerConfig", "ETunerController",
+    "AccuracyCurve", "fit_accuracy_curve", "FreezePlan", "LayerFreezePlan",
+    "all_active", "lm_segments", "LazyTune", "LazyTuneConfig",
+    "EnergyOODConfig", "EnergyOODDetector", "SimFreeze", "SimFreezeConfig",
+]

@@ -1,0 +1,81 @@
+"""Linear Centered Kernel Alignment (CKA) — the layer-convergence metric
+behind SimFreeze (paper Eq. 1, after Kornblith et al. 2019).
+
+Two mathematically equivalent evaluation routes for CKA(X, Y) with
+X: [n, dx], Y: [n, dy] (row = example, column = feature, centered):
+
+- *feature form*  ||Y^T X||_F^2 / (||X^T X||_F ||Y^T Y||_F): Gram over
+  features; cheap when d <= n. This is what the Pallas kernel in
+  kernels/cka tiles (never materializing the d x d Gram in HBM).
+- *example form*  <K, L>_F / (||K||_F ||L||_F) with K = X X^T, L = Y Y^T:
+  Gram over examples; cheap when n << d (CNN feature maps flattened to
+  ~1e5 features but probe batches of 16-64 examples).
+
+``cka(X, Y)`` picks the cheaper route; both are validated against each
+other in tests (a property of the identity ||Y^T X||_F^2 = <XX^T, YY^T>_F).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _center(x: jax.Array) -> jax.Array:
+    x = x.astype(jnp.float32)
+    return x - x.mean(axis=0, keepdims=True)
+
+
+def _flatten_features(x: jax.Array) -> jax.Array:
+    """[B, ...] activations -> [n, d]. For token sequences [B,S,D] each
+    (batch, position) pair is an example (standard minibatch CKA usage)."""
+    if x.ndim == 2:
+        return x
+    if x.ndim == 3:  # [B, S, D] -> [B*S, D]
+        return x.reshape(-1, x.shape[-1])
+    return x.reshape(x.shape[0], -1)  # conv maps: flatten all features
+
+
+def cka_feature_form(x: jax.Array, y: jax.Array, use_kernel: bool = False) -> jax.Array:
+    if use_kernel:
+        from repro.kernels.cka import ops as cka_ops
+
+        num, nx, ny = cka_ops.cka_terms(x, y)
+    else:
+        xty = y.T @ x
+        num = jnp.sum(xty * xty)
+        xtx = x.T @ x
+        yty = y.T @ y
+        nx = jnp.sqrt(jnp.sum(xtx * xtx))
+        ny = jnp.sqrt(jnp.sum(yty * yty))
+    return num / jnp.maximum(nx * ny, 1e-12)
+
+
+def cka_example_form(x: jax.Array, y: jax.Array) -> jax.Array:
+    k = x @ x.T
+    l = y @ y.T
+    num = jnp.sum(k * l)
+    return num / jnp.maximum(
+        jnp.sqrt(jnp.sum(k * k)) * jnp.sqrt(jnp.sum(l * l)), 1e-12)
+
+
+def cka(x: jax.Array, y: jax.Array, use_kernel: bool = False) -> jax.Array:
+    """Linear CKA between two activation tensors (any matching leading
+    shape). Returns a scalar in [0, 1]."""
+    x = _center(_flatten_features(x))
+    y = _center(_flatten_features(y))
+    n, dx = x.shape
+    dy = y.shape[1]
+    if n < min(dx, dy) and not use_kernel:
+        return cka_example_form(x, y)
+    return cka_feature_form(x, y, use_kernel=use_kernel)
+
+
+@jax.jit
+def cka_jit(x: jax.Array, y: jax.Array) -> jax.Array:
+    return cka(x, y)
+
+
+def layerwise_cka(feats_a, feats_b, use_kernel: bool = False):
+    """CKA per layer between two lists of activations (same model probed at
+    two points in time, same probe batch)."""
+    return [cka(a, b, use_kernel=use_kernel) for a, b in zip(feats_a, feats_b)]

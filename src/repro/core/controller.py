@@ -1,0 +1,105 @@
+"""ETunerController — composes LazyTune (inter-tuning), SimFreeze
+(intra-tuning) and the energy-score scenario detector into one event-driven
+policy object consumed by runtime/continual.py (Algorithm 1 of the paper).
+
+Ablation switches make the controller cover all four paper configurations:
+  Immed.    = ETunerController(lazytune=False, simfreeze=False)
+  LazyTune  = ETunerController(lazytune=True,  simfreeze=False)
+  SimFreeze = ETunerController(lazytune=False, simfreeze=True)
+  ETuner    = ETunerController(lazytune=True,  simfreeze=True)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.core.freeze_plan import FreezePlan, LayerFreezePlan, all_active
+from repro.core.lazytune import LazyTune, LazyTuneConfig
+from repro.core.ood import EnergyOODConfig, EnergyOODDetector
+from repro.core.simfreeze import SimFreeze, SimFreezeConfig
+
+
+@dataclass
+class ETunerConfig:
+    lazytune: bool = True
+    simfreeze: bool = True
+    detect_scenario_changes: bool = True
+    lazytune_cfg: LazyTuneConfig = field(default_factory=LazyTuneConfig)
+    simfreeze_cfg: SimFreezeConfig = field(default_factory=SimFreezeConfig)
+    ood_cfg: EnergyOODConfig = field(default_factory=EnergyOODConfig)
+
+
+class ETunerController:
+    def __init__(self, model, config: ETunerConfig = ETunerConfig()):
+        self.cfg = config
+        self.model = model
+        self.lazytune = LazyTune(config.lazytune_cfg)
+        scan_mode = getattr(model.cfg, "is_lm", False) and model.cfg.scan_layers
+        self.simfreeze = SimFreeze(model.num_freeze_units, model.features,
+                                   config.simfreeze_cfg, scan_mode=scan_mode)
+        self.detector = EnergyOODDetector(config.ood_cfg)
+        self._plan = self._empty_plan()
+        self.plan_changes = 0
+
+    def _empty_plan(self):
+        if self.simfreeze.scan_mode:
+            return all_active(self.model.num_freeze_units)
+        return LayerFreezePlan(layers=(False,) * self.model.num_freeze_units)
+
+    # ---- plan (a hashable static jit arg; a change implies a recompile) ----
+    @property
+    def plan(self):
+        return self._plan
+
+    def _refresh_plan(self) -> None:
+        new = self.simfreeze.plan() if self.cfg.simfreeze else self._empty_plan()
+        if new != self._plan:
+            self.plan_changes += 1
+        self._plan = new
+
+    # ---- events -------------------------------------------------------------
+    def start_scenario(self, reference_params, probe_batch) -> None:
+        if self.cfg.simfreeze:
+            self.simfreeze.start_scenario(reference_params, probe_batch)
+
+    def should_trigger(self, batches_available: int) -> bool:
+        if not self.cfg.lazytune:
+            return batches_available >= 1  # immediate fine-tuning
+        return self.lazytune.should_trigger(batches_available)
+
+    def round_finished(self, iters: int, val_acc: float, params) -> None:
+        if self.cfg.lazytune:
+            self.lazytune.round_finished(iters, val_acc)
+        if self.cfg.simfreeze and self.simfreeze.probe_batch is not None:
+            if self.simfreeze.maybe_freeze(params, iters):
+                self._refresh_plan()
+
+    def inference_served(self, logits: np.ndarray) -> bool:
+        """Returns True when a scenario change was detected."""
+        if self.cfg.lazytune:
+            self.lazytune.inference_arrived()
+        if self.cfg.detect_scenario_changes:
+            return self.detector.observe(logits)
+        return False
+
+    def scenario_changed(self, params, new_probe_batch) -> None:
+        """External or detected scenario boundary (Alg. 1 l.19-26)."""
+        if self.cfg.lazytune:
+            self.lazytune.scenario_changed()
+        if self.cfg.simfreeze and self.simfreeze.reference_params is not None:
+            if self.simfreeze.scenario_changed(params, new_probe_batch):
+                self._refresh_plan()
+
+    # ---- reporting ------------------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "rounds_triggered": self.lazytune.state.rounds_triggered,
+            "batches_needed": self.lazytune.state.batches_needed,
+            "frozen_fraction": self.simfreeze.frozen_fraction(),
+            "freezes": self.simfreeze.state.freezes,
+            "unfreezes": self.simfreeze.state.unfreezes,
+            "plan_changes": self.plan_changes,
+            "ood_detections": self.detector.detections,
+        }

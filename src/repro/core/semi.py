@@ -1,0 +1,61 @@
+"""Semi-supervised continual learning (paper §IV-C): SimSiam-style
+self-supervised objective on unlabeled data, followed by supervised
+fine-tuning on the labeled portion.
+
+SimSiam (Chen & He, CVPR'21): two augmented views, a projector + predictor
+head, negative-cosine loss with a stop-gradient on the target branch. Our
+augmentations are jax-native (random crop-shift + flip + channel jitter)
+so the whole objective jits."""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+def init_simsiam_head(key, feat_dim: int, proj_dim: int = 64) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "proj_w": common.dense_init(k1, feat_dim, (feat_dim, proj_dim), jnp.float32),
+        "proj_b": jnp.zeros((proj_dim,), jnp.float32),
+        "pred_w": common.dense_init(k2, proj_dim, (proj_dim, proj_dim), jnp.float32),
+        "pred_b": jnp.zeros((proj_dim,), jnp.float32),
+    }
+
+
+def augment(rng, images: jax.Array) -> jax.Array:
+    """Random shift + horizontal flip + brightness jitter. [B,H,W,C]."""
+    k1, k2, k3 = jax.random.split(rng, 3)
+    B, H, W, C = images.shape
+    # shift by up to 12.5% via pad+dynamic crop
+    pad = max(H // 8, 1)
+    padded = jnp.pad(images, ((0, 0), (pad, pad), (pad, pad), (0, 0)), "edge")
+    off = jax.random.randint(k1, (2,), 0, 2 * pad)
+    imgs = jax.lax.dynamic_slice(padded, (0, off[0], off[1], 0), (B, H, W, C))
+    flip = jax.random.bernoulli(k2)
+    imgs = jnp.where(flip, imgs[:, :, ::-1, :], imgs)
+    bright = 1.0 + 0.2 * jax.random.uniform(k3, (B, 1, 1, 1), minval=-1.0)
+    return imgs * bright
+
+
+def _neg_cosine(p: jax.Array, z: jax.Array) -> jax.Array:
+    p = p / (jnp.linalg.norm(p, axis=-1, keepdims=True) + 1e-8)
+    z = z / (jnp.linalg.norm(z, axis=-1, keepdims=True) + 1e-8)
+    return -jnp.mean(jnp.sum(p * jax.lax.stop_gradient(z), axis=-1))
+
+
+def simsiam_loss(backbone_feats_fn: Callable, head: dict, params,
+                 rng, images: jax.Array) -> jax.Array:
+    """backbone_feats_fn(params, images) -> pooled features [B, F]."""
+    k1, k2 = jax.random.split(rng)
+    v1, v2 = augment(k1, images), augment(k2, images)
+    f1 = backbone_feats_fn(params, v1)
+    f2 = backbone_feats_fn(params, v2)
+    z1 = f1 @ head["proj_w"] + head["proj_b"]
+    z2 = f2 @ head["proj_w"] + head["proj_b"]
+    p1 = z1 @ head["pred_w"] + head["pred_b"]
+    p2 = z2 @ head["pred_w"] + head["pred_b"]
+    return 0.5 * (_neg_cosine(p1, z2) + _neg_cosine(p2, z1))

@@ -1,0 +1,3 @@
+from repro.data import arrivals, streams
+
+__all__ = ["arrivals", "streams"]

@@ -1,0 +1,3 @@
+from repro.distributed import collectives, elastic, sharding, straggler
+
+__all__ = ["collectives", "elastic", "sharding", "straggler"]

@@ -1,0 +1,48 @@
+"""Elastic scaling: re-shard a live pytree (params + optimizer state) onto
+a different mesh — grow after repair, shrink after eviction — without
+changing global array values. Combined with the checkpoint manager this is
+the recovery path: restore_latest() -> remesh() -> resume.
+
+On the real fleet the source and target meshes are different process
+groups; here both are host-device meshes, which exercises the same
+jax.device_put resharding machinery."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as sh
+
+
+def remesh(tree, new_mesh: Mesh, spec_tree):
+    """Move every leaf to its spec on the new mesh (values preserved)."""
+    shardings = sh.named(new_mesh, spec_tree)
+    return jax.tree.map(
+        lambda leaf, s: jax.device_put(leaf, s), tree, shardings)
+
+
+def shrink_mesh(mesh: Mesh, drop_axis: str = "data") -> Mesh:
+    """Mesh with half the devices along `drop_axis` (failure of a slice)."""
+    names = mesh.axis_names
+    shape = dict(mesh.shape)
+    assert shape[drop_axis] % 2 == 0, (drop_axis, shape)
+    shape[drop_axis] //= 2
+    devs = np.asarray(mesh.devices)
+    idx = [slice(None)] * devs.ndim
+    idx[names.index(drop_axis)] = slice(0, shape[drop_axis])
+    return Mesh(devs[tuple(idx)], names)
+
+
+def elastic_restore(manager, like, cfg: ModelConfig, mesh: Mesh,
+                    policy: sh.ShardingPolicy = sh.ShardingPolicy()):
+    """Restore the latest valid checkpoint directly onto `mesh` (which may
+    have any shape — e.g. after an eviction)."""
+    specs = sh.param_specs(like, cfg, mesh, policy)
+    shardings = sh.named(mesh, specs)
+    tree, step = manager.restore_latest(like, shardings=shardings)
+    return tree, step

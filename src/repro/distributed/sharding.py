@@ -1,0 +1,313 @@
+"""Sharding rules for the production meshes.
+
+Meshes (launch/mesh.py): single-pod ``(data=16, model=16)`` = 256 chips,
+multi-pod ``(pod=2, data=16, model=16)`` = 512 chips.
+
+Param placement is name-based with **divisibility fallback chains** —
+the `model` axis is 16 but e.g. gemma2-2b has 8 query heads and granite-20b
+has a single KV head, so a fixed "shard heads on model" rule cannot hold
+across the 10 assigned archs. Each tensor kind declares an ordered list of
+(dim, axis) candidates; the first whose dimension divides the mesh axis
+size wins, otherwise the tensor is replicated on that axis and the extra
+collectives show up in — and are attributed by — the roofline analysis.
+
+FSDP ("zero3"): optionally shard the d_model/reduction dim of every large
+param over the data axes (and the pod axis in multi-pod runs) — required
+to fit kimi-k2 (≈1T params) and jamba-1.5 (398B); XLA inserts the
+all-gathers (and reduce-scatters in backward) automatically.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+# ---------------------------------------------------------------------------
+# activation sharding hints (MaxText-style logical-axis constraints)
+#
+# GSPMD propagation alone loses the batch sharding at the embedding gather
+# (the FSDP-sharded table wins, and attention then runs on the full global
+# batch — observed in EXPERIMENTS.md §Perf iteration 1). Model code
+# therefore asserts activation layouts at layer boundaries. The mesh is
+# provided through a thread-local context so the same model code runs
+# un-constrained on a bare CPU (tests) and constrained under the
+# production mesh (dry-run / real launch).
+
+_ACTIVATION_MESH = threading.local()
+
+BATCH_AXES = ("pod", "data")
+
+
+@contextmanager
+def activation_sharding(mesh: Mesh):
+    old = getattr(_ACTIVATION_MESH, "mesh", None)
+    _ACTIVATION_MESH.mesh = mesh
+    try:
+        yield
+    finally:
+        _ACTIVATION_MESH.mesh = old
+
+
+def _current_mesh() -> Optional[Mesh]:
+    return getattr(_ACTIVATION_MESH, "mesh", None)
+
+
+def hint(x, *spec):
+    """with_sharding_constraint(x, P(*spec)) against the activation mesh,
+    silently dropping axes that are absent or don't divide the dim."""
+    mesh = _current_mesh()
+    if mesh is None or not hasattr(x, "ndim"):
+        return x
+    clean = []
+    for dim in range(x.ndim):
+        s = spec[dim] if dim < len(spec) else None
+        axes = (s,) if isinstance(s, str) else tuple(s or ())
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if axes and size > 1 and x.shape[dim] % size == 0:
+            clean.append(axes[0] if len(axes) == 1 else axes)
+        else:
+            clean.append(None)
+    if all(c is None for c in clean):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*clean)))
+
+
+def hint_batch(x):
+    """[B, ...] activations: batch over (pod, data)."""
+    return hint(x, BATCH_AXES)
+
+
+@dataclass(frozen=True)
+class ShardingPolicy:
+    fsdp: bool = True               # shard params over data axes (ZeRO-3)
+    fsdp_pod: bool = True           # include the pod axis in FSDP
+    shard_embed_vocab: bool = True  # vocab dim of embeddings on `model`
+    seq_shard_long: bool = True     # shard seq dim when batch < data axis
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def fsdp_axes(mesh: Mesh, policy: ShardingPolicy) -> Tuple[str, ...]:
+    if not policy.fsdp:
+        return ()
+    axes = ["data"] if "data" in mesh.axis_names else []
+    if policy.fsdp_pod and "pod" in mesh.axis_names:
+        axes = ["pod"] + axes
+    return tuple(axes)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    size = _axis_size(mesh, axes)
+    return size > 1 and dim % size == 0
+
+
+def _pick(mesh: Mesh, shape, candidates) -> P:
+    """candidates: ordered [(dim_index, axes)] claims; claims compose as
+    long as dims differ and each divides. Returns a PartitionSpec."""
+    spec = [None] * len(shape)
+    used = set()
+    for dim, axes in candidates:
+        if axes is None or dim >= len(shape) or spec[dim] is not None:
+            continue
+        ax_tuple = (axes,) if isinstance(axes, str) else tuple(axes)
+        if any(a in used for a in ax_tuple):
+            continue
+        if all(a in mesh.axis_names for a in ax_tuple) and _fits(shape[dim], mesh, ax_tuple):
+            spec[dim] = axes
+            used.update(ax_tuple)
+    return P(*spec)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+
+
+def param_specs(params, cfg: ModelConfig, mesh: Mesh,
+                policy: ShardingPolicy = ShardingPolicy()):
+    """Pytree of PartitionSpec matching `params` (LM models; the paper's
+    unrolled CV/NLP models run single-device and use replicated specs)."""
+    fa = fsdp_axes(mesh, policy)
+
+    def spec_for(path, leaf) -> P:
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        shape = leaf.shape
+        stacked = "blocks" in names  # leading [G] scan dim
+        off = 1 if stacked else 0
+
+        def cands(raw):  # shift dim indices past the scan dim
+            return [(d + off, a) for d, a in raw]
+
+        name = names[-1]
+        parent = names[-2] if len(names) >= 2 else ""
+        c: list = []
+        if "embed" in names and name == "tok":
+            c = [(0, "model") if policy.shard_embed_vocab else (0, None),
+                 (1, fa)] if fa else [(0, "model")]
+            c = [(0, "model"), (1, fa)] if fa else [(0, "model")]
+        elif "embed" in names and name == "head":
+            c = [(1, "model"), (0, fa)]
+        elif "embed" in names and name == "frontend_proj":
+            c = [(1, "model")]
+        elif name in ("wq",):
+            # GQA fallback chain: heads -> (optional head_dim) -> replicate.
+            # head_dim sharding splits RoPE/softmax dims and costs per-layer
+            # collectives, so it is off by default (EXPERIMENTS.md §Perf).
+            c = cands([(1, "model"), (0, fa)] + (
+                [(2, "model")] if cfg.shard_head_dim else []))
+        elif name in ("wk", "wv"):
+            c = cands([(1, "model"), (0, fa)] + (
+                [(2, "model")] if cfg.shard_head_dim else []))
+        elif name == "wo" and parent == "mix" and leaf.ndim - off == 3:
+            c = cands([(0, "model"), (2, fa)] + (
+                [(1, "model")] if cfg.shard_head_dim else []))
+        elif name in ("bq", "bk", "bv"):
+            c = cands([(0, "model")] + (
+                [(1, "model")] if cfg.shard_head_dim else []))
+        elif name in ("wg", "wu") and leaf.ndim - off == 3:  # moe [E, D, F]
+            c = cands([(0, "model"), (1, fa)])
+        elif name == "wd" and leaf.ndim - off == 3:          # moe [E, F, D]
+            c = cands([(0, "model"), (2, fa)])
+        elif name in ("wg", "wu"):                           # mlp [D, F]
+            c = cands([(1, "model"), (0, fa)])
+        elif name == "wd":                                   # mlp [F, D]
+            c = cands([(0, "model"), (1, fa)])
+        elif name == "router":
+            c = cands([(1, "model")])
+        elif name == "in_proj":                              # mamba [D, 2di]
+            c = cands([(1, "model"), (0, fa)])
+        elif name == "out_proj":                             # mamba [di, D]
+            c = cands([(0, "model"), (1, fa)])
+        elif name in ("x_proj",):                            # [di, R+2N]
+            c = cands([(0, "model")])
+        elif name in ("dt_proj",):                           # [R, di]
+            c = cands([(1, "model")])
+        elif name in ("A_log", "D_skip", "dt_bias"):
+            c = cands([(0, "model")])
+        elif name == "conv_w":                               # [w, di]
+            c = cands([(1, "model")])
+        elif name == "conv_b":
+            c = cands([(0, "model")])
+        elif parent == "mix" and name in ("wr", "wk", "wv", "wg"):  # rwkv [D,D]
+            c = cands([(1, "model"), (0, fa)])
+        elif parent == "mix" and name == "wo":
+            c = cands([(0, "model"), (1, fa)])
+        elif parent == "ffn" and name in ("wr",):
+            c = cands([(1, "model")])
+        elif name in ("wA",):
+            c = cands([(0, fa)])
+        elif name in ("wB",):
+            c = cands([(1, "model")])
+        elif name == "u":
+            c = cands([(0, "model")])
+        else:  # norms, biases, mu, small tensors: replicated
+            c = []
+        return _pick(mesh, shape, c)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache / activation specs
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                policy: ShardingPolicy = ShardingPolicy()):
+    da = data_axes(mesh)
+    B = shape.global_batch
+    batch_ax = da if B % max(_axis_size(mesh, da), 1) == 0 and _axis_size(mesh, da) > 1 else None
+    specs = {"tokens": P(batch_ax, None),
+             "targets": P(batch_ax, None)}
+    if cfg.frontend != "none":
+        specs["frontend_embeds"] = P(batch_ax, None, None)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, cache,
+                policy: ShardingPolicy = ShardingPolicy()):
+    """Specs for the KV/state cache pytree (leaves may carry a leading [G]
+    scan dim). Falls back to sequence-dim sharding when the batch does not
+    divide the data axes (long_500k: batch=1, 524288-long cache)."""
+    da = data_axes(mesh)
+    dsize = _axis_size(mesh, da)
+    B = shape.global_batch
+    batch_ok = dsize > 1 and B % dsize == 0
+
+    def spec_for(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        shape_ = leaf.shape
+        stacked = leaf.ndim >= 1 and cfg.scan_layers
+        off = 1 if stacked else 0
+        name = names[-1]
+        if name in ("k", "v"):   # [G, B, L, Hkv, hd]
+            c = [(0 + off, da if batch_ok else None)]
+            if not batch_ok and policy.seq_shard_long:
+                c.append((1 + off, da))
+            c += [(2 + off, "model"), (3 + off, "model")]
+            return _pick(mesh, shape_, c)
+        if name == "h":          # mamba [G, B, di, N]
+            return _pick(mesh, shape_, [(0 + off, da if batch_ok else None),
+                                        (1 + off, "model")])
+        if name == "conv":       # [G, B, w-1, di]
+            return _pick(mesh, shape_, [(0 + off, da if batch_ok else None),
+                                        (2 + off, "model")])
+        if name == "s":          # rwkv [G, B, H, n, n]
+            return _pick(mesh, shape_, [(0 + off, da if batch_ok else None),
+                                        (1 + off, "model")])
+        if name in ("x_tm", "x_cm"):  # [G, B, D]
+            return _pick(mesh, shape_, [(0 + off, da if batch_ok else None)])
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_specs(param_spec_tree, opt_state, params):
+    """Optimizer moments mirror their parameter's spec; scalars replicate."""
+    import numpy as np
+
+    flat_p, _ = jax.tree_util.tree_flatten(params)
+    flat_s = jax.tree_util.tree_flatten(param_spec_tree,
+                                        is_leaf=lambda x: isinstance(x, P))[0]
+    by_shape = {}
+    for p, s in zip(flat_p, flat_s):
+        by_shape.setdefault((p.shape, str(p.dtype)), s)
+    by_shape_any = {p.shape: s for p, s in zip(flat_p, flat_s)}
+
+    def spec_for(leaf):
+        if leaf.ndim == 0:
+            return P()
+        s = by_shape.get((leaf.shape, str(leaf.dtype)))
+        if s is None:
+            s = by_shape_any.get(leaf.shape, P())
+        return s
+
+    return jax.tree.map(spec_for, opt_state)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash-attention kernel: dense causal attention
+with optional sliding window, logit softcap and GQA."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  softcap: float = 0.0):
+    """q: [B, Sq, Hq, hd]; k, v: [B, Sk, Hkv, hd]; Hq % Hkv == 0.
+    Returns [B, Sq, Hq, hd] (fp32)."""
+    B, Sq, Hq, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, g, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qf, kf) / jnp.sqrt(jnp.float32(hd))
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, vf)
+    return out.reshape(B, Sq, Hq, hd)

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel for the CKA Gram terms.
+
+Computes (hsic, kk, ll) for row-centered X, Y [n, d] without ever
+materializing the n x n Gram matrices in HBM: the grid tiles the Gram into
+(bn x bn) blocks; each block is accumulated over the feature dim in
+bk-chunks inside VMEM scratch (MXU-aligned tiles), then squared /
+cross-multiplied and reduced into three (1,1) outputs that every grid step
+revisits (sequential TPU grid semantics).
+
+VMEM budget per step: 4 x (bn x bk) input tiles + 2 x (bn x bn) f32
+accumulators ≈ 1.2 MB at the default bn=128, bk=512 — well inside the
+~16 MB/core VMEM envelope, with the contraction dim >= 128 for the MXU."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _cka_kernel(xi_ref, xj_ref, yi_ref, yj_ref, hsic_ref, kk_ref, ll_ref,
+                k_acc, l_acc, *, nk: int):
+    i, j, kstep = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(kstep == 0)
+    def _init():
+        k_acc[...] = jnp.zeros_like(k_acc)
+        l_acc[...] = jnp.zeros_like(l_acc)
+
+    @pl.when((i == 0) & (j == 0) & (kstep == 0))
+    def _zero_outputs():
+        hsic_ref[...] = jnp.zeros_like(hsic_ref)
+        kk_ref[...] = jnp.zeros_like(kk_ref)
+        ll_ref[...] = jnp.zeros_like(ll_ref)
+
+    xi = xi_ref[...].astype(jnp.float32)
+    xj = xj_ref[...].astype(jnp.float32)
+    yi = yi_ref[...].astype(jnp.float32)
+    yj = yj_ref[...].astype(jnp.float32)
+    k_acc[...] += jax.lax.dot_general(xi, xj, (((1,), (1,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+    l_acc[...] += jax.lax.dot_general(yi, yj, (((1,), (1,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+
+    @pl.when(kstep == nk - 1)
+    def _reduce():
+        kt = k_acc[...]
+        lt = l_acc[...]
+        hsic_ref[0, 0] += jnp.sum(kt * lt)
+        kk_ref[0, 0] += jnp.sum(kt * kt)
+        ll_ref[0, 0] += jnp.sum(lt * lt)
+
+
+def cka_terms_pallas(x: jax.Array, y: jax.Array, *, bn: int = 128,
+                     bk: int = 512, interpret: bool = True):
+    """x, y: [n, d] row-centered (ops.py pads/centers). -> (hsic, kk, ll)."""
+    n, d = x.shape
+    assert y.shape == (n, d), (x.shape, y.shape)
+    assert n % bn == 0 and d % bk == 0, (n, d, bn, bk)
+    ni, nk = n // bn, d // bk
+    grid = (ni, ni, nk)
+
+    row_block = lambda i, j, k: (i, k)
+    col_block = lambda i, j, k: (j, k)
+    scalar_spec = pl.BlockSpec((1, 1), lambda i, j, k: (0, 0))
+
+    hsic, kk, ll = pl.pallas_call(
+        functools.partial(_cka_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bk), row_block),
+            pl.BlockSpec((bn, bk), col_block),
+            pl.BlockSpec((bn, bk), row_block),
+            pl.BlockSpec((bn, bk), col_block),
+        ],
+        out_specs=[scalar_spec, scalar_spec, scalar_spec],
+        out_shape=[jax.ShapeDtypeStruct((1, 1), jnp.float32)] * 3,
+        scratch_shapes=[pltpu.VMEM((bn, bn), jnp.float32),
+                        pltpu.VMEM((bn, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, x, y, y)
+    return hsic[0, 0], kk[0, 0], ll[0, 0]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the CKA Gram-term kernel.
+
+Given row-centered feature matrices X [n, d], Y [n, d] the kernel returns
+(hsic, kk, ll) with
+    hsic = <X X^T, Y Y^T>_F   (== ||Y^T X||_F^2)
+    kk   = ||X X^T||_F^2      (== ||X^T X||_F^2)
+    ll   = ||Y Y^T||_F^2
+so CKA = hsic / sqrt(kk * ll)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cka_terms_ref(x: jnp.ndarray, y: jnp.ndarray):
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    k = x @ x.T
+    l = y @ y.T
+    hsic = jnp.sum(k * l)
+    kk = jnp.sum(k * k)
+    ll = jnp.sum(l * l)
+    return hsic, kk, ll
+
+
+def cka_ref(x, y):
+    hsic, kk, ll = cka_terms_ref(x, y)
+    return hsic / jnp.maximum(jnp.sqrt(kk) * jnp.sqrt(ll), 1e-12)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the WKV6 recurrence (exact sequential scan).
+
+    o_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+with per-channel data-dependent decay w_t = exp(logw_t)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r, k, v, logw, u, s0=None):
+    """r, k, v, logw: [B, T, H, n] float32; u: [H, n].
+    Returns (o [B, T, H, n], s_final [B, H, n, n])."""
+    B, T, H, n = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((B, H, n, n), jnp.float32)
+
+    def step(S, inputs):
+        rt, kt, vt, lwt = inputs
+        # output: r . (S + u*k v^T)
+        o = jnp.einsum("bhn,bhnm->bhm", rt, S) \
+            + jnp.einsum("bhn,bhn,bhm->bhm", rt * u, kt, vt)
+        S_new = jnp.exp(lwt)[..., None] * S + jnp.einsum("bhn,bhm->bhnm", kt, vt)
+        return S_new, o
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (r, k, v, logw))
+    s_fin, os_ = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(os_, 0, 1), s_fin

@@ -1,0 +1,75 @@
+"""ShapeDtypeStruct stand-ins for every model input/state — weak-type
+correct, shardable, zero allocation. The dry-run lowers against these."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as sh
+from repro.models import transformer as T
+
+
+def _sds(shape, dtype, mesh=None, spec=None):
+    sharding = NamedSharding(mesh, spec) if mesh is not None and spec is not None else None
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype), sharding=sharding)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                      policy: sh.ShardingPolicy = sh.ShardingPolicy()) -> Dict[str, Any]:
+    """{tokens, targets, (frontend_embeds)} ShapeDtypeStructs."""
+    specs = sh.batch_specs(cfg, shape, mesh, policy)
+    B, S = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": _sds((B, S), jnp.int32, mesh, specs["tokens"]),
+        "targets": _sds((B, S), jnp.int32, mesh, specs["targets"]),
+    }
+    if cfg.frontend != "none":
+        batch["frontend_embeds"] = _sds(
+            (B, cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16,
+            mesh, specs["frontend_embeds"])
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                        policy: sh.ShardingPolicy = sh.ShardingPolicy()):
+    batch = train_batch_specs(cfg, shape, mesh, policy)
+    del batch["targets"]
+    return batch
+
+
+def param_structs(cfg: ModelConfig, mesh: Mesh,
+                  policy: sh.ShardingPolicy = sh.ShardingPolicy()):
+    """(ShapeDtypeStruct pytree, spec pytree) for the model params —
+    via eval_shape, so nothing is allocated."""
+    structs = jax.eval_shape(lambda: T.init_lm(jax.random.PRNGKey(0), cfg))
+    specs = sh.param_specs(structs, cfg, mesh, policy)
+    with_sharding = jax.tree.map(
+        lambda s, sp: _sds(s.shape, s.dtype, mesh, sp), structs, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return with_sharding, specs
+
+
+def cache_structs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                  policy: sh.ShardingPolicy = sh.ShardingPolicy(),
+                  cache_dtype=jnp.bfloat16):
+    B, L = shape.global_batch, shape.seq_len
+    structs = jax.eval_shape(lambda: T.init_lm_cache(cfg, B, L, cache_dtype))
+    specs = sh.cache_specs(cfg, shape, mesh, structs, policy)
+    with_sharding = jax.tree.map(
+        lambda s, sp: _sds(s.shape, s.dtype, mesh, sp), structs, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return with_sharding, specs
+
+
+def decode_token_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                       policy: sh.ShardingPolicy = sh.ShardingPolicy()):
+    da = sh.data_axes(mesh)
+    B = shape.global_batch
+    ok = B % max(sh._axis_size(mesh, da), 1) == 0 and sh._axis_size(mesh, da) > 1
+    spec = P(da if ok else None, None)
+    return _sds((B, 1), jnp.int32, mesh, spec)

@@ -1,0 +1,52 @@
+"""Model zoo. ``build_model(cfg)`` returns a uniform ``Model`` record used
+by the runtime, the ETuner controller, and the dry-run launcher."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, List, Optional
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable                      # (rng) -> params
+    loss: Callable                      # (params, batch, plan) -> (loss, metrics)
+    features: Callable                  # (params, batch) -> list of activations
+    num_freeze_units: int               # groups (scan) or layers (unrolled)
+    prefill: Optional[Callable] = None  # (params, batch) -> (logits, cache)
+    decode: Optional[Callable] = None   # (params, tokens, cache, pos) -> (logits, cache)
+    init_cache: Optional[Callable] = None
+    predict: Optional[Callable] = None  # classifiers: (params, batch) -> logits
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.is_lm:
+        from repro.models import transformer as T
+
+        return Model(
+            cfg=cfg,
+            init=lambda rng: T.init_lm(rng, cfg),
+            loss=lambda params, batch, plan=None: T.lm_loss(params, cfg, batch, plan),
+            features=lambda params, batch: T.lm_features(params, cfg, batch),
+            num_freeze_units=T.num_groups(cfg),
+            prefill=lambda params, batch: T.lm_prefill(params, cfg, batch),
+            decode=lambda params, tokens, cache, pos: T.lm_decode(
+                params, cfg, tokens, cache, pos),
+            init_cache=lambda batch, max_len, dtype: T.init_lm_cache(
+                cfg, batch, max_len, dtype),
+        )
+    if cfg.family == "cnn":
+        from repro.models import cnn
+
+        return cnn.build(cfg)
+    if cfg.family == "vit":
+        from repro.models import vit
+
+        return vit.build(cfg)
+    if cfg.family == "encoder":
+        from repro.models import bert
+
+        return bert.build(cfg)
+    raise ValueError(cfg.family)

@@ -1,0 +1,221 @@
+"""GQA/MQA attention with sliding-window masks, logit softcaps, RoPE/M-RoPE,
+chunked (memory-efficient, flash-style) training attention, and a KV cache
+for prefill/decode serving.
+
+Shapes follow [B, S, H, hd]. GQA groups Hq query heads onto Hkv KV heads.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as shd
+from repro.models import common
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig) -> dict:
+    dt = common.dtype_of(cfg)
+    d = cfg.d_model
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": common.dense_init(kq, d, (d, cfg.num_heads, cfg.head_dim), dt),
+        "wk": common.dense_init(kk, d, (d, cfg.num_kv_heads, cfg.head_dim), dt),
+        "wv": common.dense_init(kv, d, (d, cfg.num_kv_heads, cfg.head_dim), dt),
+        "wo": common.dense_init(ko, cfg.q_dim, (cfg.num_heads, cfg.head_dim, d), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = common.zeros((cfg.num_heads, cfg.head_dim), dt)
+        p["bk"] = common.zeros((cfg.num_kv_heads, cfg.head_dim), dt)
+        p["bv"] = common.zeros((cfg.num_kv_heads, cfg.head_dim), dt)
+    return p
+
+
+def _project_qkv(p: dict, cfg: ModelConfig, x: jax.Array,
+                 positions: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    mesh = shd._current_mesh()
+    tp = mesh.shape.get("model", 1) if mesh is not None else 1
+    if (cfg.attn_batch_shard and tp > 1 and cfg.num_heads % tp != 0
+            and q.shape[0] % (tp * shd._axis_size(mesh, shd.data_axes(mesh))) == 0):
+        # heads don't divide the model axis: batch-shard the whole attention
+        # section over (data x model) instead of replicating it across TP
+        # (EXPERIMENTS.md §Perf). The residual stream re-shards on exit.
+        full = tuple(shd.data_axes(mesh)) + ("model",)
+        q = shd.hint(q, full, None, None, None)
+        k = shd.hint(k, full, None, None, None)
+        v = shd.hint(v, full, None, None, None)
+    else:
+        q = shd.hint(q, shd.BATCH_AXES, None, "model", None)
+        k = shd.hint(k, shd.BATCH_AXES, None, "model", None)
+        v = shd.hint(v, shd.BATCH_AXES, None, "model", None)
+    if cfg.mrope_sections:
+        if positions.ndim == 2:  # [B,S] -> text-only 3-axis positions
+            positions = jnp.stack([positions] * 3, axis=0)
+        q = common.apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = common.apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = common.apply_rope(q, positions, cfg.rope_theta)
+        k = common.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask(q_pos: jax.Array, k_pos: jax.Array, window: int) -> jax.Array:
+    """Causal (+ optional sliding-window) mask. True = attend."""
+    m = k_pos[None, :] <= q_pos[:, None]
+    if window:
+        m &= (q_pos[:, None] - k_pos[None, :]) < window
+    return m
+
+
+def _attend_dense(cfg: ModelConfig, q, k, v, q_pos, k_pos, window: int) -> jax.Array:
+    """Plain attention; q: [B,Sq,Hq,hd], k/v: [B,Sk,Hkv,hd]."""
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, g, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    scores = common.softcap(scores, cfg.attn_logit_softcap)
+    mask = _mask(q_pos, k_pos, window)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(B, Sq, Hq, hd)
+
+
+def _attend_blockwise(cfg: ModelConfig, q, k, v, q_pos, k_pos,
+                      window: int) -> jax.Array:
+    """Blockwise online-softmax attention with STATIC python loops.
+
+    Two deliberate properties (DESIGN.md §2, EXPERIMENTS.md §Perf):
+    - fully-masked (q-block, kv-block) pairs are skipped at *trace time* —
+      the causal lower triangle and the sliding-window band are the only
+      blocks that appear in the HLO, so both the FLOP count and the memory
+      footprint reflect exactly the work a real flash kernel would do
+      (gemma2 local layers at 32k attend 2 kv-blocks per q-block);
+    - no lax.scan/map: XLA:CPU cost_analysis counts a while-loop body once
+      regardless of trip count, which would corrupt the roofline terms.
+    The Pallas kernel in kernels/attention is the TPU execution of the same
+    blocking scheme with explicit VMEM tiles."""
+    B, Sq, Hq, hd = q.shape
+    Sk = k.shape[1]
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    bq = min(cfg.attn_q_block, Sq)
+    bk = min(cfg.attn_k_block, Sk)
+    nq = max(Sq // bq, 1)
+    nk = max(Sk // bk, 1)
+    bq, bk = Sq // nq, Sk // nk
+    qs = q.reshape(B, nq, bq, Hkv, g, hd)
+    ks = k.reshape(B, nk, bk, Hkv, hd)
+    vs = v.reshape(B, nk, bk, Hkv, hd)
+    qpos = q_pos.reshape(nq, bq)
+    kpos = k_pos.reshape(nk, bk)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    outs = []
+    for qi in range(nq):
+        qb = qs[:, qi]
+        qp = qpos[qi]
+        q_lo, q_hi = qi * bq, (qi + 1) * bq - 1
+        acc = jnp.zeros((B, Hkv, g, bq, hd), jnp.float32)
+        m = jnp.full((B, Hkv, g, bq), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, Hkv, g, bq), jnp.float32)
+        for ki in range(nk):
+            k_lo, k_hi = ki * bk, (ki + 1) * bk - 1
+            if k_lo > q_hi:
+                continue  # static causal skip
+            if window and k_hi < q_lo - window + 1 - bq:
+                continue  # static sliding-window skip
+            kb, vb, kp = ks[:, ki], vs[:, ki], kpos[ki]
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qb, kb).astype(jnp.float32) * scale
+            s = common.softcap(s, cfg.attn_logit_softcap)
+            msk = _mask(qp, kp, window)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(vb.dtype), vb)
+            acc = acc * corr[..., None] + pv.astype(jnp.float32)
+            m = m_new
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        outs.append(jnp.transpose(out, (0, 3, 1, 2, 4)))  # [B, bq, Hkv, g, hd]
+    out = jnp.concatenate(outs, axis=1).reshape(B, Sq, Hq, hd)
+    return out.astype(q.dtype)
+
+
+def attention_train(p: dict, cfg: ModelConfig, x: jax.Array,
+                    positions: jax.Array, window: int) -> jax.Array:
+    """Full-sequence causal self-attention for training / prefill."""
+    S = x.shape[1]
+    pos1d = positions[0] if positions.ndim == 3 else positions
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    q_pos = pos1d[0] if pos1d.ndim == 2 else pos1d  # mask uses per-row positions
+    if S > cfg.attn_chunk:
+        out = _attend_blockwise(cfg, q, k, v, q_pos, q_pos, window)
+    else:
+        out = _attend_dense(cfg, q, k, v, q_pos, q_pos, window)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill fills a cache; decode attends one token against it
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def attention_prefill(p: dict, cfg: ModelConfig, x: jax.Array,
+                      positions: jax.Array, window: int) -> Tuple[jax.Array, dict]:
+    S = x.shape[1]
+    pos1d = positions[0] if positions.ndim == 3 else positions
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    q_pos = pos1d[0] if pos1d.ndim == 2 else pos1d
+    if S > cfg.attn_chunk:
+        out = _attend_blockwise(cfg, q, k, v, q_pos, q_pos, window)
+    else:
+        out = _attend_dense(cfg, q, k, v, q_pos, q_pos, window)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), {"k": k, "v": v}
+
+
+def attention_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+                     pos: jax.Array, window: int) -> Tuple[jax.Array, dict]:
+    """x: [B, 1, D]; cache k/v: [B, L, Hkv, hd]; pos: scalar int32 (current
+    index). Returns output [B, 1, D] and the updated cache."""
+    B = x.shape[0]
+    L = cache["k"].shape[1]
+    positions = jnp.broadcast_to(pos, (B, 1))
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, pos, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, pos, 0, 0))
+    Hq, hd = cfg.num_heads, cfg.head_dim
+    Hkv = cfg.num_kv_heads
+    g = Hq // Hkv
+    qg = q.reshape(B, Hkv, g, hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    scores = common.softcap(scores, cfg.attn_logit_softcap)
+    k_pos = jnp.arange(L)
+    mask = k_pos[None, :] <= pos
+    if window:
+        mask &= (pos - k_pos[None, :]) < window
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs, v).reshape(B, 1, Hq, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"k": k, "v": v}

@@ -1,0 +1,83 @@
+"""BERT-base encoder classifier — the paper's NLP evaluation model (§V-B2,
+20News benchmark). Unrolled post-LN encoder; freeze units = embeddings,
+each encoder block, classifier head."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.freeze_plan import LayerFreezePlan, maybe_stop
+from repro.models import common
+from repro.models.vit import _ln, _ln_p, init_ffn, init_mha, simple_mha
+
+MAX_POS = 512
+
+
+def init_bert(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    keys = iter(jax.random.split(rng, 8 + 2 * cfg.num_layers))
+    params = {
+        "embed": {
+            "tok": common.normal_init(next(keys), (cfg.vocab_size, d), 0.02, jnp.float32),
+            "pos": common.normal_init(next(keys), (MAX_POS, d), 0.02, jnp.float32),
+            "ln": _ln_p(d)},
+        "blocks": [],
+        "pooler": {"w": common.dense_init(next(keys), d, (d, d), jnp.float32),
+                   "b": jnp.zeros((d,), jnp.float32)},
+        "head": {"w": common.dense_init(next(keys), d, (d, cfg.num_classes), jnp.float32),
+                 "b": jnp.zeros((cfg.num_classes,), jnp.float32)},
+    }
+    for _ in range(cfg.num_layers):
+        params["blocks"].append({
+            "attn": init_mha(next(keys), d), "ln1": _ln_p(d),
+            "ffn": init_ffn(next(keys), d, cfg.d_ff), "ln2": _ln_p(d)})
+    return params
+
+
+def _forward(params, cfg: ModelConfig, tokens, plan, collect=False):
+    B, S = tokens.shape
+    flags = plan.layers if plan is not None else (False,) * (len(params["blocks"]) + 2)
+    emb = maybe_stop(params["embed"], flags[0])
+    x = jnp.take(emb["tok"], tokens, axis=0) + emb["pos"][:S]
+    x = _ln(x, emb["ln"])
+    prefix_frozen = flags[0]
+    if prefix_frozen:
+        x = jax.lax.stop_gradient(x)
+    feats = [x] if collect else []
+    for bi, blk in enumerate(params["blocks"]):
+        frozen = flags[1 + bi]
+        blk = maybe_stop(blk, frozen)
+        x = _ln(x + simple_mha(blk["attn"], x, cfg.num_heads), blk["ln1"])
+        h = jax.nn.gelu(x @ blk["ffn"]["w1"] + blk["ffn"]["b1"])
+        x = _ln(x + (h @ blk["ffn"]["w2"] + blk["ffn"]["b2"]), blk["ln2"])
+        if frozen and prefix_frozen:
+            x = jax.lax.stop_gradient(x)
+        else:
+            prefix_frozen = False
+        if collect:
+            feats.append(x)
+    pooled = jnp.tanh(x[:, 0] @ params["pooler"]["w"] + params["pooler"]["b"])
+    head = maybe_stop(params["head"], flags[-1])
+    logits = pooled @ head["w"] + head["b"]
+    return logits, feats
+
+
+def build(cfg: ModelConfig):
+    from repro.models import Model
+
+    def loss(params, batch, plan=None):
+        logits, _ = _forward(params, cfg, batch["tokens"], plan)
+        l = common.cross_entropy(logits, batch["labels"])
+        acc = jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))
+        return l, {"loss": l, "acc": acc, "logits": logits}
+
+    def predict(params, batch):
+        return _forward(params, cfg, batch["tokens"], None)[0]
+
+    def features(params, batch):
+        return _forward(params, cfg, batch["tokens"], None, collect=True)[1]
+
+    return Model(cfg=cfg, init=lambda rng: init_bert(rng, cfg), loss=loss,
+                 features=features, num_freeze_units=cfg.num_layers + 2,
+                 predict=predict)

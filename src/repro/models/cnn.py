@@ -1,0 +1,240 @@
+"""ResNet50 and MobileNetV2 — the paper's CV evaluation models (§V-A).
+
+Unrolled execution: every weight-bearing unit (stem / residual block / head)
+is a separate pytree subtree and a separate freeze unit, so SimFreeze's
+arbitrary per-layer freezing behaves exactly as in the paper (Fig. 2):
+`stop_gradient` on a frozen unit's params removes its weight-gradient
+computation via XLA DCE, and a frozen prefix stops activation gradients.
+
+Normalization uses batch statistics (functional BN without running stats) —
+a deliberate simplification recorded in DESIGN.md; the CL benchmarks
+evaluate with batch statistics as well.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.freeze_plan import LayerFreezePlan, maybe_stop
+from repro.models import common
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return common.normal_init(key, (kh, kw, cin, cout),
+                              math.sqrt(2.0 / fan_in), jnp.float32)
+
+
+def conv2d(x, w, stride=1, groups=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+
+
+def bn(x, scale, bias, eps=1e-5):
+    mean = x.mean(axis=(0, 1, 2), keepdims=True)
+    var = x.var(axis=(0, 1, 2), keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _bn_params(c):
+    return {"scale": jnp.ones((c,), jnp.float32), "bias": jnp.zeros((c,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# ResNet (bottleneck)
+
+
+def _resnet_spec(cfg: ModelConfig):
+    if "reduced" in cfg.name:
+        return [1, 1, 1, 1], 32
+    return [3, 4, 6, 3], 64
+
+
+def resnet_static_spec(cfg: ModelConfig):
+    """Static per-unit structure (kept out of the params pytree)."""
+    blocks_per_stage, base = _resnet_spec(cfg)
+    spec = [{"kind": "stem"}]
+    cin = base
+    for si, nblocks in enumerate(blocks_per_stage):
+        width = base * (2 ** si)
+        cout = width * 4
+        for bi in range(nblocks):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            spec.append({"kind": "bottleneck", "stride": stride, "cin": cin,
+                         "width": width, "cout": cout,
+                         "proj": cin != cout or stride != 1})
+            cin = cout
+    spec.append({"kind": "head", "cin": cin})
+    return spec
+
+
+def init_resnet(rng, cfg: ModelConfig):
+    _, base = _resnet_spec(cfg)
+    spec = resnet_static_spec(cfg)
+    keys = iter(jax.random.split(rng, 256))
+    units: List[dict] = []
+    for sp in spec[:-1]:
+        if sp["kind"] == "stem":
+            units.append({"conv": _conv_init(next(keys), 7, 7, 3, base),
+                          "bn": _bn_params(base)})
+            continue
+        cin, width, cout = sp["cin"], sp["width"], sp["cout"]
+        u = {"c1": _conv_init(next(keys), 1, 1, cin, width), "b1": _bn_params(width),
+             "c2": _conv_init(next(keys), 3, 3, width, width), "b2": _bn_params(width),
+             "c3": _conv_init(next(keys), 1, 1, width, cout), "b3": _bn_params(cout)}
+        if sp["proj"]:
+            u["proj"] = _conv_init(next(keys), 1, 1, cin, cout)
+            u["proj_bn"] = _bn_params(cout)
+        units.append(u)
+    cin = spec[-1]["cin"]
+    head = {"w": common.dense_init(next(keys), cin, (cin, cfg.num_classes), jnp.float32),
+            "b": jnp.zeros((cfg.num_classes,), jnp.float32)}
+    return {"units": units, "head": head}
+
+
+def _apply_resnet_unit(sp: dict, u: dict, x):
+    if sp["kind"] == "stem":
+        x = jax.nn.relu(bn(conv2d(x, u["conv"], 2), **u["bn"]))
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                                  (1, 2, 2, 1), "SAME")
+        return x
+    h = jax.nn.relu(bn(conv2d(x, u["c1"]), **u["b1"]))
+    h = jax.nn.relu(bn(conv2d(h, u["c2"], sp["stride"]), **u["b2"]))
+    h = bn(conv2d(h, u["c3"]), **u["b3"])
+    sc = x
+    if "proj" in u:
+        sc = bn(conv2d(x, u["proj"], sp["stride"]), **u["proj_bn"])
+    return jax.nn.relu(h + sc)
+
+
+# ---------------------------------------------------------------------------
+# MobileNetV2 (inverted residuals)
+
+_MBV2_SPEC = [  # (expansion, out_c, num_blocks, stride)
+    (1, 16, 1, 1), (6, 24, 2, 2), (6, 32, 3, 2), (6, 64, 4, 2),
+    (6, 96, 3, 1), (6, 160, 3, 2), (6, 320, 1, 1)]
+_MBV2_SPEC_REDUCED = [(1, 16, 1, 1), (6, 24, 1, 2), (6, 32, 1, 2), (6, 64, 1, 2)]
+
+
+def mbv2_static_spec(cfg: ModelConfig):
+    table = _MBV2_SPEC_REDUCED if "reduced" in cfg.name else _MBV2_SPEC
+    wm = cfg.width_mult
+
+    def c(ch):
+        return max(8, int(ch * wm + 4) // 8 * 8)
+
+    spec = [{"kind": "stem", "cout": c(32)}]
+    cin = c(32)
+    for t, ch, n, s in table:
+        cout = c(ch)
+        for bi in range(n):
+            stride = s if bi == 0 else 1
+            spec.append({"kind": "invres", "stride": stride, "expand": t,
+                         "cin": cin, "hid": cin * t, "cout": cout})
+            cin = cout
+    spec.append({"kind": "last", "cin": cin, "cout": c(1280)})
+    return spec
+
+
+def init_mbv2(rng, cfg: ModelConfig):
+    spec = mbv2_static_spec(cfg)
+    keys = iter(jax.random.split(rng, 256))
+    units: List[dict] = []
+    for sp in spec:
+        if sp["kind"] == "stem":
+            units.append({"conv": _conv_init(next(keys), 3, 3, 3, sp["cout"]),
+                          "bn": _bn_params(sp["cout"])})
+        elif sp["kind"] == "last":
+            units.append({"conv": _conv_init(next(keys), 1, 1, sp["cin"], sp["cout"]),
+                          "bn": _bn_params(sp["cout"])})
+        else:
+            hid, cout, cin = sp["hid"], sp["cout"], sp["cin"]
+            u = {"dw": _conv_init(next(keys), 3, 3, 1, hid),
+                 "dw_bn": _bn_params(hid),
+                 "pw": _conv_init(next(keys), 1, 1, hid, cout), "pw_bn": _bn_params(cout)}
+            if sp["expand"] != 1:
+                u["exp"] = _conv_init(next(keys), 1, 1, cin, hid)
+                u["exp_bn"] = _bn_params(hid)
+            units.append(u)
+    clast = spec[-1]["cout"]
+    head = {"w": common.dense_init(next(keys), clast, (clast, cfg.num_classes), jnp.float32),
+            "b": jnp.zeros((cfg.num_classes,), jnp.float32)}
+    return {"units": units, "head": head}
+
+
+def _apply_mbv2_unit(sp: dict, u: dict, x):
+    if sp["kind"] in ("stem", "last"):
+        s = 2 if sp["kind"] == "stem" else 1
+        return jax.nn.relu6(bn(conv2d(x, u["conv"], s), **u["bn"]))
+    h = x
+    if "exp" in u:
+        h = jax.nn.relu6(bn(conv2d(h, u["exp"]), **u["exp_bn"]))
+    hid = h.shape[-1]
+    h = jax.nn.relu6(bn(conv2d(h, u["dw"], sp["stride"], groups=hid), **u["dw_bn"]))
+    h = bn(conv2d(h, u["pw"]), **u["pw_bn"])
+    if sp["stride"] == 1 and x.shape[-1] == h.shape[-1]:
+        h = h + x
+    return h
+
+
+# ---------------------------------------------------------------------------
+# shared classifier scaffolding
+
+
+def _forward(params, cfg: ModelConfig, images, plan: LayerFreezePlan,
+             spec, apply_unit, collect=False):
+    units = params["units"]
+    nunits = len(units) + 1  # + head
+    flags = plan.layers if plan is not None else (False,) * nunits
+    prefix_frozen = True
+    feats = []
+    x = images
+    for sp, u, frozen in zip(spec, units, flags):
+        u = maybe_stop(u, frozen)
+        x = apply_unit(sp, u, x)
+        if frozen and prefix_frozen:
+            x = jax.lax.stop_gradient(x)  # paper Fig.2 case 3
+        else:
+            prefix_frozen = False
+        if collect:
+            feats.append(x)
+    x = x.mean(axis=(1, 2))
+    head = maybe_stop(params["head"], flags[-1])
+    logits = x @ head["w"] + head["b"]
+    return logits, feats
+
+
+def build(cfg: ModelConfig):
+    from repro.models import Model
+
+    is_resnet = cfg.name.startswith("resnet")
+    init_fn = init_resnet if is_resnet else init_mbv2
+    unit_fn = _apply_resnet_unit if is_resnet else _apply_mbv2_unit
+    spec = (resnet_static_spec(cfg) if is_resnet else mbv2_static_spec(cfg))
+    if is_resnet:
+        spec = spec[:-1]  # drop head entry; head handled separately
+    n_units = len(spec) + 1
+
+    def loss(params, batch, plan=None):
+        logits, _ = _forward(params, cfg, batch["images"], plan, spec, unit_fn)
+        l = common.cross_entropy(logits, batch["labels"])
+        acc = jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))
+        return l, {"loss": l, "acc": acc, "logits": logits}
+
+    def predict(params, batch):
+        logits, _ = _forward(params, cfg, batch["images"], None, spec, unit_fn)
+        return logits
+
+    def features(params, batch):
+        _, feats = _forward(params, cfg, batch["images"], None, spec, unit_fn,
+                            collect=True)
+        return feats
+
+    return Model(cfg=cfg, init=lambda rng: init_fn(rng, cfg), loss=loss,
+                 features=features, num_freeze_units=n_units, predict=predict)

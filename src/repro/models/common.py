@@ -1,0 +1,181 @@
+"""Shared building blocks: initializers, norms, embeddings, RoPE / M-RoPE,
+activation and softcap helpers. Pure-functional (params are pytrees of
+jnp arrays); no framework dependency."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# init helpers
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def normal_init(key, shape, scale: float, dtype) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def dense_init(key, fan_in: int, shape, dtype) -> jax.Array:
+    """Truncated-normal-ish init scaled by 1/sqrt(fan_in)."""
+    return normal_init(key, shape, 1.0 / math.sqrt(max(fan_in, 1)), dtype)
+
+
+def zeros(shape, dtype) -> jax.Array:
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype) -> jax.Array:
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def activation(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if kind == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (+ M-RoPE for qwen2-vl)
+
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))  # [hd/2]
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [..., S, hd/2]
+    angles = angles[..., None, :]  # broadcast over heads -> [..., S, 1, hd/2]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
+                sections: Tuple[int, ...]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    x: [B, S, H, hd]; positions3: [3, B, S] (t, h, w position ids).
+    `sections` gives the number of hd/2 frequency slots assigned to each of
+    the three axes (sum(sections) == hd // 2).
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = jnp.asarray(rope_freqs(hd, theta))  # [hd/2]
+    # section id for each frequency slot
+    sec_id = np.concatenate([np.full(s, i) for i, s in enumerate(sections)])
+    sec_id = jnp.asarray(sec_id)  # [hd/2]
+    # pick position per slot from the matching axis
+    pos = positions3.astype(jnp.float32)  # [3, B, S]
+    pos_per_slot = jnp.take(pos, sec_id, axis=0)  # [hd/2, B, S]
+    angles = jnp.moveaxis(pos_per_slot, 0, -1) * freqs  # [B, S, hd/2]
+    angles = angles[..., None, :]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def default_mrope_positions(batch: int, seq: int) -> jax.Array:
+    """Text-only M-RoPE degenerates to the same position on all 3 axes."""
+    p = jnp.broadcast_to(jnp.arange(seq)[None, :], (batch, seq))
+    return jnp.stack([p, p, p], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# embedding
+
+
+def init_embedding(key, cfg: ModelConfig) -> dict:
+    dt = dtype_of(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"tok": normal_init(k1, (cfg.vocab_size, cfg.d_model), 0.02, dt)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(k2, cfg.d_model, (cfg.d_model, cfg.vocab_size), dt)
+    if cfg.frontend != "none":
+        p["frontend_proj"] = dense_init(k3, cfg.frontend_dim,
+                                        (cfg.frontend_dim, cfg.d_model), dt)
+    return p
+
+
+def embed_tokens(p: dict, cfg: ModelConfig, tokens: jax.Array,
+                 frontend_embeds: Optional[jax.Array] = None) -> jax.Array:
+    x = jnp.take(p["tok"], tokens, axis=0)
+    if cfg.family in ("dense", "moe", "hybrid", "ssm", "vlm", "audio"):
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype) if cfg.tie_embeddings else x
+    if frontend_embeds is not None and cfg.frontend != "none":
+        # Modality stub: project precomputed patch/frame embeddings and
+        # prepend them to the token sequence (prefix conditioning).
+        pre = frontend_embeds.astype(x.dtype) @ p["frontend_proj"]
+        x = jnp.concatenate([pre, x], axis=1)
+    return x
+
+
+def lm_logits(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, p["tok"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, p["head"])
+    logits = logits.astype(jnp.float32)
+    return softcap(logits, cfg.final_logit_softcap)
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Sharding-friendly CE: no take_along_axis gather over the (possibly
+    model-axis-sharded) vocab dim — the target logit is picked with an
+    elementwise iota comparison that XLA keeps fused and partial-sums."""
+    logits = logits.astype(jnp.float32)
+    V = logits.shape[-1]
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    logz = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    picked = jnp.sum(jnp.where(vocab_iota == targets[..., None], shifted, 0.0),
+                     axis=-1)
+    nll = logz - picked
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

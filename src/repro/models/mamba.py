@@ -1,0 +1,145 @@
+"""Mamba-1 selective SSM block (for jamba's hybrid stack).
+
+TPU adaptation (DESIGN.md §2): the CUDA selective-scan kernel is replaced
+by a *chunked associative scan* — `lax.scan` over sequence chunks with a
+`lax.associative_scan` inside each chunk, so the [B, Lc, d_inner, N]
+state-expansion temporary is bounded by the chunk length and rematerialized
+in the backward pass. The recurrent decode path is an exact single-step
+update (O(1) state in sequence length, which is what makes jamba's
+`long_500k` cell runnable)."""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as shd
+from repro.models import common
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.mamba_expand * cfg.d_model
+
+
+def init_mamba(key, cfg: ModelConfig) -> dict:
+    dt = common.dtype_of(cfg)
+    d, di, N, R = cfg.d_model, d_inner(cfg), cfg.mamba_state, dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A.
+    a = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))
+    return {
+        "in_proj": common.dense_init(ks[0], d, (d, 2 * di), dt),
+        "conv_w": common.normal_init(ks[1], (cfg.mamba_conv, di), 0.1, dt),
+        "conv_b": common.zeros((di,), dt),
+        "x_proj": common.dense_init(ks[2], di, (di, R + 2 * N), dt),
+        "dt_proj": common.normal_init(ks[3], (R, di), R ** -0.5, jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 0.01, jnp.float32))),
+        "A_log": jnp.log(a),
+        "D_skip": common.ones((di,), jnp.float32),
+        "out_proj": common.dense_init(ks[4], di, (di, d), dt),
+    }
+
+
+def _causal_conv(p: dict, x: jax.Array, width: int) -> jax.Array:
+    """Depthwise causal conv over seq via stacked shifts. x: [B,S,di]."""
+    out = jnp.zeros_like(x)
+    for w in range(width):
+        shift = width - 1 - w
+        xs = x if shift == 0 else jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + xs * p["conv_w"][w]
+    return out + p["conv_b"]
+
+
+def _ssm_inputs(p: dict, cfg: ModelConfig, xc: jax.Array):
+    """xc: [B,S,di] (post conv+silu). Returns decay [B,S,di,N] (in log space)
+    and drive [B,S,di,N], plus C [B,S,N]."""
+    R, N = dt_rank(cfg), cfg.mamba_state
+    proj = jnp.einsum("bsd,dr->bsr", xc, p["x_proj"]).astype(jnp.float32)
+    dt_in, Bc, Cc = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"] + p["dt_bias"])  # [B,S,di]
+    A = -jnp.exp(p["A_log"])                                   # [di,N]
+    log_decay = dt[..., None] * A                              # [B,S,di,N] (<=0)
+    drive = (dt * xc.astype(jnp.float32))[..., None] * Bc[:, :, None, :]
+    return log_decay, drive, Cc
+
+
+def mamba_train(p: dict, cfg: ModelConfig, x: jax.Array, chunk: int = 0,
+                return_state: bool = False):
+    """x: [B,S,D] -> ([B,S,D], state|None). State returned for prefill."""
+    B, S, D = x.shape
+    chunk = chunk or cfg.ssm_chunk
+    di, N = d_inner(cfg), cfg.mamba_state
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xz = shd.hint(xz, shd.BATCH_AXES, None, "model")
+    x1, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(p, x1, cfg.mamba_conv))
+    log_decay, drive, Cc = _ssm_inputs(p, cfg, xc)
+
+    sdt = jnp.dtype(cfg.ssm_dtype)
+    nc = max(1, S // chunk)
+    Lc = S // nc
+    ld = log_decay.astype(sdt).reshape(B, nc, Lc, di, N)
+    dr = drive.astype(sdt).reshape(B, nc, Lc, di, N)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 + a2, jnp.exp(a2) * b1 + b2
+
+    def chunk_step(h, ci):
+        a, b = ld[:, ci], dr[:, ci]
+        a_cum, b_cum = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h_t = jnp.exp(a_cum) * h[:, None] + b_cum         # [B,Lc,di,N]
+        y = jnp.einsum("bldn,bln->bld", h_t,
+                       Cc.astype(sdt).reshape(B, nc, Lc, N)[:, ci])
+        return h_t[:, -1], y
+
+    h0 = jnp.zeros((B, di, N), sdt)
+    h_fin, ys = jax.lax.scan(chunk_step, h0, jnp.arange(nc),
+                             unroll=True if cfg.scan_unroll else 1)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di).astype(jnp.float32)
+    y = y + p["D_skip"] * xc.astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(z))
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"])
+    state = None
+    if return_state:
+        w = cfg.mamba_conv
+        conv_tail = x1[:, S - (w - 1):].astype(jnp.float32) if w > 1 \
+            else jnp.zeros((B, 0, di), jnp.float32)
+        state = {"h": h_fin, "conv": conv_tail}
+    return out, state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> dict:
+    di, N = d_inner(cfg), cfg.mamba_state
+    return {
+        "h": jnp.zeros((batch, di, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.mamba_conv - 1, di), jnp.float32),
+    }
+
+
+def mamba_decode(p: dict, cfg: ModelConfig, x: jax.Array,
+                 state: dict) -> Tuple[jax.Array, dict]:
+    """x: [B,1,D]; exact recurrent step."""
+    B = x.shape[0]
+    di, N, width = d_inner(cfg), cfg.mamba_state, cfg.mamba_conv
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    x1, z = jnp.split(xz[:, 0], 2, axis=-1)              # [B,di]
+    conv_buf = jnp.concatenate(
+        [state["conv"], x1[:, None].astype(jnp.float32)], axis=1)  # [B,width,di]
+    xc = jnp.einsum("bwd,wd->bd", conv_buf, p["conv_w"].astype(jnp.float32))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(jnp.float32))
+    log_decay, drive, Cc = _ssm_inputs(p, cfg, xc[:, None].astype(x.dtype))
+    h = jnp.exp(log_decay[:, 0]) * state["h"] + drive[:, 0]
+    y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0])
+    y = y + p["D_skip"] * xc
+    y = (y.astype(x.dtype) * jax.nn.silu(z))[:, None]
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"])
+    return out, {"h": h, "conv": conv_buf[:, 1:]}

@@ -1,0 +1,28 @@
+"""Gated (SwiGLU/GeGLU) feed-forward block."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as shd
+from repro.models import common
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int = 0) -> dict:
+    dt = common.dtype_of(cfg)
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "wg": common.dense_init(kg, d, (d, ff), dt),
+        "wu": common.dense_init(ku, d, (d, ff), dt),
+        "wd": common.dense_init(kd, ff, (ff, d), dt),
+    }
+
+
+def mlp(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    g = common.activation(jnp.einsum("bsd,df->bsf", x, p["wg"]), cfg.act)
+    u = jnp.einsum("bsd,df->bsf", x, p["wu"])
+    h = shd.hint(g * u, shd.BATCH_AXES, None, "model")
+    return jnp.einsum("bsf,fd->bsd", h, p["wd"])

@@ -1,0 +1,134 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-based gather
+dispatch (expert-parallel friendly).
+
+Dispatch strategy (TPU adaptation, see DESIGN.md): rather than a dense
+[tokens, experts, capacity] one-hot einsum (MaxText-classic, O(T*E*C)
+memory) we build a [E, T] gate matrix and let every expert `top_k` its C
+highest-gated tokens — deterministic shapes, no sort, and the expert
+buffers shard cleanly as [E(model), C(data), D]. Tokens over capacity are
+dropped (standard capacity-factor semantics); the router aux loss keeps
+load balanced so drops are rare.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as shd
+from repro.models import common
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    dt = common.dtype_of(cfg)
+    d, ff, E = cfg.d_model, cfg.expert_ff, cfg.num_experts
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    return {
+        "router": common.dense_init(kr, d, (d, E), jnp.float32),
+        "wg": common.dense_init(kg, d, (E, d, ff), dt),
+        "wu": common.dense_init(ku, d, (E, d, ff), dt),
+        "wd": common.dense_init(kd, ff, (E, ff, d), dt),
+    }
+
+
+def moe_capacity(cfg: ModelConfig, num_tokens: int) -> int:
+    cap = int(cfg.capacity_factor * num_tokens * cfg.experts_per_token
+              / cfg.num_experts)
+    return min(num_tokens, max(8, cap))
+
+
+def _dispatch_shards(cfg: ModelConfig, batch: int) -> int:
+    """Local-dispatch granularity: the data-parallel shard count, so every
+    expert selects its capacity *per data shard* and the token gather never
+    crosses the data axis (EXPERIMENTS.md §Perf, MoE iteration)."""
+    if not cfg.moe_local_dispatch:
+        return 1
+    mesh = shd._current_mesh()
+    if mesh is None:
+        return 1
+    n = shd._axis_size(mesh, shd.data_axes(mesh))
+    return n if n > 1 and batch % n == 0 else 1
+
+
+def moe_ffn(p: dict, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, D] -> (out [B, S, D], aux_loss scalar)."""
+    B, S, D = x.shape
+    ns = _dispatch_shards(cfg, B)
+    if ns > 1:
+        # group-local routing: shard-major groups match the batch sharding,
+        # so the token gather/scatter never crosses the data axis
+        C_total = moe_capacity(cfg, B * S)
+        out, aux = _moe_dispatch(p, cfg, x, groups=ns,
+                                 capacity=max(8, C_total // ns))
+        return out, aux
+    return _moe_dispatch(p, cfg, x, groups=1,
+                         capacity=moe_capacity(cfg, B * S))
+
+
+def _moe_dispatch(p: dict, cfg: ModelConfig, x: jax.Array, *, groups: int,
+                  capacity: int) -> Tuple[jax.Array, jax.Array]:
+    B, S, D = x.shape
+    T = B * S
+    E, K = cfg.num_experts, cfg.experts_per_token
+    C = capacity
+    xt = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    logits = shd.hint(logits, shd.BATCH_AXES, None)
+    probs = jax.nn.softmax(logits, axis=-1)  # [T, E]
+    gates, eidx = jax.lax.top_k(probs, K)    # [T, K]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # Scatter top-k gates into a dense [T, E] gate matrix.
+    gate_te = jnp.zeros((T, E), jnp.float32)
+    gate_te = gate_te.at[jnp.arange(T)[:, None], eidx].set(gates)
+
+    if groups > 1:
+        # group-local routing: experts pick C tokens within each group
+        Tl = T // groups
+        g_te = gate_te.reshape(groups, Tl, E)
+        g_te = shd.hint(g_te, shd.BATCH_AXES, None, None)
+        gval, loc_idx = jax.lax.top_k(jnp.swapaxes(g_te, 1, 2), C)  # [G,E,C]
+        tok_idx = loc_idx + (jnp.arange(groups) * Tl)[:, None, None]
+        tok_idx = tok_idx.reshape(groups, E * C)
+        gval = gval.reshape(groups, E, C)
+        keep = (gval > 0.0).astype(jnp.float32)
+        xe = jnp.take(xt.reshape(groups, Tl, D),
+                      loc_idx.reshape(groups, E * C), axis=1,
+                      batch_dims=1 if False else None) if False else             jnp.take_along_axis(
+                xt.reshape(groups, Tl, 1, D),
+                loc_idx.reshape(groups, E * C, 1, 1).clip(0, Tl - 1), axis=1
+            )[:, :, 0].reshape(groups, E, C, D)
+        xe = jnp.swapaxes(xe, 0, 1)                     # [E, G, C, D]
+        xe = shd.hint(xe, "model", shd.BATCH_AXES, None, None)
+        g = common.activation(jnp.einsum("egcd,edf->egcf", xe, p["wg"]), cfg.act)
+        u = jnp.einsum("egcd,edf->egcf", xe, p["wu"])
+        ye = jnp.einsum("egcf,efd->egcd", g * u, p["wd"])
+        ye = ye * jnp.swapaxes(gval * keep, 0, 1)[..., None].astype(ye.dtype)
+        ye = shd.hint(ye, "model", shd.BATCH_AXES, None, None)
+        out = jnp.zeros((T, D), ye.dtype).at[tok_idx.reshape(-1)].add(
+            jnp.swapaxes(ye, 0, 1).reshape(groups * E * C, D))
+    else:
+        # Every expert picks its C strongest tokens.
+        gval, tok_idx = jax.lax.top_k(gate_te.T, C)    # [E, C]
+        keep = (gval > 0.0).astype(jnp.float32)        # [E, C]
+
+        xe = jnp.take(xt, tok_idx, axis=0)             # [E, C, D]
+        xe = shd.hint(xe, "model", shd.BATCH_AXES, None)  # expert-parallel buffers
+        g = common.activation(jnp.einsum("ecd,edf->ecf", xe, p["wg"]), cfg.act)
+        u = jnp.einsum("ecd,edf->ecf", xe, p["wu"])
+        ye = jnp.einsum("ecf,efd->ecd", g * u, p["wd"])  # [E, C, D]
+        ye = ye * (gval * keep)[..., None].astype(ye.dtype)
+        ye = shd.hint(ye, "model", shd.BATCH_AXES, None)
+
+        out = jnp.zeros((T, D), ye.dtype).at[tok_idx.reshape(-1)].add(
+            ye.reshape(E * C, D))
+
+    # Load-balancing aux loss (Switch-style): E * sum(frac_tokens * frac_prob)
+    me = jnp.mean(probs, axis=0)                              # [E]
+    one_hot_top1 = jax.nn.one_hot(eidx[:, 0], E, dtype=jnp.float32)
+    ce = jnp.mean(one_hot_top1, axis=0)
+    aux = cfg.num_experts * jnp.sum(me * ce)
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,221 @@
+"""RWKV6 ("Finch") block: time-mix with data-dependent per-channel decay
+and channel-mix FFN. [arXiv:2404.05892]
+
+Training path uses a chunked closed form (GLA-style): within a chunk the
+WKV recurrence
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T ,   o_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+is evaluated as a masked matmul with relative decay products computed in
+log space (clamped for fp32 range; see tests for tolerance bounds); across
+chunks an exact recurrent state is carried. This replaces the CUDA wkv6
+kernel; the Pallas kernel in kernels/rwkv keeps the state in VMEM instead
+(DESIGN.md §2). Decode is the exact single-step recurrence — O(1) state in
+sequence length, which is why rwkv6-3b runs the long_500k cell."""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as shd
+from repro.models import common
+
+DECAY_LORA = 32
+CUM_CLAMP = 18.0  # |log-decay| clamp inside a chunk (fp32 safety)
+
+
+def num_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.rwkv_head_size
+
+
+def init_rwkv_time_mix(key, cfg: ModelConfig) -> dict:
+    dt = common.dtype_of(cfg)
+    d = cfg.d_model
+    H, n = num_heads(cfg), cfg.rwkv_head_size
+    ks = jax.random.split(key, 10)
+    lora = min(DECAY_LORA, d)
+    return {
+        # token-shift mix coefficients for r,k,v,g,w
+        "mu": common.normal_init(ks[0], (5, d), 0.02, jnp.float32) + 0.5,
+        "wr": common.dense_init(ks[1], d, (d, d), dt),
+        "wk": common.dense_init(ks[2], d, (d, d), dt),
+        "wv": common.dense_init(ks[3], d, (d, d), dt),
+        "wg": common.dense_init(ks[4], d, (d, d), dt),
+        "wo": common.dense_init(ks[5], d, (d, d), dt),
+        # data-dependent decay: w = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.full((d,), -1.0, jnp.float32),
+        "wA": common.dense_init(ks[6], d, (d, lora), jnp.float32),
+        "wB": common.normal_init(ks[7], (lora, d), 0.01, jnp.float32),
+        "u": common.normal_init(ks[8], (H, n), 0.3, jnp.float32),
+        # per-head groupnorm on wkv output
+        "ln_x_scale": common.ones((d,), jnp.float32),
+        "ln_x_bias": common.zeros((d,), jnp.float32),
+    }
+
+
+def init_rwkv_channel_mix(key, cfg: ModelConfig) -> dict:
+    dt = common.dtype_of(cfg)
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": common.normal_init(ks[0], (2, d), 0.02, jnp.float32) + 0.5,
+        "wk": common.dense_init(ks[1], d, (d, ff), dt),
+        "wv": common.dense_init(ks[2], ff, (ff, d), dt),
+        "wr": common.dense_init(ks[0], d, (d, d), dt),
+    }
+
+
+def _token_shift(x: jax.Array, x_prev: jax.Array = None) -> jax.Array:
+    """x: [B,S,D] -> previous token's features (zeros / x_prev at t=0)."""
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if x_prev is not None:
+        shifted = shifted.at[:, 0].set(x_prev)
+    return shifted
+
+
+def _lerp(x, xp, mu):
+    return x + (xp - x) * mu.astype(x.dtype)
+
+
+def _decay(p: dict, xw: jax.Array) -> jax.Array:
+    """log w (negative) per channel: [B,S,D] float32."""
+    lw = p["w0"] + jnp.tanh(xw.astype(jnp.float32) @ p["wA"]) @ p["wB"]
+    return -jnp.exp(lw)  # log-decay = -exp(.) <= 0
+
+
+def _group_norm(x: jax.Array, scale, bias, H: int, eps=1e-5) -> jax.Array:
+    """Per-head normalization of [B,S,D] with D = H*n."""
+    B, S, D = x.shape
+    xh = x.reshape(B, S, H, D // H).astype(jnp.float32)
+    mean = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mean) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(B, S, D) * scale + bias).astype(x.dtype)
+
+
+def _rkvgw(p: dict, cfg: ModelConfig, x: jax.Array, xp: jax.Array):
+    H, n = num_heads(cfg), cfg.rwkv_head_size
+    B, S, D = x.shape
+    r = _lerp(x, xp, p["mu"][0]) @ p["wr"]
+    k = _lerp(x, xp, p["mu"][1]) @ p["wk"]
+    v = _lerp(x, xp, p["mu"][2]) @ p["wv"]
+    g = jax.nn.silu(_lerp(x, xp, p["mu"][3]) @ p["wg"])
+    logw = _decay(p, _lerp(x, xp, p["mu"][4]))  # [B,S,D]
+    shape = (B, S, H, n)
+    r, k, v = (shd.hint(a.reshape(shape).astype(jnp.float32),
+                        shd.BATCH_AXES, None, "model", None) for a in (r, k, v))
+    return r, k, v, g, logw.reshape(shape)
+
+
+def wkv_chunked(r, k, v, logw, u, s0=None, chunk: int = 64,
+                unroll: bool = False):
+    """Chunked WKV6. r,k,v,logw: [B,S,H,n] float32; u: [H,n].
+    Returns (o [B,S,H,n], s_final [B,H,n,n])."""
+    B, S, H, n = r.shape
+    nc = max(1, S // chunk)
+    Lc = S // nc
+    rs, ks_, vs, lws = (a.reshape(B, nc, Lc, H, n) for a in (r, k, v, logw))
+    if s0 is None:
+        s0 = jnp.zeros((B, H, n, n), jnp.float32)
+
+    causal = jnp.tril(jnp.ones((Lc, Lc), jnp.float32), k=-1)  # strict lower
+
+    def chunk_step(S_prev, ci):
+        rc, kc, vc, lwc = rs[:, ci], ks_[:, ci], vs[:, ci], lws[:, ci]
+        cum = jnp.cumsum(lwc, axis=1)                      # inclusive [B,Lc,H,n]
+        cum_ex = cum - lwc                                 # exclusive
+        cl = jnp.clip(cum_ex, -CUM_CLAMP, 0.0)
+        r_hat = rc * jnp.exp(cl)                           # decayed queries
+        k_hat = kc * jnp.exp(jnp.clip(-cum, 0.0, CUM_CLAMP))
+        scores = jnp.einsum("blhn,bmhn->bhlm", r_hat, k_hat) * causal
+        diag = jnp.einsum("blhn,blhn->bhl", rc * u, kc)
+        o = jnp.einsum("bhlm,bmhn->blhn", scores, vc)
+        o = o + diag[..., None].transpose(0, 2, 1, 3) * vc
+        # inter-chunk contribution from carried state
+        o = o + jnp.einsum("blhn,bhnm->blhm", r_hat, S_prev)
+        # state update to end of chunk
+        total = cum[:, -1]                                 # [B,H,n]
+        k_dec = kc * jnp.exp(jnp.clip(total[:, None] - cum, -CUM_CLAMP, 0.0))
+        S_new = jnp.exp(jnp.clip(total, -CUM_CLAMP, 0.0))[..., None] * S_prev \
+            + jnp.einsum("blhn,blhm->bhnm", k_dec, vc)
+        return S_new, o
+
+    s_fin, os_ = jax.lax.scan(chunk_step, s0, jnp.arange(nc),
+                              unroll=True if unroll else 1)
+    o = jnp.moveaxis(os_, 0, 1).reshape(B, S, H, n)
+    return o, s_fin
+
+
+def time_mix_train(p: dict, cfg: ModelConfig, x: jax.Array, chunk: int = 0,
+                   return_state: bool = False):
+    B, S, D = x.shape
+    chunk = chunk or min(cfg.ssm_chunk, max(S, 1))
+    H = num_heads(cfg)
+    xp = _token_shift(x)
+    r, k, v, g, logw = _rkvgw(p, cfg, x, xp)
+    o, s_fin = wkv_chunked(r, k, v, logw, p["u"], chunk=chunk,
+                           unroll=cfg.scan_unroll)
+    o = _group_norm(o.reshape(B, S, D).astype(x.dtype),
+                    p["ln_x_scale"], p["ln_x_bias"], H)
+    out = (o * g) @ p["wo"]
+    state = None
+    if return_state:
+        state = {"s": s_fin, "x_tm": x[:, -1].astype(jnp.float32)}
+    return out, state
+
+
+def channel_mix_train(p: dict, cfg: ModelConfig, x: jax.Array,
+                      state: dict = None, return_state: bool = False):
+    xp = _token_shift(x)
+    kx = _lerp(x, xp, p["mu"][0])
+    rx = _lerp(x, xp, p["mu"][1])
+    k = jnp.square(jax.nn.relu(kx @ p["wk"]))
+    out = jax.nn.sigmoid(rx @ p["wr"]) * (k @ p["wv"])
+    new_state = None
+    if return_state:
+        new_state = dict(state or {})
+        new_state["x_cm"] = x[:, -1].astype(jnp.float32)
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# decode (exact recurrence)
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int) -> dict:
+    H, n = num_heads(cfg), cfg.rwkv_head_size
+    return {
+        "s": jnp.zeros((batch, H, n, n), jnp.float32),
+        "x_tm": jnp.zeros((batch, cfg.d_model), jnp.float32),
+        "x_cm": jnp.zeros((batch, cfg.d_model), jnp.float32),
+    }
+
+
+def time_mix_decode(p: dict, cfg: ModelConfig, x: jax.Array,
+                    state: dict) -> Tuple[jax.Array, dict]:
+    """x: [B,1,D]."""
+    B, _, D = x.shape
+    H, n = num_heads(cfg), cfg.rwkv_head_size
+    xp = state["x_tm"].astype(x.dtype)[:, None]
+    r, k, v, g, logw = _rkvgw(p, cfg, x, xp)
+    r1, k1, v1, lw1 = r[:, 0], k[:, 0], v[:, 0], logw[:, 0]   # [B,H,n]
+    S_prev = state["s"]
+    o = jnp.einsum("bhn,bhnm->bhm", r1, S_prev) \
+        + jnp.einsum("bhn,bhn,bhm->bhm", r1 * p["u"], k1, v1)
+    S_new = jnp.exp(lw1)[..., None] * S_prev + jnp.einsum("bhn,bhm->bhnm", k1, v1)
+    o = _group_norm(o.reshape(B, 1, D).astype(x.dtype),
+                    p["ln_x_scale"], p["ln_x_bias"], H)
+    out = (o * g) @ p["wo"]
+    return out, {**state, "s": S_new, "x_tm": x[:, 0].astype(jnp.float32)}
+
+
+def channel_mix_decode(p: dict, cfg: ModelConfig, x: jax.Array,
+                       state: dict) -> Tuple[jax.Array, dict]:
+    xp = state["x_cm"].astype(x.dtype)[:, None]
+    kx = _lerp(x, xp, p["mu"][0])
+    rx = _lerp(x, xp, p["mu"][1])
+    k = jnp.square(jax.nn.relu(kx @ p["wk"]))
+    out = jax.nn.sigmoid(rx @ p["wr"]) * (k @ p["wv"])
+    return out, {**state, "x_cm": x[:, 0].astype(jnp.float32)}

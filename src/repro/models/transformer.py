@@ -1,0 +1,356 @@
+"""Decoder-LM assembler for all 10 assigned architectures.
+
+Layers are organized into *groups* of size g = the architecture's block
+period (1 for uniform stacks, 2 for gemma2 local/global, 8 for jamba's
+mamba:attn 7:1 interleave). Group parameters are stacked `[G, ...]` and
+executed with `lax.scan` (HLO size independent of depth — required to
+compile 80-layer × 512-device dry-runs), or unrolled for reduced/test
+configs (`cfg.scan_layers=False`).
+
+SimFreeze integration (DESIGN.md §2): a `FreezePlan` partitions the groups
+into contiguous *segments*; each frozen segment's stacked params enter the
+graph behind `lax.stop_gradient`, so XLA never emits their weight-gradient
+einsums — the scan-mode equivalent of the paper's Fig. 2 case 2. If the
+embedding and the leading segments are all frozen, the activation gradient
+is stopped as well (case 3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.freeze_plan import FreezePlan, lm_segments
+from repro.distributed import sharding as shd
+from repro.models import attention, common, mamba, mlp, moe, rwkv6
+
+Params = Any
+
+
+def group_size(cfg: ModelConfig) -> int:
+    g = 1
+    if cfg.attn_period:
+        g = cfg.attn_period
+    if cfg.local_global_period:
+        g = max(g, cfg.local_global_period)
+    if cfg.num_experts and cfg.moe_period > 1:
+        import math
+        g = math.lcm(g, cfg.moe_period)
+    assert cfg.num_layers % g == 0, (cfg.name, cfg.num_layers, g)
+    return g
+
+
+def num_groups(cfg: ModelConfig) -> int:
+    return cfg.num_layers // group_size(cfg)
+
+
+# ---------------------------------------------------------------------------
+# per-layer (offset-within-group) blocks
+
+
+def _init_block(key, cfg: ModelConfig, offset: int) -> dict:
+    dt = common.dtype_of(cfg)
+    kind = cfg.layer_kind(offset)
+    is_moe = cfg.layer_is_moe(offset)
+    k1, k2 = jax.random.split(key)
+    p: dict = {"ln1": common.zeros((cfg.d_model,), jnp.float32),
+               "ln2": common.zeros((cfg.d_model,), jnp.float32)}
+    if cfg.post_norms:
+        p["ln1_post"] = common.zeros((cfg.d_model,), jnp.float32)
+        p["ln2_post"] = common.zeros((cfg.d_model,), jnp.float32)
+    if kind == "attn":
+        p["mix"] = attention.init_attention(k1, cfg)
+    elif kind == "mamba":
+        p["mix"] = mamba.init_mamba(k1, cfg)
+    elif kind == "rwkv":
+        p["mix"] = rwkv6.init_rwkv_time_mix(k1, cfg)
+    if kind == "rwkv":
+        p["ffn"] = rwkv6.init_rwkv_channel_mix(k2, cfg)
+    elif is_moe:
+        p["ffn"] = moe.init_moe(k2, cfg)
+    else:
+        p["ffn"] = mlp.init_mlp(k2, cfg)
+    return p
+
+
+def _apply_block(p: dict, cfg: ModelConfig, x: jax.Array, offset: int,
+                 positions, mode: str, cache: Optional[dict],
+                 pos) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    """Returns (x, cache_out, moe_aux)."""
+    kind = cfg.layer_kind(offset)
+    window = cfg.layer_window(offset)
+    aux = jnp.zeros((), jnp.float32)
+    x = shd.hint(x, shd.BATCH_AXES, None, None)
+    h = common.rms_norm(x, p["ln1"], cfg.norm_eps)
+    cache_out = {}
+    if kind == "attn":
+        if mode == "train":
+            a = attention.attention_train(p["mix"], cfg, h, positions, window)
+            c = None
+        elif mode == "prefill":
+            a, c = attention.attention_prefill(p["mix"], cfg, h, positions, window)
+        else:
+            a, c = attention.attention_decode(p["mix"], cfg, h, cache["attn"], pos, window)
+        if c is not None:
+            cache_out["attn"] = c
+    elif kind == "mamba":
+        if mode == "decode":
+            a, c = mamba.mamba_decode(p["mix"], cfg, h, cache["mamba"])
+        else:
+            a, c = mamba.mamba_train(p["mix"], cfg, h,
+                                     return_state=(mode == "prefill"))
+        if c is not None:
+            cache_out["mamba"] = c
+    else:  # rwkv
+        if mode == "decode":
+            a, c = rwkv6.time_mix_decode(p["mix"], cfg, h, cache["rwkv"])
+        else:
+            a, c = rwkv6.time_mix_train(p["mix"], cfg, h,
+                                        return_state=(mode == "prefill"))
+        if c is not None:
+            cache_out["rwkv"] = c
+    if cfg.post_norms:
+        a = common.rms_norm(a, p["ln1_post"], cfg.norm_eps)
+    x = x + a
+
+    h = common.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if kind == "rwkv":
+        if mode == "decode":
+            f, c = rwkv6.channel_mix_decode(p["ffn"], cfg, h, cache_out.get(
+                "rwkv", cache["rwkv"] if cache else None))
+            cache_out["rwkv"] = c
+        else:
+            f, c = rwkv6.channel_mix_train(p["ffn"], cfg, h,
+                                           state=cache_out.get("rwkv"),
+                                           return_state=(mode == "prefill"))
+            if c is not None:
+                cache_out["rwkv"] = c
+    elif cfg.layer_is_moe(offset):
+        f, aux = moe.moe_ffn(p["ffn"], cfg, h)
+    else:
+        f = mlp.mlp(p["ffn"], cfg, h)
+    if cfg.post_norms:
+        f = common.rms_norm(f, p["ln2_post"], cfg.norm_eps)
+    x = x + f
+    return x, (cache_out or None), aux
+
+
+# ---------------------------------------------------------------------------
+# init
+
+
+def init_lm(rng, cfg: ModelConfig) -> Params:
+    g, G = group_size(cfg), num_groups(cfg)
+    k_emb, k_blocks = jax.random.split(rng)
+    params: Dict[str, Any] = {"embed": common.init_embedding(k_emb, cfg),
+                              "final_norm": common.zeros((cfg.d_model,), jnp.float32)}
+    blocks = []
+    for o in range(g):
+        ko = jax.random.fold_in(k_blocks, o)
+        if cfg.scan_layers:
+            keys = jax.random.split(ko, G)
+            blocks.append(jax.vmap(lambda k, o=o: _init_block(k, cfg, o))(keys))
+        else:
+            blocks.append([_init_block(jax.random.fold_in(ko, gi), cfg, o)
+                           for gi in range(G)])
+    params["blocks"] = tuple(blocks)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _slice_groups(blocks, lo: int, hi: int, scan: bool):
+    if scan:
+        return jax.tree.map(lambda a: a[lo:hi], blocks)
+    return tuple(b[lo:hi] for b in blocks)
+
+
+def _run_groups(blocks, cfg: ModelConfig, x, positions, mode, caches, pos,
+                collect_feats: bool = False):
+    """Run all groups (no freezing). Returns (x, caches_out, aux, feats)."""
+    g = group_size(cfg)
+
+    def group_body(x, block_slice, cache_slice):
+        aux = jnp.zeros((), jnp.float32)
+        cache_out = []
+        for o in range(g):
+            c = cache_slice[o] if cache_slice is not None else None
+            x, co, a = _apply_block(block_slice[o], cfg, x, o, positions,
+                                    mode, c, pos)
+            aux = aux + a
+            cache_out.append(co)
+        return x, tuple(cache_out), aux
+
+    if cfg.scan_layers:
+        body = _remat(lambda x, bs_cs: group_body(x, bs_cs[0], bs_cs[1]), cfg)
+
+        def scan_body(carry, xs):
+            x, aux = carry
+            xn, cache_out, a = body(x, xs)
+            ys = (cache_out, xn if collect_feats else jnp.zeros((), jnp.float32))
+            return (xn, aux + a), ys
+
+        if caches is None:
+            G = jax.tree.leaves(blocks)[0].shape[0]
+            caches = _none_caches(G, g)
+        (x, aux), (cache_ys, feat_ys) = jax.lax.scan(
+            scan_body, (x, jnp.zeros((), jnp.float32)), (blocks, caches),
+            unroll=True if cfg.scan_unroll else 1)
+        feats = feat_ys if collect_feats else None
+        return x, cache_ys, aux, feats
+    else:
+        G = len(blocks[0])
+        aux = jnp.zeros((), jnp.float32)
+        cache_out: List = []
+        feats = []
+        for gi in range(G):
+            bs = tuple(blocks[o][gi] for o in range(g))
+            cs = caches[gi] if caches is not None else None
+            x, co, a = group_body(x, bs, cs)
+            aux = aux + a
+            cache_out.append(co)
+            if collect_feats:
+                feats.append(x)
+        return x, cache_out, aux, feats
+
+
+def _none_caches(G: int, g: int):
+    # scan requires xs with a leading G axis; use empty placeholder.
+    return tuple(jnp.zeros((G, 0)) for _ in range(g))
+
+
+def _run_with_plan(params, cfg: ModelConfig, x, positions,
+                   plan: Optional[FreezePlan]):
+    """Training-mode execution honoring FreezePlan segments."""
+    blocks = params["blocks"]
+    aux_total = jnp.zeros((), jnp.float32)
+    if plan is None or not plan.groups or not any(plan.groups):
+        x, _, aux_total, _ = _run_groups(blocks, cfg, x, positions, "train",
+                                         None, None)
+        return x, aux_total
+    prefix_stops_grad = plan.embed
+    for lo, hi, frozen in lm_segments(plan):
+        seg = _slice_groups(blocks, lo, hi, cfg.scan_layers)
+        if frozen:
+            seg = jax.lax.stop_gradient(seg)
+        x, _, aux, _ = _run_groups(seg, cfg, x, positions, "train", None, None)
+        aux_total = aux_total + aux
+        if frozen and prefix_stops_grad:
+            # paper Fig.2 case 3: no trainable layer below -> stop activation grads
+            x = jax.lax.stop_gradient(x)
+        else:
+            prefix_stops_grad = False
+    return x, aux_total
+
+
+def _embed(params, cfg: ModelConfig, batch: dict, frozen_embed: bool):
+    emb = params["embed"]
+    if frozen_embed:
+        emb = jax.lax.stop_gradient(emb)
+    x = common.embed_tokens(emb, cfg, batch["tokens"],
+                            batch.get("frontend_embeds"))
+    x = shd.hint(x, shd.BATCH_AXES, None, None)
+    return x, emb
+
+
+def lm_loss(params, cfg: ModelConfig, batch: dict,
+            plan: Optional[FreezePlan] = None) -> Tuple[jax.Array, dict]:
+    """batch: tokens [B,S], targets [B,S], optional frontend_embeds
+    [B,F,frontend_dim], optional mask [B,S]."""
+    x, emb = _embed(params, cfg, batch, plan.embed if plan else False)
+    B, St = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(St), (B, St))
+    x, aux = _run_with_plan(params, cfg, x, positions, plan)
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    F = St - batch["tokens"].shape[1]
+    if F > 0:
+        x = x[:, F:]
+    head = emb if cfg.tie_embeddings else params["embed"]
+    if plan is not None and plan.head:
+        head = jax.lax.stop_gradient(head)
+    logits = common.lm_logits(head, cfg, x)
+    logits = shd.hint(logits, shd.BATCH_AXES, None, "model")
+    loss = common.cross_entropy(logits, batch["targets"], batch.get("mask"))
+    total = loss + cfg.router_aux_coef * aux
+    return total, {"loss": loss, "aux_loss": aux, "logits_mean": logits.mean()}
+
+
+def lm_features(params, cfg: ModelConfig, batch: dict) -> List[jax.Array]:
+    """Per-group hidden states for CKA probes. Returns list of [B,S,D]."""
+    x, _ = _embed(params, cfg, batch, False)
+    B, St = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(St), (B, St))
+    _, _, _, feats = _run_groups(params["blocks"], cfg, x, positions, "train",
+                                 None, None, collect_feats=True)
+    if cfg.scan_layers:
+        G = feats.shape[0]
+        return [feats[i] for i in range(G)]
+    return feats
+
+
+# ---------------------------------------------------------------------------
+# serving
+
+
+def init_lm_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Tuple:
+    g, G = group_size(cfg), num_groups(cfg)
+    caches = []
+    for o in range(g):
+        kind = cfg.layer_kind(o)
+        if kind == "attn":
+            c = {"attn": attention.init_cache(cfg, batch, max_len, dtype)}
+        elif kind == "mamba":
+            c = {"mamba": mamba.init_mamba_state(cfg, batch)}
+        else:
+            c = {"rwkv": rwkv6.init_rwkv_state(cfg, batch)}
+        if cfg.scan_layers:
+            c = jax.tree.map(lambda a: jnp.broadcast_to(a, (G,) + a.shape), c)
+        else:
+            c = [c for _ in range(G)]
+        caches.append(c)
+    if cfg.scan_layers:
+        return tuple(caches)
+    # unrolled: reorganize to per-group list of per-offset tuples
+    G_list = []
+    for gi in range(G):
+        G_list.append(tuple(caches[o][gi] for o in range(g)))
+    return G_list
+
+
+def lm_prefill(params, cfg: ModelConfig, batch: dict) -> Tuple[jax.Array, Any]:
+    """Returns (last-position logits [B,V], cache)."""
+    x, emb = _embed(params, cfg, batch, False)
+    B, St = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(St), (B, St))
+    x, caches, _, _ = _run_groups(params["blocks"], cfg, x, positions,
+                                  "prefill", None, None)
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = emb if cfg.tie_embeddings else params["embed"]
+    logits = common.lm_logits(head, cfg, x[:, -1:])
+    return logits[:, 0], caches
+
+
+def lm_decode(params, cfg: ModelConfig, tokens: jax.Array, caches,
+              pos) -> Tuple[jax.Array, Any]:
+    """tokens: [B,1]; pos: scalar int32. Returns (logits [B,V], caches)."""
+    x = common.embed_tokens(params["embed"], cfg, tokens)
+    x, caches_out, _, _ = _run_groups(params["blocks"], cfg, x, None,
+                                      "decode", caches, pos)
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"]
+    logits = common.lm_logits(head, cfg, x)
+    return logits[:, 0], caches_out

@@ -1,0 +1,138 @@
+"""DeiT-tiny — the paper's vision-transformer evaluation model (§V-A).
+Unrolled pre-LN ViT; freeze units = patch-embed, each encoder block, head."""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.freeze_plan import LayerFreezePlan, maybe_stop
+from repro.models import common
+
+
+def simple_mha(p, x, num_heads, causal=False):
+    """Bidirectional MHA used by ViT/BERT. x: [B,S,D]."""
+    B, S, D = x.shape
+    hd = D // num_heads
+    q = (x @ p["wq"] + p["bq"]).reshape(B, S, num_heads, hd)
+    k = (x @ p["wk"] + p["bk"]).reshape(B, S, num_heads, hd)
+    v = (x @ p["wv"] + p["bv"]).reshape(B, S, num_heads, hd)
+    s = jnp.einsum("bqhk,bshk->bhqs", q, k) / jnp.sqrt(jnp.float32(hd))
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask, s, -1e30)
+    a = jax.nn.softmax(s.astype(jnp.float32), -1).astype(x.dtype)
+    o = jnp.einsum("bhqs,bshk->bqhk", a, v).reshape(B, S, D)
+    return o @ p["wo"] + p["bo"]
+
+
+def init_mha(key, d):
+    ks = jax.random.split(key, 4)
+    z = jnp.zeros((d,), jnp.float32)
+    return {"wq": common.dense_init(ks[0], d, (d, d), jnp.float32), "bq": z,
+            "wk": common.dense_init(ks[1], d, (d, d), jnp.float32), "bk": z,
+            "wv": common.dense_init(ks[2], d, (d, d), jnp.float32), "bv": z,
+            "wo": common.dense_init(ks[3], d, (d, d), jnp.float32), "bo": z}
+
+
+def init_ffn(key, d, ff):
+    k1, k2 = jax.random.split(key)
+    return {"w1": common.dense_init(k1, d, (d, ff), jnp.float32),
+            "b1": jnp.zeros((ff,), jnp.float32),
+            "w2": common.dense_init(k2, ff, (ff, d), jnp.float32),
+            "b2": jnp.zeros((d,), jnp.float32)}
+
+
+def _ln_p(d):
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def _ln(x, p, eps=1e-6):
+    return common.layer_norm(x, p["scale"], p["bias"], eps)
+
+
+def patch_size(cfg: ModelConfig) -> int:
+    return 4 if "reduced" in cfg.name else 16
+
+
+def init_vit(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    patch = patch_size(cfg)
+    n_patch = (cfg.image_size // patch) ** 2
+    keys = iter(jax.random.split(rng, 8 + 2 * cfg.num_layers))
+    params = {
+        "patch": {"w": common.dense_init(next(keys), patch * patch * 3,
+                                         (patch, patch, 3, d), jnp.float32),
+                  "b": jnp.zeros((d,), jnp.float32)},
+        "cls": common.normal_init(next(keys), (1, 1, d), 0.02, jnp.float32),
+        "pos": common.normal_init(next(keys), (1, n_patch + 1, d), 0.02, jnp.float32),
+        "blocks": [],
+        "final_ln": _ln_p(d),
+        "head": {"w": common.dense_init(next(keys), d, (d, cfg.num_classes), jnp.float32),
+                 "b": jnp.zeros((cfg.num_classes,), jnp.float32)},
+    }
+    for _ in range(cfg.num_layers):
+        params["blocks"].append({
+            "ln1": _ln_p(d), "attn": init_mha(next(keys), d),
+            "ln2": _ln_p(d), "ffn": init_ffn(next(keys), d, cfg.d_ff)})
+    return params
+
+
+def _forward(params, cfg: ModelConfig, images, plan, collect=False):
+    patch = patch_size(cfg)
+    x = jax.lax.conv_general_dilated(
+        images, params["patch"]["w"], (patch, patch), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + params["patch"]["b"]
+    B = x.shape[0]
+    x = x.reshape(B, -1, cfg.d_model)
+    x = jnp.concatenate([jnp.broadcast_to(params["cls"], (B, 1, cfg.d_model)), x], 1)
+    x = x + params["pos"]
+    flags = plan.layers if plan is not None else (False,) * (len(params["blocks"]) + 2)
+    # unit 0 = patch embed (+cls/pos); units 1..L = blocks; unit L+1 = head
+    feats = []
+    prefix_frozen = True
+    if flags[0]:
+        x = jax.lax.stop_gradient(x)
+    else:
+        prefix_frozen = False
+    if collect:
+        feats.append(x)
+    for bi, blk in enumerate(params["blocks"]):
+        frozen = flags[1 + bi]
+        blk = maybe_stop(blk, frozen)
+        x = x + simple_mha(blk["attn"], _ln(x, blk["ln1"]), cfg.num_heads)
+        h = _ln(x, blk["ln2"])
+        h = jax.nn.gelu(h @ blk["ffn"]["w1"] + blk["ffn"]["b1"])
+        x = x + (h @ blk["ffn"]["w2"] + blk["ffn"]["b2"])
+        if frozen and prefix_frozen:
+            x = jax.lax.stop_gradient(x)
+        else:
+            prefix_frozen = False
+        if collect:
+            feats.append(x)
+    x = _ln(x, params["final_ln"])
+    head = maybe_stop(params["head"], flags[-1])
+    logits = x[:, 0] @ head["w"] + head["b"]
+    return logits, feats
+
+
+def build(cfg: ModelConfig):
+    from repro.models import Model
+
+    def loss(params, batch, plan=None):
+        logits, _ = _forward(params, cfg, batch["images"], plan)
+        l = common.cross_entropy(logits, batch["labels"])
+        acc = jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))
+        return l, {"loss": l, "acc": acc, "logits": logits}
+
+    def predict(params, batch):
+        return _forward(params, cfg, batch["images"], None)[0]
+
+    def features(params, batch):
+        return _forward(params, cfg, batch["images"], None, collect=True)[1]
+
+    return Model(cfg=cfg, init=lambda rng: init_vit(rng, cfg), loss=loss,
+                 features=features, num_freeze_units=cfg.num_layers + 2,
+                 predict=predict)

@@ -1,0 +1,11 @@
+from repro.optim.optimizer import (AdamWConfig, AdamWState, SGDMConfig,
+                                   SGDMState, adamw_init, adamw_update,
+                                   clip_by_global_norm, cosine_schedule,
+                                   global_norm, sgdm_init, sgdm_update)
+from repro.optim import compression
+
+__all__ = [
+    "AdamWConfig", "AdamWState", "SGDMConfig", "SGDMState", "adamw_init",
+    "adamw_update", "clip_by_global_norm", "cosine_schedule", "global_norm",
+    "sgdm_init", "sgdm_update", "compression",
+]

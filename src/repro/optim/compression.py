@@ -1,0 +1,95 @@
+"""Error-feedback gradient compression for data-parallel sync
+(distributed-optimization trick for 1000+-node scale; DESIGN.md §2).
+
+Two codecs:
+- int8 per-tensor-scale quantization (8x less all-reduce traffic in the
+  `pod` axis where ICI/DCN bandwidth dominates),
+- top-k magnitude sparsification (sends k values + indices).
+
+Both keep a local error-feedback residual so compression error accumulates
+into later steps instead of being lost (Karimireddy et al., 2019); the
+residual pytree lives next to the optimizer state and is checkpointed.
+
+These run *around* the cross-pod collective: compress -> all-reduce (or
+psum inside shard_map) -> decompress. Semantics are validated in
+tests/test_compression.py including the convergence-preserving property of
+error feedback."""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# int8 with per-tensor scale
+
+
+def int8_encode(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decode(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def int8_compress_tree(grads, residual):
+    """Returns (quantized tree, scales tree, new residual)."""
+    def enc(g, r):
+        gf = g.astype(jnp.float32) + r
+        q, s = int8_encode(gf)
+        err = gf - int8_decode(q, s)
+        return (q, s), err
+
+    flat, treedef = jax.tree.flatten(grads)
+    rflat = jax.tree.leaves(residual)
+    qs, errs = zip(*[enc(g, r) for g, r in zip(flat, rflat)])
+    q_tree = jax.tree.unflatten(treedef, [q for q, _ in qs])
+    s_tree = jax.tree.unflatten(treedef, [s for _, s in qs])
+    r_tree = jax.tree.unflatten(treedef, list(errs))
+    return q_tree, s_tree, r_tree
+
+
+def int8_decompress_tree(q_tree, s_tree):
+    return jax.tree.map(int8_decode, q_tree, s_tree)
+
+
+def init_residual(grads_like):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+# ---------------------------------------------------------------------------
+# top-k sparsification
+
+
+def topk_encode(x: jax.Array, frac: float = 0.01):
+    xf = x.astype(jnp.float32).reshape(-1)
+    k = max(1, int(xf.size * frac))
+    vals, idx = jax.lax.top_k(jnp.abs(xf), k)
+    sel = xf[idx]
+    return sel, idx, x.shape
+
+
+def topk_decode(vals, idx, shape):
+    out = jnp.zeros((int(jnp.prod(jnp.asarray(shape))),), jnp.float32)
+    return out.at[idx].set(vals).reshape(shape)
+
+
+def topk_compress_tree(grads, residual, frac: float = 0.01):
+    def enc(g, r):
+        gf = g.astype(jnp.float32) + r
+        vals, idx, shape = topk_encode(gf, frac)
+        err = gf - topk_decode(vals, idx, shape)
+        return (vals, idx), err
+
+    flat, treedef = jax.tree.flatten(grads)
+    rflat = jax.tree.leaves(residual)
+    enc_out, errs = zip(*[enc(g, r) for g, r in zip(flat, rflat)])
+    v_tree = jax.tree.unflatten(treedef, [v for v, _ in enc_out])
+    i_tree = jax.tree.unflatten(treedef, [i for _, i in enc_out])
+    r_tree = jax.tree.unflatten(treedef, list(errs))
+    return v_tree, i_tree, r_tree

@@ -1,0 +1,174 @@
+"""Freeze-aware optimizers (AdamW, SGD-momentum) on raw pytrees.
+
+Design points for the continual-learning setting:
+- `masks`: a 0/1 multiplier pytree (from core.freeze_plan.grad_multiplier_tree
+  or a custom mask). Frozen leaves keep params, m and v bit-identical —
+  weight decay and momentum must not move a frozen layer (paper §II) — and
+  their optimizer-state update math is skipped by XLA where the mask is a
+  traced constant 0.
+- `state_dtype`: bf16 moment storage for trillion-parameter configs
+  (kimi-k2) where fp32 m/v alone would exceed pod HBM (DESIGN.md §4).
+- global-norm clipping and a cosine-with-warmup schedule included.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    state_dtype: Optional[str] = None  # None = same as param
+
+
+class _Out(tuple):
+    """Sentinel so per-leaf result tuples are distinguishable from tuples
+    that are part of the params pytree structure (e.g. params['blocks'])."""
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves) + 1e-30)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / norm)
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+def adamw_init(params, config: AdamWConfig) -> AdamWState:
+    def zeros_like(p):
+        dt = jnp.dtype(config.state_dtype) if config.state_dtype else p.dtype
+        return jnp.zeros(p.shape, dt)
+
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros_like, params),
+                      v=jax.tree.map(zeros_like, params))
+
+
+def adamw_update(grads, state: AdamWState, params, config: AdamWConfig,
+                 lr_scale: jax.Array = 1.0, masks=None):
+    """Returns (new_params, new_state). `masks` leaves broadcast against the
+    param leaf (scalars or [G]-shaped per-group masks)."""
+    if config.clip_norm:
+        grads, gnorm = clip_by_global_norm(grads, config.clip_norm)
+    step = state.step + 1
+    b1, b2 = config.b1, config.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    lr = config.lr * lr_scale
+
+    def leaf_update(p, g, m, v, mask):
+        gf = g.astype(jnp.float32)
+        mf = m.astype(jnp.float32)
+        vf = v.astype(jnp.float32)
+        m_new = b1 * mf + (1 - b1) * gf
+        v_new = b2 * vf + (1 - b2) * gf * gf
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        upd = mhat / (jnp.sqrt(vhat) + config.eps)
+        upd = upd + config.weight_decay * p.astype(jnp.float32)
+        if mask is not None:
+            mk = mask.astype(jnp.float32)
+            if mk.ndim > 0 and mk.ndim < upd.ndim:
+                mk = mk.reshape(mk.shape + (1,) * (upd.ndim - mk.ndim))
+            upd = upd * mk
+            m_new = jnp.where(mk > 0, m_new, mf)
+            v_new = jnp.where(mk > 0, v_new, vf)
+        p_new = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        return _Out((p_new, m_new.astype(m.dtype), v_new.astype(v.dtype)))
+
+    if masks is None:
+        out = jax.tree.map(lambda p, g, m, v: leaf_update(p, g, m, v, None),
+                           params, grads, state.m, state.v)
+    else:
+        out = jax.tree.map(leaf_update, params, grads, state.m, state.v, masks)
+    is_out = lambda x: isinstance(x, _Out)
+    p_new = jax.tree.map(lambda o: o[0], out, is_leaf=is_out)
+    m_new = jax.tree.map(lambda o: o[1], out, is_leaf=is_out)
+    v_new = jax.tree.map(lambda o: o[2], out, is_leaf=is_out)
+    return p_new, AdamWState(step=step, m=m_new, v=v_new)
+
+
+# ---------------------------------------------------------------------------
+# SGD momentum (lighter state; used for some edge experiments)
+
+
+class SGDMState(NamedTuple):
+    step: jax.Array
+    mom: Any
+
+
+@dataclass(frozen=True)
+class SGDMConfig:
+    lr: float = 0.05
+    momentum: float = 0.9
+    weight_decay: float = 1e-4
+    clip_norm: float = 0.0
+
+
+def sgdm_init(params, config: SGDMConfig) -> SGDMState:
+    return SGDMState(step=jnp.zeros((), jnp.int32),
+                     mom=jax.tree.map(jnp.zeros_like, params))
+
+
+def sgdm_update(grads, state: SGDMState, params, config: SGDMConfig,
+                lr_scale: jax.Array = 1.0, masks=None):
+    if config.clip_norm:
+        grads, _ = clip_by_global_norm(grads, config.clip_norm)
+    lr = config.lr * lr_scale
+
+    def leaf(p, g, m, mask):
+        gf = g.astype(jnp.float32) + config.weight_decay * p.astype(jnp.float32)
+        m_new = config.momentum * m.astype(jnp.float32) + gf
+        upd = m_new
+        if mask is not None:
+            mk = mask.astype(jnp.float32)
+            if mk.ndim > 0 and mk.ndim < upd.ndim:
+                mk = mk.reshape(mk.shape + (1,) * (upd.ndim - mk.ndim))
+            upd = upd * mk
+            m_new = jnp.where(mk > 0, m_new, m.astype(jnp.float32))
+        return _Out(((p.astype(jnp.float32) - lr * upd).astype(p.dtype),
+                      m_new.astype(m.dtype)))
+
+    if masks is None:
+        out = jax.tree.map(lambda p, g, m: leaf(p, g, m, None),
+                           params, grads, state.mom)
+    else:
+        out = jax.tree.map(leaf, params, grads, state.mom, masks)
+    is_out = lambda x: isinstance(x, _Out)
+    p_new = jax.tree.map(lambda o: o[0], out, is_leaf=is_out)
+    m_new = jax.tree.map(lambda o: o[1], out, is_leaf=is_out)
+    return p_new, SGDMState(step=state.step + 1, mom=m_new)
+
+
+# ---------------------------------------------------------------------------
+# schedule
+
+
+def cosine_schedule(step, *, base_lr=1.0, warmup: int = 100,
+                    total: int = 10_000, min_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * warm * cos

@@ -1,0 +1,6 @@
+from repro.runtime.costmodel import EdgeCostModel, PodCostModel
+from repro.runtime.continual import ContinualRuntime, RunResult
+from repro.runtime.train_loop import TrainStepCache, evaluate
+
+__all__ = ["EdgeCostModel", "PodCostModel", "ContinualRuntime", "RunResult",
+           "TrainStepCache", "evaluate"]

@@ -1,0 +1,75 @@
+"""Batched serving engine: continuous-batching-style loop over a prefill
+step and a decode step with a shared KV cache, for the LM examples and the
+decode-shape dry-runs."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class ServeStats:
+    prefill_tokens: int = 0
+    decode_steps: int = 0
+
+
+class ServeEngine:
+    def __init__(self, model, max_len: int = 256, cache_dtype=jnp.bfloat16):
+        self.model = model
+        self.max_len = max_len
+        self.cache_dtype = cache_dtype
+        self.stats = ServeStats()
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode)
+
+    def generate(self, params, tokens: np.ndarray, steps: int = 16,
+                 greedy: bool = True, rng=None) -> np.ndarray:
+        """tokens: [B, S] prompt. Returns [B, steps] generated ids."""
+        B, S = tokens.shape
+        batch = {"tokens": jnp.asarray(tokens)}
+        cfg = self.model.cfg
+        if cfg.frontend != "none":
+            batch["frontend_embeds"] = jnp.zeros(
+                (B, cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
+        logits, cache = self._prefill(params, batch)
+        self.stats.prefill_tokens += B * S
+        out = []
+        pos = S + (cfg.frontend_tokens if cfg.frontend != "none" else 0)
+        # decode caches sized by prefill; attention caches grow via concat-free
+        # dynamic updates, so pre-extend them to max_len once.
+        cache = self._extend_cache(cache, self.max_len)
+        cur = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        for t in range(steps):
+            out.append(np.asarray(cur)[:, 0])
+            logits, cache = self._decode(params, cur, cache, jnp.int32(pos + t))
+            self.stats.decode_steps += 1
+            if greedy or rng is None:
+                cur = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            else:
+                cur = jax.random.categorical(rng, logits)[:, None].astype(jnp.int32)
+        return np.stack(out, axis=1)
+
+    def _extend_cache(self, cache, max_len: int):
+        def ext(leaf):
+            # attention k/v leaves: [..., L, Hkv, hd] with L = prefill len
+            if leaf.ndim >= 3 and leaf.dtype in (jnp.bfloat16, jnp.float32,
+                                                 jnp.float16):
+                # heuristic: the seq dim is ndim-3 for [B,L,H,hd] / [G,B,L,H,hd]
+                ax = leaf.ndim - 3
+                L = leaf.shape[ax]
+                if 1 < L < max_len and ax >= 1:
+                    pad = [(0, 0)] * leaf.ndim
+                    pad[ax] = (0, max_len - L)
+                    return jnp.pad(leaf, pad)
+            return leaf
+
+        def is_kv(path):
+            names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+            return names and names[-1] in ("k", "v")
+
+        return jax.tree_util.tree_map_with_path(
+            lambda p, l: ext(l) if is_kv(p) else l, cache)

@@ -1,0 +1,93 @@
+"""Train-step factory: jitted, freeze-plan-aware, with a compiled-variant
+cache (the "system initialization" LazyTune amortizes) and XLA-measured
+FLOPs per plan for the cost model."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import (AdamWConfig, SGDMConfig, adamw_init, adamw_update,
+                         sgdm_init, sgdm_update)
+
+
+@dataclass
+class TrainStepCache:
+    """Per-freeze-plan compiled train steps + their HLO FLOPs."""
+    model: Any
+    opt_cfg: Any
+    _steps: Dict[Any, Callable] = field(default_factory=dict)
+    _flops: Dict[Any, float] = field(default_factory=dict)
+    recompiles: int = 0
+
+    def _make_step(self, plan):
+        opt_cfg = self.opt_cfg
+        loss_fn = self.model.loss
+
+        def step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: loss_fn(p, batch, plan), has_aux=True)(params)
+            if isinstance(opt_cfg, AdamWConfig):
+                params, opt_state = adamw_update(grads, opt_state, params, opt_cfg)
+            else:
+                params, opt_state = sgdm_update(grads, opt_state, params, opt_cfg)
+            return params, opt_state, metrics
+
+        return jax.jit(step)
+
+    def get(self, plan) -> Callable:
+        if plan not in self._steps:
+            self._steps[plan] = self._make_step(plan)
+            self.recompiles += 1
+        return self._steps[plan]
+
+    def flops(self, plan, example_batch) -> float:
+        """XLA-measured FLOPs of one train step under `plan` (compiled once,
+        cached). Used by EdgeCostModel so SimFreeze savings are *measured*,
+        not assumed."""
+        if plan not in self._flops:
+            step = self.get(plan)
+            params = self.model.init(jax.random.PRNGKey(0))
+            opt_state = (adamw_init(params, self.opt_cfg)
+                         if isinstance(self.opt_cfg, AdamWConfig)
+                         else sgdm_init(params, self.opt_cfg))
+            lowered = step.lower(params, opt_state, example_batch)
+            cost = lowered.compile().cost_analysis()
+            self._flops[plan] = float(cost.get("flops", 0.0))
+        return self._flops[plan]
+
+
+def make_optimizer_state(model, opt_cfg, params):
+    if isinstance(opt_cfg, AdamWConfig):
+        return adamw_init(params, opt_cfg)
+    return sgdm_init(params, opt_cfg)
+
+
+def evaluate(model, params, batch) -> Tuple[float, Any]:
+    """Returns (accuracy, logits) on a labeled batch."""
+    logits = model.predict(params, batch) if model.predict is not None else None
+    if logits is None:
+        raise ValueError("model has no predict()")
+    import numpy as np
+
+    acc = float(jnp.mean((jnp.argmax(logits, -1) ==
+                          jnp.asarray(batch["labels"])).astype(jnp.float32)))
+    return acc, np.asarray(logits)
+
+
+def grad_accum_step(loss_fn, params, batches, plan=None):
+    """Gradient accumulation over microbatches via scan (large global
+    batches on small meshes)."""
+    def micro(carry, batch):
+        gsum, lsum = carry
+        (l, _), g = jax.value_and_grad(lambda p: loss_fn(p, batch, plan),
+                                       has_aux=True)(params)
+        return (jax.tree.map(jnp.add, gsum, g), lsum + l), None
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (gsum, lsum), _ = jax.lax.scan(micro, (zeros, 0.0), batches)
+    n = jax.tree.leaves(batches)[0].shape[0]
+    return (jax.tree.map(lambda g: g / n, gsum), lsum / n)

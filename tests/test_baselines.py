@@ -1,0 +1,76 @@
+"""Baseline controllers (Egeria/SlimFit/RigL/Ekya/static) integrate with
+the runtime and exhibit their defining behaviours."""
+import jax
+import numpy as np
+import pytest
+
+from repro.baselines import (EgeriaController, EkyaController, RigLController,
+                             SlimFitController, StaticController)
+from repro.configs import get_reduced
+from repro.data import streams
+from repro.models import build_model
+from repro.runtime.continual import ContinualRuntime
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = build_model(get_reduced("mobilenetv2"))
+    bench = streams.nc_benchmark(num_classes=10, num_scenarios=3, batches=8,
+                                 batch_size=16)
+    return model, bench
+
+
+def test_static_controller_interval(setup):
+    model, bench = setup
+    ctrl = StaticController(model, interval=4)
+    rt = ContinualRuntime(model, bench, ctrl, pretrain_epochs=1)
+    res = rt.run(inferences_total=10)
+    ctrl_immed = StaticController(model, interval=1)
+    rt2 = ContinualRuntime(model, bench, ctrl_immed, pretrain_epochs=1)
+    res2 = rt2.run(inferences_total=10)
+    assert res.rounds < res2.rounds
+    assert res.total_energy_j < res2.total_energy_j
+
+
+def test_egeria_freezes_front_to_back(setup):
+    model, bench = setup
+    ctrl = EgeriaController(model, with_lazytune=False, interval=2)
+    rt = ContinualRuntime(model, bench, ctrl, pretrain_epochs=1)
+    rt.run(inferences_total=8)
+    flags = list(ctrl.plan.layers)
+    # frozen set (if any) must be a prefix — Egeria's defining rigidity
+    if any(flags):
+        first_active = flags.index(False) if False in flags else len(flags)
+        assert all(flags[:first_active])
+        assert not any(flags[first_active:])
+
+
+def test_slimfit_freezes_by_update_magnitude(setup):
+    model, bench = setup
+    ctrl = SlimFitController(model, with_lazytune=False, interval=2,
+                             threshold=0.5)  # generous: freezes something
+    rt = ContinualRuntime(model, bench, ctrl, pretrain_epochs=1)
+    rt.run(inferences_total=8)
+    assert sum(ctrl.plan.layers) >= 1
+    assert sum(ctrl.plan.layers) <= int(0.9 * ctrl.n_units)  # budget capped
+
+
+def test_rigl_masks_and_flops_scale(setup):
+    model, bench = setup
+    ctrl = RigLController(model, with_lazytune=False, sparsity=0.5)
+    wrapped = ctrl.wrap_model()
+    rt = ContinualRuntime(wrapped, bench, ctrl, pretrain_epochs=1)
+    res = rt.run(inferences_total=8)
+    assert ctrl.masks is not None
+    dens = [float(np.mean(np.asarray(m))) for m in jax.tree.leaves(ctrl.masks)
+            if np.asarray(m).ndim >= 2]
+    assert 0.35 < float(np.mean(dens)) < 0.65  # ~50% sparsity on matrices
+    assert ctrl.flops_scale < 1.0
+
+
+def test_ekya_profiles_and_schedules(setup):
+    model, bench = setup
+    ctrl = EkyaController(model, with_lazytune=False, window_batches=4)
+    rt = ContinualRuntime(model, bench, ctrl, pretrain_epochs=1)
+    rt.run(inferences_total=8)
+    assert ctrl.profile_rounds >= 1

@@ -1,0 +1,183 @@
+"""Unit tests for the ETuner core: curve fit, LazyTune, SimFreeze, OOD,
+freeze plans."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AccuracyCurve, EnergyOODConfig, EnergyOODDetector,
+                        FreezePlan, LayerFreezePlan, LazyTune, LazyTuneConfig,
+                        SimFreeze, SimFreezeConfig, all_active, cka,
+                        fit_accuracy_curve, lm_segments)
+
+
+# ---------------------------------------------------------------------------
+# curvefit
+
+
+def test_curve_fit_recovers_saturating_curve():
+    iters = np.array([1, 2, 4, 8, 16, 32, 64])
+    true = AccuracyCurve(0.8, 0.5, 0.2)
+    accs = true.predict(iters)
+    fit = fit_accuracy_curve(iters, accs)
+    np.testing.assert_allclose(fit.predict(iters), accs, atol=1e-6)
+    # asymptote and monotonicity
+    ks = np.linspace(1, 1000, 64)
+    assert np.all(np.diff(fit.predict(ks)) >= -1e-9)
+
+
+def test_curve_iters_for_gain_bisection():
+    c = AccuracyCurve(0.8, 0.5, 0.0)
+    k = c.iters_for_gain(10.0, 0.01)
+    assert c.predict(k) - c.predict(10.0) >= 0.0099
+    # unreachable gain returns k_max
+    assert c.iters_for_gain(10.0, 1.0, k_max=1e6) == 1e6
+
+
+def test_curve_fit_underdetermined_returns_none():
+    assert fit_accuracy_curve([1.0], [0.5]) is None
+
+
+# ---------------------------------------------------------------------------
+# lazytune
+
+
+def test_lazytune_trigger_threshold():
+    lt = LazyTune(LazyTuneConfig())
+    assert lt.should_trigger(1)
+    lt.state.batches_needed = 4.0
+    assert not lt.should_trigger(3)
+    assert lt.should_trigger(4)
+
+
+def test_lazytune_saturation_increases_batches_needed():
+    """When accuracy saturates, matching the last (tiny) gain requires more
+    data -> rounds get delayed and merged."""
+    lt = LazyTune(LazyTuneConfig(max_batches_needed=64))
+    accs = [0.5, 0.65, 0.72, 0.755, 0.772, 0.780, 0.784, 0.786]
+    needed = []
+    for a in accs:
+        lt.round_finished(int(max(1, lt.state.batches_needed)), a)
+        needed.append(lt.state.batches_needed)
+    assert needed[-1] > needed[1]
+    assert 1.0 <= needed[-1] <= 64.0
+
+
+def test_lazytune_log_decay_on_inference():
+    lt = LazyTune()
+    lt.state.batches_needed = 20.0
+    lt.inference_arrived()
+    assert lt.state.batches_needed == pytest.approx(
+        20.0 * (1 - 1 / np.log(20.0)))
+    lt.state.batches_needed = 2.0  # log(d) <= 1 -> clamp to 1
+    lt.inference_arrived()
+    assert lt.state.batches_needed == 1.0
+
+
+def test_lazytune_scenario_reset():
+    lt = LazyTune()
+    lt.round_finished(4, 0.5)
+    lt.round_finished(4, 0.6)
+    lt.state.batches_needed = 30.0
+    lt.scenario_changed()
+    assert lt.state.batches_needed == 1.0
+    assert lt.state.curve is None
+
+
+# ---------------------------------------------------------------------------
+# cka
+
+
+def test_cka_self_is_one():
+    x = np.random.default_rng(0).normal(size=(64, 32))
+    assert float(cka(jnp.asarray(x), jnp.asarray(x))) == pytest.approx(1.0, abs=1e-5)
+
+
+def test_cka_forms_agree():
+    from repro.core.cka import (_center, _flatten_features, cka_example_form,
+                                cka_feature_form)
+
+    rng = np.random.default_rng(1)
+    x = _center(jnp.asarray(rng.normal(size=(48, 96)), jnp.float32))
+    y = _center(jnp.asarray(rng.normal(size=(48, 80)), jnp.float32))
+    # pad y features for the feature form (zero features are Gram-neutral)
+    yp = jnp.pad(y, ((0, 0), (0, 16)))
+    a = cka_example_form(x, y)
+    b = cka_feature_form(x, yp)
+    np.testing.assert_allclose(float(a), float(b), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# freeze plans
+
+
+def test_lm_segments_partition():
+    plan = FreezePlan(groups=(True, True, False, True, False, False))
+    segs = lm_segments(plan)
+    assert segs == [(0, 2, True), (2, 3, False), (3, 4, True), (4, 6, False)]
+    # contiguous cover
+    assert segs[0][0] == 0 and segs[-1][1] == 6
+    for (a, b, _), (c, d, _) in zip(segs, segs[1:]):
+        assert b == c
+
+
+def test_freeze_plan_hashable_and_mutators():
+    p = all_active(4)
+    p2 = p.freeze(1).freeze(2).unfreeze(2)
+    assert p2.groups == (False, True, False, False)
+    assert hash(p2) != hash(p)
+    d = {p: 1, p2: 2}
+    assert d[p2] == 2
+
+
+# ---------------------------------------------------------------------------
+# simfreeze
+
+
+def _fake_model_features(weights):
+    """Features are deterministic functions of per-unit 'weights'."""
+    def features(params, probe):
+        return [np.outer(probe, np.ones(4)) * w for w in params]
+
+    return features
+
+
+def test_simfreeze_freezes_stable_layers_and_unfreezes_on_change():
+    probe = np.linspace(0, 1, 16)
+    ref = [1.0, 1.0, 1.0]
+    sf = SimFreeze(3, _fake_model_features(ref),
+                   SimFreezeConfig(freeze_interval=1, min_history=2,
+                                   never_freeze_head=False))
+    sf.start_scenario(ref, probe)
+    # two passes with identical params -> CKA stable -> all freeze
+    sf.maybe_freeze([1.1, 1.1, 1.1], 1)
+    assert not any(sf.state.frozen)
+    sf.maybe_freeze([1.1, 1.1, 1.1], 1)
+    assert all(sf.state.frozen)
+    # scenario change with a probe that flips a layer's features
+    sf2_params = [1.1, -5.0, 1.1]
+    changed = sf.scenario_changed(sf2_params, probe + 3.0)
+    assert isinstance(changed, bool)
+
+
+# ---------------------------------------------------------------------------
+# ood detector
+
+
+def test_ood_detects_mean_shift():
+    det = EnergyOODDetector(EnergyOODConfig(window=4, warmup=8,
+                                            z_threshold=2.5, cooldown=4))
+    rng = np.random.default_rng(0)
+    fired = []
+    for i in range(40):
+        logits = rng.normal(0, 1, (8, 10)) + (0.0 if i < 25 else -6.0)
+        fired.append(det.observe(logits))
+    assert not any(fired[:25])
+    assert any(fired[25:])
+
+
+def test_ood_no_false_positives_stationary():
+    det = EnergyOODDetector()
+    rng = np.random.default_rng(3)
+    fired = [det.observe(rng.normal(0, 1, (8, 10))) for _ in range(80)]
+    assert sum(fired) == 0

@@ -1,0 +1,133 @@
+"""Optimizer semantics (freeze masks, clipping, schedules) and checkpoint
+fault-tolerance (atomicity, corruption detection, async, rotation)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, ckpt
+from repro.optim import (AdamWConfig, SGDMConfig, adamw_init, adamw_update,
+                         cosine_schedule, global_norm, sgdm_init, sgdm_update)
+
+
+def _params():
+    k = jax.random.PRNGKey(0)
+    return {"blocks": (jnp.ones((4, 8, 8)),),  # stacked [G=4, ...]
+            "embed": {"tok": jax.random.normal(k, (16, 8))},
+            "final_norm": jnp.zeros((8,))}
+
+
+def test_adamw_moves_params_and_state():
+    p = _params()
+    cfg = AdamWConfig(lr=1e-2)
+    st = adamw_init(p, cfg)
+    g = jax.tree.map(jnp.ones_like, p)
+    p2, st2 = adamw_update(g, st, p, cfg)
+    assert int(st2.step) == 1
+    assert float(jnp.abs(p2["final_norm"] - p["final_norm"]).sum()) > 0
+
+
+def test_adamw_freeze_mask_pins_params_and_moments():
+    p = _params()
+    cfg = AdamWConfig(lr=1e-2, weight_decay=0.1)
+    st = adamw_init(p, cfg)
+    g = jax.tree.map(jnp.ones_like, p)
+    # freeze groups 0 and 1 of the stacked blocks + the whole embedding
+    masks = {"blocks": (jnp.asarray([0.0, 0.0, 1.0, 1.0]),),
+             "embed": {"tok": jnp.zeros(())},
+             "final_norm": jnp.ones(())}
+    p2, st2 = adamw_update(g, st, p, cfg, masks=masks)
+    blk = np.asarray(p2["blocks"][0])
+    blk0 = np.asarray(p["blocks"][0])
+    np.testing.assert_array_equal(blk[:2], blk0[:2])      # frozen slices fixed
+    assert np.abs(blk[2:] - blk0[2:]).sum() > 0           # active slices move
+    np.testing.assert_array_equal(np.asarray(p2["embed"]["tok"]),
+                                  np.asarray(p["embed"]["tok"]))
+    m = np.asarray(st2.m["blocks"][0])
+    assert np.all(m[:2] == 0) and np.any(m[2:] != 0)      # moments pinned
+
+
+def test_sgdm_freeze_mask():
+    p = _params()
+    cfg = SGDMConfig(lr=0.1)
+    st = sgdm_init(p, cfg)
+    g = jax.tree.map(jnp.ones_like, p)
+    masks = jax.tree.map(lambda _: jnp.zeros(()), p)
+    p2, _ = sgdm_update(g, st, p, cfg, masks=masks)
+    for a, b in zip(jax.tree.leaves(p2), jax.tree.leaves(p)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_clip_by_global_norm():
+    from repro.optim import clip_by_global_norm
+
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-5)
+
+
+def test_cosine_schedule_shape():
+    lr0 = float(cosine_schedule(0, warmup=10, total=100))
+    lr_w = float(cosine_schedule(10, warmup=10, total=100))
+    lr_end = float(cosine_schedule(100, warmup=10, total=100, min_frac=0.1))
+    assert lr0 == 0.0 and lr_w == pytest.approx(1.0) \
+        and lr_end == pytest.approx(0.1, rel=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    p = _params()
+    path = str(tmp_path / "c1")
+    ckpt.save(path, p, step=7)
+    restored, step = ckpt.restore(path, p)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(p)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_corruption_detected(tmp_path):
+    p = _params()
+    path = str(tmp_path / "c2")
+    ckpt.save(path, p, step=1)
+    assert ckpt.validate(path)
+    # corrupt the payload (truncation = torn write)
+    pz = os.path.join(path, "data.npz")
+    with open(pz, "r+b") as f:
+        f.truncate(os.path.getsize(pz) - 64)
+    assert not ckpt.validate(path)
+
+
+def test_manager_restores_latest_valid_and_rotates(tmp_path):
+    p = _params()
+    mgr = CheckpointManager(str(tmp_path), keep=2, use_async=False)
+    for s in (1, 2, 3):
+        mgr.save(s, jax.tree.map(lambda x, s=s: x + s, p))
+    assert mgr.all_steps() == [2, 3]  # rotation dropped step 1
+    # corrupt newest (truncate payload) -> restore falls back to step 2
+    p3 = os.path.join(str(tmp_path), "ckpt_0000000003", "data.npz")
+    with open(p3, "r+b") as f:
+        f.truncate(os.path.getsize(p3) // 2)
+    restored, step = mgr.restore_latest(p)
+    assert step == 2
+    np.testing.assert_allclose(np.asarray(restored["final_norm"]),
+                               np.asarray(p["final_norm"]) + 2)
+
+
+def test_async_checkpointer(tmp_path):
+    p = _params()
+    mgr = CheckpointManager(str(tmp_path), keep=3, use_async=True)
+    mgr.save(5, p)
+    mgr.wait()
+    restored, step = mgr.restore_latest(p)
+    assert step == 5
+
+
+def test_restore_missing_returns_none(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "empty"))
+    tree, step = mgr.restore_latest(_params())
+    assert tree is None and step == -1

@@ -1,0 +1,141 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (FreezePlan, LazyTune, LazyTuneConfig, cka,
+                        fit_accuracy_curve, lm_segments)
+from repro.optim import compression
+
+
+# ---------------------------------------------------------------------------
+# CKA invariances
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(8, 40), st.integers(4, 24), st.integers(0, 10_000))
+def test_cka_bounds_and_self_similarity(n, d, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    v = float(cka(x, y))
+    assert -1e-5 <= v <= 1.0 + 1e-5
+    assert float(cka(x, x)) == np.testing.assert_allclose(
+        float(cka(x, x)), 1.0, atol=1e-4) or True
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(0.1, 50.0), st.integers(0, 10_000))
+def test_cka_scale_invariant(scale, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(24, 12)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(24, 12)), jnp.float32)
+    a = float(cka(x, y))
+    b = float(cka(x * scale, y))
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_cka_orthogonal_invariant(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(32, 8))
+    y = rng.normal(size=(32, 8))
+    q, _ = np.linalg.qr(rng.normal(size=(8, 8)))
+    a = float(cka(jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.float32)))
+    b = float(cka(jnp.asarray(x @ q, jnp.float32), jnp.asarray(y, jnp.float32)))
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# LazyTune invariants
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(0.0, 1.0), min_size=1, max_size=12),
+       st.integers(1, 16))
+def test_lazytune_batches_needed_in_bounds(accs, iters):
+    lt = LazyTune(LazyTuneConfig(max_batches_needed=32))
+    for a in accs:
+        lt.round_finished(iters, a)
+        assert 1.0 <= lt.state.batches_needed <= 32.0
+        lt.inference_arrived()
+        assert 1.0 <= lt.state.batches_needed <= 32.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(1.0, 1000.0))
+def test_lazytune_inference_decay_monotone(d):
+    lt = LazyTune()
+    lt.state.batches_needed = d
+    lt.inference_arrived()
+    assert lt.state.batches_needed <= max(d, 1.0)
+    assert lt.state.batches_needed >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# curve fit monotonicity
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(0.01, 0.99), min_size=3, max_size=10),
+       st.integers(0, 1000))
+def test_fitted_curve_is_monotone_nondecreasing(accs, seed):
+    iters = np.cumsum(np.ones(len(accs)) * 4)
+    fit = fit_accuracy_curve(iters, accs)
+    if fit is None:
+        return
+    ks = np.linspace(1, 500, 40)
+    preds = fit.predict(ks)
+    assert np.all(np.diff(preds) >= -1e-9)
+
+
+# ---------------------------------------------------------------------------
+# freeze segments
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.booleans(), min_size=1, max_size=24))
+def test_segments_partition_and_match_flags(flags):
+    plan = FreezePlan(groups=tuple(flags))
+    segs = lm_segments(plan)
+    assert segs[0][0] == 0 and segs[-1][1] == len(flags)
+    rebuilt = []
+    for lo, hi, frozen in segs:
+        assert hi > lo
+        rebuilt += [frozen] * (hi - lo)
+    assert rebuilt == list(flags)
+    # maximal runs: adjacent segments alternate
+    for (_, _, a), (_, _, b) in zip(segs, segs[1:]):
+        assert a != b
+
+
+# ---------------------------------------------------------------------------
+# gradient compression (error feedback)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_int8_error_feedback_residual_bounded(seed):
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)}
+    res = compression.init_residual(g)
+    q, s, res = compression.int8_compress_tree(g, res)
+    deq = compression.int8_decompress_tree(q, s)
+    # residual == quantization error, bounded by scale/2 elementwise
+    err = np.asarray(g["w"]) - np.asarray(deq["w"])
+    np.testing.assert_allclose(np.asarray(res["w"]), err, atol=1e-6)
+    assert np.max(np.abs(err)) <= float(s["w"]) * 0.51 + 1e-6
+
+
+def test_int8_error_feedback_converges_in_mean():
+    """Accumulated decompressed gradients converge to accumulated true
+    gradients (the error-feedback property)."""
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+    res = compression.init_residual({"g": g_true})
+    total = np.zeros(64)
+    for _ in range(50):
+        q, s, res = compression.int8_compress_tree({"g": g_true}, res)
+        total += np.asarray(compression.int8_decompress_tree(q, s)["g"])
+    np.testing.assert_allclose(total / 50, np.asarray(g_true), atol=2e-2)

@@ -1,0 +1,77 @@
+"""Roofline machinery: HLO collective parsing, per-device cost accounting,
+model-FLOPs estimates."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import TRAIN_4K, DECODE_32K, PREFILL_32K
+from repro.roofline import analysis as RA
+
+
+def test_parse_collectives_counts_and_factors():
+    hlo = """
+  %ar = f32[16,128]{1,0} all-reduce(%x), replica_groups={}
+  %ag.1 = bf16[4,256]{1,0} all-gather(%y), dimensions={0}
+  %rs = f32[8,64]{1,0} reduce-scatter(%z), dimensions={0}
+  %cp = f32[2,2]{1,0} collective-permute(%w)
+  %a2a = (f32[4,4]{1,0}, f32[4,4]{1,0}) all-to-all(%p, %q)
+  %ar-start = f32[10]{0} all-reduce-start(%r)
+  %ar-done = f32[10]{0} all-reduce-done(%ar-start)
+"""
+    stats = RA.parse_collectives(hlo)
+    assert stats.counts["all-reduce"] == 2      # ar + ar-start (done skipped)
+    assert stats.counts["all-gather"] == 1
+    assert stats.counts["reduce-scatter"] == 1
+    assert stats.counts["collective-permute"] == 1
+    assert stats.counts["all-to-all"] == 1
+    # all-reduce has a 2x wire factor
+    ar_bytes = 16 * 128 * 4 * 2 + 10 * 4 * 2
+    assert stats.bytes_by_kind["all-reduce"] == pytest.approx(ar_bytes)
+    # tuple-shaped all-to-all counts both operands
+    assert stats.bytes_by_kind["all-to-all"] == pytest.approx(2 * 4 * 4 * 4)
+
+
+def test_cost_analysis_is_per_device():
+    """Documented invariant the roofline relies on: SPMD cost_analysis
+    reports per-partition flops."""
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >1 device (run via subprocess in CI)")
+
+
+def test_model_flops_estimates():
+    cfg = get_config("gemma2-2b")
+    n = cfg.param_count()
+    assert 2.0e9 < n < 3.5e9  # ~2.6B incl. embeddings
+    f_train = RA.model_flops_estimate(cfg, TRAIN_4K)
+    assert f_train == pytest.approx(6.0 * n * TRAIN_4K.tokens)
+    f_dec = RA.model_flops_estimate(cfg, DECODE_32K)
+    assert f_dec == pytest.approx(2.0 * n * DECODE_32K.global_batch)
+
+
+def test_moe_active_params_smaller():
+    cfg = get_config("qwen3-moe-30b-a3b")
+    total = cfg.param_count()
+    active = cfg.active_param_count()
+    assert 25e9 < total < 36e9       # ~30B total
+    assert 2e9 < active < 5e9        # ~3B active
+    assert active < total / 5
+
+
+def test_kimi_param_count_is_about_1t():
+    cfg = get_config("kimi-k2-1t-a32b")
+    assert 0.8e12 < cfg.param_count() < 1.3e12
+
+
+def test_roofline_report_finalize():
+    rep = RA.RooflineReport(
+        arch="x", shape="train_4k", mesh="single", chips=256,
+        flops_per_chip=197e12, bytes_per_chip=819e9,
+        collective_bytes_per_chip=50e9, model_flops=197e12 * 256)
+    rep.finalize()
+    assert rep.compute_s == pytest.approx(1.0)
+    assert rep.memory_s == pytest.approx(1.0)
+    assert rep.collective_s == pytest.approx(1.0)
+    assert rep.flops_ratio == pytest.approx(1.0)
+    assert rep.roofline_fraction() == pytest.approx(1.0)

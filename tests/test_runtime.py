@@ -1,0 +1,125 @@
+"""Runtime tests: cost-model calibration, data streams/arrivals, serving
+engine, quantized training wrapper."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.arrivals import build_timeline
+from repro.data import streams
+from repro.runtime.costmodel import EdgeCostModel, PodCostModel
+
+
+def test_cost_model_matches_paper_breakdown():
+    """Immediate fine-tuning on ResNet50-class work must reproduce the
+    paper's Fig. 3 shares: overhead ~58% of time, ~38% of energy."""
+    cm = EdgeCostModel()
+    flops = 384e9  # one 16-image fine-tune round (paper §I: 24 GFLOPs/img)
+    t, e, parts = cm.round_cost(flops)
+    t_share = parts["t_overhead"] / t
+    e_share = parts["e_overhead"] / e
+    assert 0.5 < t_share < 0.65, t_share
+    assert 0.3 < e_share < 0.45, e_share
+
+
+def test_pod_cost_model_terms():
+    pm = PodCostModel()
+    terms = pm.roofline_terms(1e18, 1e15, 1e13)
+    assert terms["compute_s"] == pytest.approx(1e18 / (256 * 197e12))
+    assert terms["memory_s"] == pytest.approx(1e15 / (256 * 819e9))
+    assert terms["collective_s"] == pytest.approx(1e13 / (256 * 50e9))
+
+
+# ---------------------------------------------------------------------------
+# arrivals
+
+
+@pytest.mark.parametrize("dist", ["poisson", "uniform", "normal", "trace"])
+def test_timeline_counts_and_determinism(dist):
+    ev1 = build_timeline(num_scenarios=3, batches_per_scenario=10,
+                         inferences_total=20, data_dist=dist, seed=5)
+    ev2 = build_timeline(num_scenarios=3, batches_per_scenario=10,
+                         inferences_total=20, data_dist=dist, seed=5)
+    assert [(e.time, e.kind) for e in ev1] == [(e.time, e.kind) for e in ev2]
+    assert sum(e.kind == "data" for e in ev1) == 30
+    assert sum(e.kind == "inference" for e in ev1) == 20
+    times = [e.time for e in ev1]
+    assert times == sorted(times)
+    # data events stay within their scenario's span
+    for e in ev1:
+        if e.kind == "data":
+            assert e.scenario * 100.0 <= e.time < (e.scenario + 1) * 100.0
+
+
+# ---------------------------------------------------------------------------
+# streams
+
+
+def test_nc_benchmark_structure():
+    b = streams.nc_benchmark(num_classes=10, num_scenarios=5, batches=6,
+                             batch_size=8)
+    assert b.num_scenarios == 5
+    for s in b.scenarios:
+        assert len(s.train_batches) == 6
+        assert s.train_batches[0]["images"].shape == (8, 32, 32, 3)
+        assert s.val["images"].shape[0] >= 8
+    # class-incremental: scenario 0 has fewer classes than the last test set
+    assert set(np.unique(b.scenarios[0].test["labels"])) <= set(range(2))
+    assert len(np.unique(b.scenarios[-1].test["labels"])) > 2
+
+
+def test_ni_benchmark_transforms_differ():
+    b = streams.ni_benchmark(num_classes=4, num_scenarios=3, batches=4,
+                             batch_size=8)
+    a = b.scenarios[0].train_batches[0]["images"]
+    c = b.scenarios[2].train_batches[0]["images"]
+    assert float(np.abs(a.mean() - c.mean())) > 1e-3  # appearance shift
+
+
+def test_text_benchmark_classes_separable():
+    b = streams.text_benchmark(num_classes=4, num_scenarios=2, batches=4,
+                               batch_size=8, vocab=128)
+    s = b.scenarios[0]
+    assert s.train_batches[0]["tokens"].shape == (8, 32)
+    assert s.test["tokens"].dtype == np.int32
+
+
+# ---------------------------------------------------------------------------
+# serving engine
+
+
+def test_serve_engine_generates():
+    from repro.configs import get_reduced
+    from repro.models import build_model
+    from repro.runtime.serve import ServeEngine
+
+    cfg = get_reduced("qwen1.5-32b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, max_len=48)
+    toks = np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 8))
+    out = eng.generate(params, toks, steps=6)
+    assert out.shape == (2, 6)
+    assert eng.stats.decode_steps == 6
+    assert out.dtype.kind in "iu"
+
+
+# ---------------------------------------------------------------------------
+# quantization wrapper (paper §V-G)
+
+
+def test_quantized_model_trains():
+    from repro.configs import get_reduced
+    from repro.models import build_model
+    from repro.runtime.continual import _quantized_model
+
+    cfg = get_reduced("mobilenetv2")
+    model = _quantized_model(build_model(cfg), 8)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"images": jnp.ones((4, 32, 32, 3)),
+             "labels": jnp.zeros((4,), jnp.int32)}
+    (loss, _), grads = jax.value_and_grad(lambda p: model.loss(p, batch),
+                                          has_aux=True)(params)
+    assert np.isfinite(float(loss))
+    gn = sum(float(jnp.abs(g).sum()) for g in jax.tree.leaves(grads))
+    assert gn > 0  # straight-through estimator keeps gradients alive
