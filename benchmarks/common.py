@@ -64,7 +64,8 @@ def make_controller(model, method: str):
 def run_method(arch: str, bench_name: str, method: str, *, seeds=(0,),
                batches: int = 16, scenarios: int = 4, inferences: int = 40,
                quant_bits: int = 0, unlabeled: float = 0.0,
-               data_dist: str = "poisson", inf_dist: str = "poisson") -> Dict:
+               data_dist: str = "poisson", inf_dist: str = "poisson",
+               inference_window: float = 0.0) -> Dict:
     accs, times, energies, tflops, rounds = [], [], [], [], []
     for seed in seeds:
         cfg = get_reduced(arch)
@@ -83,7 +84,8 @@ def run_method(arch: str, bench_name: str, method: str, *, seeds=(0,),
             model = ctrl.wrap_model()
         rt = ContinualRuntime(model, bench, ctrl, pretrain_epochs=2,
                               seed=seed, quant_bits=quant_bits,
-                              unlabeled_fraction=unlabeled)
+                              unlabeled_fraction=unlabeled,
+                              inference_window=inference_window)
         res = rt.run(inferences_total=inferences, data_dist=data_dist,
                      inf_dist=inf_dist)
         # Ekya's trial-and-error profiling cost (extra rounds of compute)

@@ -25,6 +25,10 @@ def main():
     ap.add_argument("--batches", type=int, default=8)
     ap.add_argument("--inferences", type=int, default=30)
     ap.add_argument("--seeds", type=int, default=1)
+    ap.add_argument("--inference-window", type=float, default=0.0,
+                    help="micro-batched serving: coalesce requests landing "
+                         "within this many timeline seconds into one "
+                         "forward pass (0 = per-request serving)")
     args = ap.parse_args()
 
     base = None
@@ -32,7 +36,8 @@ def main():
         r = run_method(args.arch, args.bench, method,
                        seeds=tuple(range(args.seeds)),
                        scenarios=args.scenarios, batches=args.batches,
-                       inferences=args.inferences)
+                       inferences=args.inferences,
+                       inference_window=args.inference_window)
         if base is None:
             base = r
         print(f"{method:10s} acc={r['acc']*100:6.2f}% "

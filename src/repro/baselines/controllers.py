@@ -16,7 +16,9 @@ from repro.core.lazytune import LazyTune, LazyTuneConfig
 
 class _Base:
     """Shared plumbing: optional LazyTune integration (paper Table V runs
-    every baseline on top of LazyTune)."""
+    every baseline on top of LazyTune). Implements the runtime's
+    `repro.core.ControllerProtocol` — baselines differ only in how they
+    answer `should_trigger` and evolve `plan` in `round_finished`."""
 
     def __init__(self, model, with_lazytune: bool = False):
         self.model = model

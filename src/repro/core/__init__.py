@@ -10,7 +10,8 @@
 - semi: SimSiam objective for unlabeled data (§IV-C)
 """
 from repro.core.cka import cka, layerwise_cka
-from repro.core.controller import ETunerConfig, ETunerController
+from repro.core.controller import (ControllerProtocol, ETunerConfig,
+                                   ETunerController)
 from repro.core.curvefit import AccuracyCurve, fit_accuracy_curve
 from repro.core.freeze_plan import (FreezePlan, LayerFreezePlan, all_active,
                                     lm_segments)
@@ -19,7 +20,8 @@ from repro.core.ood import EnergyOODConfig, EnergyOODDetector
 from repro.core.simfreeze import SimFreeze, SimFreezeConfig
 
 __all__ = [
-    "cka", "layerwise_cka", "ETunerConfig", "ETunerController",
+    "cka", "layerwise_cka", "ControllerProtocol", "ETunerConfig",
+    "ETunerController",
     "AccuracyCurve", "fit_accuracy_curve", "FreezePlan", "LayerFreezePlan",
     "all_active", "lm_segments", "LazyTune", "LazyTuneConfig",
     "EnergyOODConfig", "EnergyOODDetector", "SimFreeze", "SimFreezeConfig",

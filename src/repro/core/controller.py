@@ -11,7 +11,7 @@ Ablation switches make the controller cover all four paper configurations:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Protocol, runtime_checkable
 
 import numpy as np
 
@@ -19,6 +19,44 @@ from repro.core.freeze_plan import FreezePlan, LayerFreezePlan, all_active
 from repro.core.lazytune import LazyTune, LazyTuneConfig
 from repro.core.ood import EnergyOODConfig, EnergyOODDetector
 from repro.core.simfreeze import SimFreeze, SimFreezeConfig
+
+
+@runtime_checkable
+class ControllerProtocol(Protocol):
+    """The contract every scheduling policy implements (DESIGN.md §2).
+
+    Controllers are *driven* by the runtime's event loop — they never see
+    the `EventScheduler` or executor internals. The runtime calls, in
+    event order:
+
+    - `plan` (property): the current freeze plan — a hashable static jit
+      argument; a changed plan implies a recompile charge.
+    - `should_trigger(batches_available)`: called on every buffered data
+      batch; return True to launch a fine-tuning round now (the runtime
+      additionally requires the device to be idle).
+    - `round_finished(iters, val_acc, params)`: after each round, with the
+      number of iterations run, validation accuracy, and the new params.
+    - `inference_served(logits)`: after each served request, with that
+      request's logits; return True to signal a detected scenario change
+      (only honored when the runtime runs with boundaries='detector').
+    - `scenario_changed(params, probe_batch)`: at an oracle scenario
+      boundary or a detector-confirmed change.
+    - `start_scenario(reference_params, probe_batch)` (optional): offered
+      once per scenario to controllers that track reference-model
+      similarity; gate with a `needs_reference` attribute.
+    - `stats()` (optional): a dict folded into `RunResult.controller_stats`.
+    """
+
+    @property
+    def plan(self) -> Any: ...
+
+    def should_trigger(self, batches_available: int) -> bool: ...
+
+    def round_finished(self, iters: int, val_acc: float, params) -> None: ...
+
+    def inference_served(self, logits) -> bool: ...
+
+    def scenario_changed(self, params, probe_batch) -> None: ...
 
 
 @dataclass

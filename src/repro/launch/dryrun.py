@@ -142,7 +142,7 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, *,
     mem = compiled.memory_analysis()
     if print_analysis:
         print(f"[{arch} x {shape_name} x {mesh_name}] memory_analysis:", mem)
-        ca = compiled.cost_analysis()
+        ca = RA.cost_analysis_dict(compiled)
         print(f"[{arch} x {shape_name} x {mesh_name}] cost_analysis:",
               {k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
 
@@ -264,7 +264,7 @@ def _probe_costs(arch, shape_name, cfg, shape, mesh, policy, opt_cfg,
                 lambda p, c, t, i: T.lm_decode(p, cfg, t, c, i),
                 donate_argnums=(1,)).lower(
                     params_sds, cache_sds, tok_sds, pos_sds).compile()
-    ca = compiled.cost_analysis()
+    ca = RA.cost_analysis_dict(compiled)
     stats = RA.parse_collectives(compiled.as_text())
     return {"flops": float(ca.get("flops", 0.0)),
             "bytes": float(ca.get("bytes accessed", 0.0)),

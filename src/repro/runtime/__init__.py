@@ -1,6 +1,14 @@
-from repro.runtime.costmodel import EdgeCostModel, PodCostModel
 from repro.runtime.continual import ContinualRuntime, RunResult
+from repro.runtime.costmodel import EdgeCostModel, PodCostModel
+from repro.runtime.executor import (FakeQuantHook, FineTuneExecutor,
+                                    ReplayBuffer, RoundHook, RoundReport,
+                                    SimSiamHook)
+from repro.runtime.inference import InferenceServer
+from repro.runtime.ledger import BREAKDOWN_KEYS, CostLedger
+from repro.runtime.scheduler import EventScheduler
 from repro.runtime.train_loop import TrainStepCache, evaluate
 
 __all__ = ["EdgeCostModel", "PodCostModel", "ContinualRuntime", "RunResult",
-           "TrainStepCache", "evaluate"]
+           "TrainStepCache", "evaluate", "EventScheduler", "InferenceServer",
+           "FineTuneExecutor", "ReplayBuffer", "RoundHook", "RoundReport",
+           "SimSiamHook", "FakeQuantHook", "CostLedger", "BREAKDOWN_KEYS"]

@@ -1,19 +1,36 @@
-"""ContinualRuntime — the event-driven continual-learning loop of the paper
-(Fig. 1): training batches and inference requests arrive on a shared
-timeline; a controller (ETuner or a baseline) decides when to launch
-fine-tuning rounds and which layers are frozen; the cost model charges
-per-round overheads (system init / load / save), per-plan recompiles and
-XLA-*measured* compute FLOPs.
+"""ContinualRuntime — composition root of the event-driven continual-
+learning loop of the paper (Fig. 1): training batches and inference
+requests arrive on a shared timeline; a controller (ETuner or a baseline)
+decides when to launch fine-tuning rounds and which layers are frozen; the
+cost model charges per-round overheads (system init / load / save),
+per-plan recompiles and XLA-*measured* compute FLOPs.
+
+The runtime itself is deliberately thin. It wires four owned subsystems
+(DESIGN.md §1):
+
+- `EventScheduler` (runtime/scheduler.py) — the priority-ordered timeline,
+  wall-clock/`busy_until` device occupancy, scenario boundaries;
+- `InferenceServer` (runtime/inference.py) — request serving, the
+  arrival-time params-visibility seam, opt-in micro-batched serving;
+- `FineTuneExecutor` (runtime/executor.py) — round execution, the replay
+  buffer, and `RoundHook`s (SimSiam semi-supervised pass, fake-quant QAT);
+- `CostLedger` (runtime/ledger.py) — all time/energy/FLOPs accounting.
+
+Controllers implement the `ControllerProtocol` documented in
+core/controller.py; the runtime drives them from scheduler callbacks and
+never reaches into their internals.
 
 Faithfulness notes:
 - the model is pre-trained on scenario 0 ("originally well-trained in the
   first scenario"); costs are accounted from scenario 1 on;
 - a small replay buffer stands in for the CWR anti-forgetting technique of
   the CORe50 paper (documented substitution, DESIGN.md);
-- inference requests are served by the params *visible* at request time: a
-  round occupies wall-clock, so requests landing mid-round see the previous
-  params — this reproduces the "outdated model" effect LazyTune must
-  balance (paper §III-A);
+- inference requests resolve their params at *arrival* time via the
+  InferenceServer's visibility seam; a round occupies wall-clock, which is
+  the "outdated model" effect LazyTune must balance (paper §III-A). Note
+  the pre-decomposition monolith served mid-round requests by the round's
+  freshly trained params (visible == latest); that behaviour is kept
+  bug-compatible and the seam documented in DESIGN.md §5;
 - validation accuracy (5% split) drives LazyTune; inference accuracy is
   only recorded, never used by the controller (paper §IV-A).
 """
@@ -24,14 +41,24 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.data.arrivals import Event, build_timeline
 from repro.data.streams import ContinualBenchmark
 from repro.optim import AdamWConfig
 from repro.runtime.costmodel import EdgeCostModel
-from repro.runtime.train_loop import TrainStepCache, evaluate, make_optimizer_state
+from repro.runtime.executor import (FakeQuantHook, FineTuneExecutor,
+                                    ReplayBuffer, RoundHook, SimSiamHook,
+                                    fake_quant, quantized_model)
+from repro.runtime.inference import InferenceServer
+from repro.runtime.ledger import CostLedger
+from repro.runtime.scheduler import EventScheduler
+from repro.runtime.train_loop import (TrainStepCache, as_jnp, evaluate,
+                                     make_optimizer_state)
+
+# legacy aliases (pre-decomposition import sites)
+_fake_quant = fake_quant
+_quantized_model = quantized_model
 
 
 @dataclass
@@ -54,10 +81,6 @@ class RunResult:
                 f"tflops={self.compute_tflops:.2f}")
 
 
-def _as_jnp(batch: dict) -> dict:
-    return {k: jnp.asarray(v) for k, v in batch.items()}
-
-
 class ContinualRuntime:
     def __init__(self, model, benchmark: ContinualBenchmark, controller,
                  cost_model: EdgeCostModel = EdgeCostModel(),
@@ -68,7 +91,9 @@ class ContinualRuntime:
                  inference_batch: int = 16,
                  quant_bits: int = 0,
                  unlabeled_fraction: float = 0.0,
-                 calibrate_cost: bool = True):
+                 calibrate_cost: bool = True,
+                 inference_window: float = 0.0,
+                 extra_hooks: Optional[List[RoundHook]] = None):
         self.model = model
         self.bench = benchmark
         self.controller = controller
@@ -80,12 +105,20 @@ class ContinualRuntime:
         self.pretrain_epochs = pretrain_epochs
         self.inference_batch = inference_batch
         self.quant_bits = quant_bits
-        if quant_bits:
-            self.model = _quantized_model(model, quant_bits)
         self.unlabeled_fraction = unlabeled_fraction
         self.calibrate_cost = calibrate_cost
-        self._semi_head = None
-        self._semi_step = None
+        self.inference_window = inference_window
+        # round hooks: model-wrapping ones bind first so every later
+        # consumer (train steps, serving, SimSiam features) sees the
+        # wrapped model.
+        self.hooks: List[RoundHook] = []
+        if quant_bits:
+            self.hooks.append(FakeQuantHook(quant_bits))
+        if unlabeled_fraction:
+            self.hooks.append(SimSiamHook(unlabeled_fraction))
+        self.hooks.extend(extra_hooks or [])
+        for h in self.hooks:
+            self.model = h.bind(self.model)
         self.steps = TrainStepCache(model=self.model, opt_cfg=self.opt_cfg)
 
     # -------------------------------------------------------------------
@@ -101,7 +134,7 @@ class ContinualRuntime:
         step0 = self.steps.get(self.controller.plan)
         for _ in range(self.pretrain_epochs):
             for b in bench.scenarios[0].train_batches:
-                params, opt_state, _ = step0(params, opt_state, _as_jnp(b))
+                params, opt_state, _ = step0(params, opt_state, as_jnp(b))
         reference_params = params  # "initial model before fine-tuning"
 
         if events is None:
@@ -114,196 +147,93 @@ class ContinualRuntime:
             events = [dataclasses.replace(e, scenario=e.scenario + 1)
                       for e in events]
 
+        # --- compose the subsystems -------------------------------------
         ctrl = self.controller
-        cur_scenario = 0
-        buffer: List[dict] = []
-        replay: List[dict] = list(bench.scenarios[0].train_batches[:self.replay_batches])
+        ledger = CostLedger()
+        replay = ReplayBuffer(bench.scenarios[0].train_batches[:self.replay_batches])
+        executor = FineTuneExecutor(self.steps, self.cost, ledger, replay,
+                                    rng=rng, hooks=self.hooks,
+                                    calibrate_cost=self.calibrate_cost)
+        executor.load(params, opt_state)
+        scheduler = EventScheduler(events)
+        server = InferenceServer(model, batch_window=self.inference_window,
+                                 on_served=ctrl.inference_served)
+        server.publish(params, 0.0)
+        val_curve: List[float] = []
         pending_change = False
 
-        total_time = 0.0
-        total_energy = 0.0
-        total_flops = 0.0
-        rounds = 0
-        bd = {"t_compute": 0.0, "t_overhead": 0.0, "e_compute": 0.0,
-              "e_overhead": 0.0, "t_cka": 0.0, "e_cka": 0.0}
-        inference_accs: List[float] = []
-        val_curve: List[float] = []
-        busy_until = 0.0
-        visible_params = params
-        visible_at = 0.0
-        compiled_plans = set()
-
-        def run_round(now: float):
-            nonlocal params, opt_state, total_time, total_energy, rounds, \
-                total_flops, busy_until, visible_params, visible_at
-            if not buffer:
+        def finish_round(now: float) -> None:
+            report = executor.execute_round(ctrl.plan, now, scheduler)
+            if report is None:
                 return
-            plan = ctrl.plan
-            recompile = 0
-            if plan not in compiled_plans:
-                compiled_plans.add(plan)
-                recompile = 1
-            step = self.steps.get(plan)
-            batches = list(buffer)
-            buffer.clear()
-            if replay:
-                batches.append(replay[rng.integers(len(replay))])
-            prev_params = params
-            rng_lab = np.random.default_rng(rounds + 17)
-            for b in batches:
-                jb = _as_jnp(b)
-                if self.unlabeled_fraction and "images" in b and \
-                        rng_lab.random() < self.unlabeled_fraction:
-                    # paper §IV-C: self-supervised (SimSiam) pass on
-                    # unlabeled data, then supervised passes on labeled data
-                    params = self._semi_update(params, jb)
-                    continue
-                params, opt_state, _ = step(params, opt_state, jb)
-            flops = self.steps.flops(plan, _as_jnp(batches[0])) * len(batches)
-            if self.calibrate_cost:
-                # Preserve the paper's compute/overhead balance (Fig. 3)
-                # at reduced model scale: scale the device throughput so a
-                # 2-iteration immediate round spends ~0.8 s in compute vs
-                # the 1.1 s fixed overheads (58%/42% split). Documented in
-                # DESIGN.md ("hardware adaptation").
-                per_iter = flops / max(len(batches), 1)
-                self.cost = dataclasses.replace(
-                    self.cost, flops_per_sec=max(per_iter * 2 / 0.8, 1.0))
-                self.calibrate_cost = False
-            t, e, parts = self.cost.round_cost(flops, recompiles=recompile)
-            total_time += t
-            total_energy += e
-            total_flops += flops
-            rounds += 1
-            for k in ("t_compute", "t_overhead", "e_compute", "e_overhead"):
-                bd[k] += parts[k]
-            start = max(now, busy_until)
-            busy_until = start + t
-            visible_params, visible_at = params, busy_until
+            server.publish(executor.params, report.end)
             # validation accuracy (labeled 5% split) -> LazyTune
-            val = bench.scenarios[cur_scenario].val
-            val_acc, _ = evaluate(model, params, _as_jnp(val))
+            val = bench.scenarios[scheduler.current_scenario].val
+            val_acc, _ = evaluate(model, executor.params, as_jnp(val))
             val_curve.append(val_acc)
-            cka_before = ctrl.simfreeze.state.cka_flops if hasattr(ctrl, "simfreeze") else 0.0
-            ctrl.round_finished(len(batches), val_acc, params)
+            cka_before = ctrl.simfreeze.state.cka_flops \
+                if hasattr(ctrl, "simfreeze") else 0.0
+            ctrl.round_finished(report.iters, val_acc, executor.params)
             if hasattr(ctrl, "simfreeze"):
                 dcka = ctrl.simfreeze.state.cka_flops - cka_before
                 if dcka:
-                    tc, ec = self.cost.compute_cost(dcka)
-                    bd["t_cka"] += tc
-                    bd["e_cka"] += ec
-                    total_time += tc
-                    total_energy += ec
+                    tc, ec = executor.cost.compute_cost(dcka)
+                    ledger.charge_probe("cka", tc, ec)
 
-        for ev in events:
-            if ev.kind == "data":
-                batch = bench.scenarios[ev.scenario].train_batches[
-                    ev.index % len(bench.scenarios[ev.scenario].train_batches)]
-                new_scenario = ev.scenario != cur_scenario
-                if new_scenario:
-                    cur_scenario = ev.scenario
-                    # keep a replay sample of the previous scenario
-                    if len(replay) < 6:
-                        replay.append(batch)
-                if (new_scenario and self.boundaries == "oracle") or pending_change:
-                    pending_change = False
-                    if ctrl.plan is not None and hasattr(ctrl, "scenario_changed"):
-                        ctrl.scenario_changed(params, _as_jnp(batch))
-                if getattr(ctrl, "needs_reference", True) and \
-                        hasattr(ctrl, "start_scenario") and \
-                        (new_scenario or (cur_scenario and not getattr(
-                            ctrl, "_scenario_started", False))):
-                    ctrl.start_scenario(reference_params, _as_jnp(batch))
-                    ctrl._scenario_started = True
-                buffer.append(batch)
-                if ctrl.should_trigger(len(buffer)) and ev.time >= busy_until:
-                    run_round(ev.time)
-            else:  # inference request
-                sc = bench.scenarios[min(ev.scenario, cur_scenario) or ev.scenario]
-                test = bench.scenarios[max(cur_scenario, 1)].test \
-                    if ev.scenario <= cur_scenario else sc.test
-                idx = rng.choice(len(test["labels"]),
-                                 min(self.inference_batch, len(test["labels"])),
-                                 replace=False)
-                req = {k: v[idx] for k, v in test.items()}
-                use = visible_params if ev.time >= visible_at else params
-                acc, logits = evaluate(model, use, _as_jnp(req))
-                inference_accs.append(acc)
-                changed = ctrl.inference_served(logits)
-                if changed and self.boundaries == "detector":
-                    pending_change = True
+        def on_scenario_change(previous: int, ev: Event) -> None:
+            # keep a replay sample of the just-entered scenario
+            sc = bench.scenarios[ev.scenario]
+            replay.add(sc.train_batches[ev.index % len(sc.train_batches)])
 
+        def on_data(ev: Event, boundary: bool) -> None:
+            nonlocal pending_change
+            sc = bench.scenarios[ev.scenario]
+            batch = sc.train_batches[ev.index % len(sc.train_batches)]
+            # bound micro-batch deferral: a queued group whose window has
+            # elapsed is served now, so controller signals driven by
+            # inference_served (LazyTune decay, scenario detection) lag by
+            # at most one window.
+            server.expire(ev.time)
+            if self.boundaries == "detector" and server.poll_change():
+                pending_change = True
+            if (boundary and self.boundaries == "oracle") or pending_change:
+                pending_change = False
+                if ctrl.plan is not None and hasattr(ctrl, "scenario_changed"):
+                    ctrl.scenario_changed(executor.params, as_jnp(batch))
+            if getattr(ctrl, "needs_reference", True) and \
+                    hasattr(ctrl, "start_scenario") and \
+                    (boundary or (scheduler.current_scenario and not getattr(
+                        ctrl, "_scenario_started", False))):
+                ctrl.start_scenario(reference_params, as_jnp(batch))
+                ctrl._scenario_started = True
+            executor.enqueue(batch)
+            if ctrl.should_trigger(executor.pending) and \
+                    scheduler.idle_at(ev.time):
+                finish_round(ev.time)
+
+        def on_inference(ev: Event) -> None:
+            cur = scheduler.current_scenario
+            sc = bench.scenarios[min(ev.scenario, cur) or ev.scenario]
+            test = bench.scenarios[max(cur, 1)].test \
+                if ev.scenario <= cur else sc.test
+            idx = rng.choice(len(test["labels"]),
+                             min(self.inference_batch, len(test["labels"])),
+                             replace=False)
+            server.submit(ev.time, {k: v[idx] for k, v in test.items()})
+
+        scheduler.run(on_data=on_data, on_inference=on_inference,
+                      on_scenario_change=on_scenario_change)
+        server.flush()
         # trailing flush: any buffered data still fine-tunes (no data dropped)
-        if buffer:
-            run_round(busy_until)
+        if executor.pending:
+            finish_round(scheduler.busy_until)
 
         stats = ctrl.stats() if hasattr(ctrl, "stats") else {}
         return RunResult(
-            avg_inference_acc=float(np.mean(inference_accs)) if inference_accs else 0.0,
-            total_time_s=total_time, total_energy_j=total_energy,
-            compute_tflops=total_flops / 1e12, rounds=rounds,
-            recompiles=self.steps.recompiles, inference_accs=inference_accs,
-            breakdown=bd, controller_stats=stats, val_curve=val_curve)
-
-
-    # ------------------------------------------------------------------
-    # semi-supervised (SimSiam) auxiliary update (paper §IV-C)
-
-    def _semi_update(self, params, batch):
-        import jax as _jax
-
-        from repro.core import semi
-
-        if self._semi_head is None:
-            feats = self.model.features(params, batch)
-            fdim = int(np.asarray(feats[-1]).reshape(
-                np.asarray(feats[-1]).shape[0], -1).shape[-1])
-            self._feat_dim = min(fdim, 256)
-            self._semi_head = semi.init_simsiam_head(
-                _jax.random.PRNGKey(1), self._feat_dim)
-
-            def pooled(p, images):
-                fs = self.model.features(p, {"images": images})
-                f = fs[-1]
-                f = f.reshape(f.shape[0], -1)
-                return f[:, :self._feat_dim].astype(jnp.float32)
-
-            def semi_step(p, head, rng, images):
-                def lf(q):
-                    return semi.simsiam_loss(pooled, head, q, rng, images)
-
-                g = _jax.grad(lf)(p)
-                return _jax.tree.map(
-                    lambda a, b: (a.astype(jnp.float32)
-                                  - 1e-3 * b.astype(jnp.float32)).astype(a.dtype),
-                    p, g)
-
-            self._semi_step = _jax.jit(semi_step)
-        rng = jax.random.PRNGKey(int(np.random.default_rng(0).integers(1 << 30)))
-        return self._semi_step(params, self._semi_head, rng, batch["images"])
-
-
-# ---------------------------------------------------------------------------
-# simulated quantization-aware training (paper §V-G, Table VIII)
-
-
-def _fake_quant(x, bits: int):
-    if x.dtype not in (jnp.float32, jnp.bfloat16):
-        return x
-    xf = x.astype(jnp.float32)
-    qmax = 2.0 ** (bits - 1) - 1
-    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-8) / qmax
-    q = jnp.round(xf / scale) * scale
-    return (xf + jax.lax.stop_gradient(q - xf)).astype(x.dtype)  # STE
-
-
-def _quantized_model(model, bits: int):
-    def loss(params, batch, plan=None):
-        qp = jax.tree.map(lambda p: _fake_quant(p, bits), params)
-        return model.loss(qp, batch, plan)
-
-    def predict(params, batch):
-        qp = jax.tree.map(lambda p: _fake_quant(p, bits), params)
-        return model.predict(qp, batch)
-
-    return dataclasses.replace(model, loss=loss, predict=predict)
+            avg_inference_acc=server.avg_acc,
+            total_time_s=ledger.total_time_s,
+            total_energy_j=ledger.total_energy_j,
+            compute_tflops=ledger.compute_tflops, rounds=ledger.rounds,
+            recompiles=self.steps.recompiles, inference_accs=server.accs,
+            breakdown=ledger.breakdown, controller_stats=stats,
+            val_curve=val_curve)

@@ -1,0 +1,152 @@
+"""InferenceServer — the serving half of the continual-learning loop.
+
+Owns the request path: which params serve a request (the
+`visible_params`/`visible_at` seam — resolved at *arrival* time), per-
+request accuracy recording, and opt-in **micro-batched serving**:
+requests that land within `batch_window` seconds of each other and
+resolve to the same params are coalesced into a single forward pass. On
+the paper's workloads (many small requests, §V-D sweeps
+`inferences_total`) this turns N model invocations into ~N/k while
+leaving every recorded per-request accuracy unchanged (a regression test
+asserts the equivalence). Controller signals fed by `on_served`
+(LazyTune's inference-arrival decay, scenario detection) are delivered at
+flush time; the composition root bounds that lag to one window via
+`expire`, so stateful controllers may see signal timing shift by at most
+`batch_window` timeline seconds relative to per-request serving.
+
+Visibility caveat (kept bug-compatible with the pre-decomposition
+monolith; DESIGN.md §5): `publish` sets `visible_params` and
+`latest_params` to the *same* object, so until a publisher starts
+retaining the pre-round params, requests landing mid-round are served by
+the round's freshly trained params. The seam (`_resolve`, the per-group
+params-identity split) exists so a future async-tuning PR can publish
+genuinely delayed params without touching the request path.
+
+`batch_window=0` (the default) reproduces the legacy per-request path
+exactly — bit-for-bit, including the shared RNG consumption order — which
+is what the fixed-seed parity test in tests/test_regression_runtime.py
+pins down.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.runtime.train_loop import as_jnp, evaluate
+
+
+@dataclass
+class _Pending:
+    time: float
+    request: Dict[str, np.ndarray]
+    params: Any  # resolved at submit time (arrival-time visibility policy)
+
+
+class InferenceServer:
+    """Request queue + params-visibility policy + optional micro-batching.
+
+    `on_served(logits) -> bool` is invoked once per request, in arrival
+    order, with that request's logits; a True return is latched into
+    `change_detected` (the energy-score scenario detector's signal) until
+    the composition root consumes it via `poll_change`.
+    """
+
+    def __init__(self, model, *, batch_window: float = 0.0,
+                 on_served: Optional[Callable[[np.ndarray], bool]] = None):
+        self.model = model
+        self.batch_window = float(batch_window)
+        self.on_served = on_served
+        # params visibility: `visible_params` serve requests from
+        # `visible_at` on; `latest_params` is the newest trained state.
+        self.visible_params = None
+        self.visible_at = 0.0
+        self.latest_params = None
+        # recorded outcomes
+        self.accs: List[float] = []
+        self.served = 0
+        self.eval_calls = 0
+        self.change_detected = False
+        self._queue: List[_Pending] = []
+
+    # ---- params lifecycle ------------------------------------------------
+    def publish(self, params, visible_at: float) -> None:
+        """A fine-tuning round finished training `params`; they become
+        visible once the round's device occupancy ends (`visible_at`).
+        Queued requests arrived earlier and must be served first, with the
+        params they resolved to at arrival."""
+        self.flush()
+        self.visible_params = params
+        self.latest_params = params
+        self.visible_at = visible_at
+
+    def _resolve(self, t: float):
+        return self.visible_params if t >= self.visible_at else self.latest_params
+
+    # ---- request path ----------------------------------------------------
+    def submit(self, t: float, request: Dict[str, np.ndarray]) -> None:
+        """Serve (or enqueue) one inference request arriving at time `t`.
+        The params are resolved *now* — arrival-time visibility — so
+        coalescing never changes which model state answers a request."""
+        params = self._resolve(t)
+        if self.batch_window <= 0.0:
+            self._serve([_Pending(t, request, params)])
+            return
+        if self._queue and (t - self._queue[0].time > self.batch_window
+                            or self._queue[0].params is not params):
+            self.flush()
+        self._queue.append(_Pending(t, request, params))
+
+    def flush(self) -> None:
+        if self._queue:
+            group, self._queue = self._queue, []
+            self._serve(group)
+
+    def expire(self, now: float) -> None:
+        """Flush any queued group whose window has elapsed by time `now`.
+        The composition root calls this as the timeline advances so a
+        coalesced group (and anything latched by its `on_served`
+        callbacks, e.g. scenario-change detection) is never deferred past
+        its window just because no further request arrived."""
+        if self._queue and now - self._queue[0].time > self.batch_window:
+            self.flush()
+
+    def poll_change(self) -> bool:
+        changed, self.change_detected = self.change_detected, False
+        return changed
+
+    # ---- execution -------------------------------------------------------
+    def _serve(self, group: List[_Pending]) -> None:
+        self.eval_calls += 1
+        if len(group) == 1:
+            p = group[0]
+            acc, logits = evaluate(self.model, p.params, as_jnp(p.request))
+            self._record(p, acc, logits)
+            return
+        # one forward pass over the concatenated group, then per-request
+        # slicing — identical math to per-request serving because every
+        # request in a group shares the same params.
+        batch = {k: np.concatenate([p.request[k] for p in group])
+                 for k in group[0].request}
+        _, logits = evaluate(self.model, group[0].params, as_jnp(batch))
+        offset = 0
+        for p in group:
+            n = len(p.request["labels"])
+            lg = logits[offset:offset + n]
+            offset += n
+            acc = float(np.mean((np.argmax(lg, -1) ==
+                                 np.asarray(p.request["labels"]))
+                                .astype(np.float32)))
+            self._record(p, acc, lg)
+
+    def _record(self, p: _Pending, acc: float, logits) -> None:
+        self.accs.append(acc)
+        self.served += 1
+        if self.on_served is not None and self.on_served(logits):
+            self.change_detected = True
+
+    # ---- reporting -------------------------------------------------------
+    @property
+    def avg_acc(self) -> float:
+        return float(np.mean(self.accs)) if self.accs else 0.0

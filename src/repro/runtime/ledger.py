@@ -1,0 +1,54 @@
+"""CostLedger — the single accumulation point for modeled execution costs.
+
+Every time/energy/FLOPs figure a run reports flows through one ledger
+instance: per-round charges (compute + fixed overheads, from
+``EdgeCostModel.round_cost``) and auxiliary probe charges (e.g. SimFreeze's
+CKA similarity computations). Centralizing the arithmetic keeps the
+breakdown keys consistent across the runtime, benchmarks and tests, and
+makes "where did the joules go" auditable instead of being smeared across
+the event loop (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+#: Breakdown keys every `RunResult.breakdown` carries. `t_`/`e_` prefix =
+#: seconds / joules; `compute`/`overhead` follow the paper's Fig. 3 split;
+#: `cka` is SimFreeze's similarity-probe cost (charged as pure compute).
+BREAKDOWN_KEYS = ("t_compute", "t_overhead", "e_compute", "e_overhead",
+                  "t_cka", "e_cka")
+
+
+@dataclass
+class CostLedger:
+    total_time_s: float = 0.0
+    total_energy_j: float = 0.0
+    total_flops: float = 0.0
+    rounds: int = 0
+    breakdown: Dict[str, float] = field(
+        default_factory=lambda: {k: 0.0 for k in BREAKDOWN_KEYS})
+
+    def charge_round(self, *, flops: float, time_s: float, energy_j: float,
+                     parts: Dict[str, float]) -> None:
+        """One fine-tuning round: `parts` is EdgeCostModel's breakdown dict
+        (t_compute/t_overhead/e_compute/e_overhead)."""
+        self.total_time_s += time_s
+        self.total_energy_j += energy_j
+        self.total_flops += flops
+        self.rounds += 1
+        for k in ("t_compute", "t_overhead", "e_compute", "e_overhead"):
+            self.breakdown[k] += parts[k]
+
+    def charge_probe(self, key: str, time_s: float, energy_j: float) -> None:
+        """An auxiliary compute charge outside the round proper (e.g. `key`
+        = 'cka'). Adds to the totals and to `t_<key>` / `e_<key>`."""
+        time_s, energy_j = float(time_s), float(energy_j)
+        self.breakdown[f"t_{key}"] = self.breakdown.get(f"t_{key}", 0.0) + time_s
+        self.breakdown[f"e_{key}"] = self.breakdown.get(f"e_{key}", 0.0) + energy_j
+        self.total_time_s += time_s
+        self.total_energy_j += energy_j
+
+    @property
+    def compute_tflops(self) -> float:
+        return self.total_flops / 1e12

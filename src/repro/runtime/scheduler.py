@@ -1,0 +1,98 @@
+"""EventScheduler — the shared timeline of the continual-learning loop.
+
+The paper's central tension (Fig. 1) is that training-data batches and
+inference requests arrive on *one* wall-clock, and fine-tuning rounds
+occupy it: a request landing mid-round is served by whatever params are
+visible, and a round can only launch when the device is idle. This module
+owns exactly that: the priority-ordered event queue, the `now`/`busy_until`
+device-occupancy semantics, and scenario-boundary bookkeeping. It knows
+nothing about models, params or cost models — those live behind the typed
+callbacks (`on_data` / `on_inference` / `on_scenario_change`) a composition
+root (runtime/continual.py) wires up.
+
+Controllers never see this class directly; they implement the
+`ControllerProtocol` documented in core/controller.py and are driven by the
+composition root in response to the callbacks emitted here.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Callable, Iterable, Optional
+
+from repro.data.arrivals import Event
+
+# Events pop in (time, kind, insertion-order) order: `"data" < "inference"`
+# lexicographically, matching data/arrivals.build_timeline's sort, so a
+# pre-built timeline replays in exactly its constructed order.
+_KIND_ORDER = {"data": 0, "inference": 1}
+
+OnData = Callable[[Event, bool], None]          # (event, scenario_boundary)
+OnInference = Callable[[Event], None]
+OnScenarioChange = Callable[[int, Event], None]  # (previous_scenario, event)
+
+
+class EventScheduler:
+    """Priority-ordered timeline with device-occupancy accounting.
+
+    - `push` accepts events in any order (streams may inject new work
+      mid-run, e.g. detector-driven probes); dispatch is always
+      time-ordered, stable for ties.
+    - `occupy(start, duration)` models the device being busy: the actual
+      start is delayed past any in-flight work (`busy_until`), and the new
+      `busy_until` is returned so callers can timestamp visibility.
+    - `current_scenario` advances when a data event from a later scenario
+      is dispatched; the boundary is surfaced both via `on_scenario_change`
+      and the `scenario_boundary` flag on `on_data`.
+    """
+
+    def __init__(self, events: Iterable[Event] = ()):
+        self._heap: list = []
+        self._seq = 0
+        self.now = 0.0
+        self.busy_until = 0.0
+        self.current_scenario = 0
+        self.dispatched = 0
+        for e in events:
+            self.push(e)
+
+    # ---- queue -----------------------------------------------------------
+    def push(self, event: Event) -> None:
+        key = (event.time, _KIND_ORDER.get(event.kind, 2), self._seq)
+        heapq.heappush(self._heap, (key, event))
+        self._seq += 1
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    # ---- device occupancy ------------------------------------------------
+    def idle_at(self, t: float) -> bool:
+        """True when the device can start new work at time `t`."""
+        return t >= self.busy_until
+
+    def occupy(self, start: float, duration: float):
+        """Reserve the device for `duration` seconds, no earlier than
+        `start` and never overlapping in-flight work. Returns the
+        (actual_start, end) interval; `busy_until` advances to `end`."""
+        actual = max(start, self.busy_until)
+        self.busy_until = actual + duration
+        return actual, self.busy_until
+
+    # ---- dispatch --------------------------------------------------------
+    def run(self, *, on_data: OnData, on_inference: OnInference,
+            on_scenario_change: Optional[OnScenarioChange] = None) -> None:
+        """Drain the queue in time order, advancing `now` monotonically and
+        emitting one callback per event."""
+        while self._heap:
+            _, ev = heapq.heappop(self._heap)
+            self.now = max(self.now, ev.time)
+            self.dispatched += 1
+            if ev.kind == "data":
+                boundary = ev.scenario != self.current_scenario
+                if boundary:
+                    previous = self.current_scenario
+                    self.current_scenario = ev.scenario
+                    if on_scenario_change is not None:
+                        on_scenario_change(previous, ev)
+                on_data(ev, boundary)
+            else:
+                on_inference(ev)

@@ -54,10 +54,17 @@ class TrainStepCache:
             opt_state = (adamw_init(params, self.opt_cfg)
                          if isinstance(self.opt_cfg, AdamWConfig)
                          else sgdm_init(params, self.opt_cfg))
+            from repro.roofline.analysis import cost_analysis_dict
+
             lowered = step.lower(params, opt_state, example_batch)
-            cost = lowered.compile().cost_analysis()
+            cost = cost_analysis_dict(lowered.compile())
             self._flops[plan] = float(cost.get("flops", 0.0))
         return self._flops[plan]
+
+
+def as_jnp(batch: dict) -> dict:
+    """Host batch dict -> device arrays (shared by training and serving)."""
+    return {k: jnp.asarray(v) for k, v in batch.items()}
 
 
 def make_optimizer_state(model, opt_cfg, params):

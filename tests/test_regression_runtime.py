@@ -1,0 +1,113 @@
+"""Fixed-seed regression tests pinning the decomposed runtime to the
+pre-refactor monolith.
+
+``tests/data/golden_runtime.json`` was captured by running the original
+single-method ``ContinualRuntime.run`` (commit 780bab6's runtime, after
+the jax-0.4.x compat fixes) on small fixed-seed configs. The decomposed
+scheduler/executor/ledger/server runtime must reproduce every recorded
+figure — accuracy trace, round/recompile counts, and the full CostLedger
+breakdown — with micro-batching disabled.
+
+Also covers the micro-batched-serving equivalence claim: per-request
+accuracies are unchanged by coalescing for models whose predict is
+per-example independent (LayerNorm ViT here; batch-statistic models like
+the BN CNNs see tiny deviations by construction — DESIGN.md §5).
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import (ETunerConfig, ETunerController, LazyTuneConfig,
+                        SimFreezeConfig)
+from repro.data import streams
+from repro.models import build_model
+from repro.runtime.continual import ContinualRuntime
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "data",
+                      "golden_runtime.json")
+
+
+def _run(method, **kw):
+    model = build_model(get_reduced("mobilenetv2"))
+    bench = streams.nc_benchmark(num_classes=10, num_scenarios=3, batches=6,
+                                 batch_size=8, seed=0)
+    ecfg = ETunerConfig(
+        lazytune=method in ("lazy", "etuner"),
+        simfreeze=method in ("freeze", "etuner"),
+        detect_scenario_changes=False,
+        lazytune_cfg=LazyTuneConfig(max_batches_needed=6),
+        simfreeze_cfg=SimFreezeConfig(freeze_interval=6, min_history=2,
+                                      cka_threshold=0.01))
+    ctrl = ETunerController(model, ecfg)
+    rt = ContinualRuntime(model, bench, ctrl, pretrain_epochs=1, seed=0, **kw)
+    return rt.run(inferences_total=16)
+
+
+def _check(res, gold):
+    assert res.rounds == gold["rounds"]
+    assert res.recompiles == gold["recompiles"]
+    np.testing.assert_allclose(res.avg_inference_acc,
+                               gold["avg_inference_acc"], atol=1e-6)
+    np.testing.assert_allclose(res.inference_accs, gold["inference_accs"],
+                               atol=1e-6)
+    np.testing.assert_allclose(res.val_curve, gold["val_curve"], atol=1e-5)
+    np.testing.assert_allclose(res.total_time_s, gold["total_time_s"],
+                               rtol=1e-5)
+    np.testing.assert_allclose(res.total_energy_j, gold["total_energy_j"],
+                               rtol=1e-5)
+    np.testing.assert_allclose(res.compute_tflops, gold["compute_tflops"],
+                               rtol=1e-5)
+    assert set(res.breakdown) >= set(gold["breakdown"])
+    for k, v in gold["breakdown"].items():
+        np.testing.assert_allclose(res.breakdown[k], v, rtol=1e-5,
+                                   atol=1e-9, err_msg=k)
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+def test_etuner_matches_pre_refactor_runtime(golden):
+    """Full ETuner path: LazyTune + SimFreeze + CKA probe charges +
+    replay sampling from the shared RNG stream."""
+    _check(_run("etuner"), golden["etuner"])
+
+
+def test_hooks_match_pre_refactor_runtime(golden):
+    """SimSiam semi-supervised + fake-quant paths, now RoundHooks, must
+    reproduce the inlined originals exactly."""
+    _check(_run("immed", unlabeled_fraction=0.5, quant_bits=8),
+           golden["semi_quant"])
+
+
+# ---------------------------------------------------------------------------
+# micro-batched serving equivalence
+
+
+def _run_vit(window):
+    model = build_model(get_reduced("deit-tiny"))
+    bench = streams.nc_benchmark(num_classes=10, num_scenarios=3, batches=4,
+                                 batch_size=8, seed=0)
+    ctrl = ETunerController(model, ETunerConfig(
+        lazytune=False, simfreeze=False, detect_scenario_changes=False))
+    rt = ContinualRuntime(model, bench, ctrl, pretrain_epochs=1, seed=0,
+                          inference_window=window, inference_batch=8)
+    return rt.run(inferences_total=12)
+
+
+def test_microbatched_serving_matches_per_request():
+    per_request = _run_vit(0.0)
+    coalesced = _run_vit(10.0)
+    np.testing.assert_allclose(coalesced.inference_accs,
+                               per_request.inference_accs, atol=1e-6)
+    np.testing.assert_allclose(coalesced.avg_inference_acc,
+                               per_request.avg_inference_acc, atol=1e-6)
+    # cost accounting is independent of the serving path
+    assert coalesced.rounds == per_request.rounds
+    np.testing.assert_allclose(coalesced.total_energy_j,
+                               per_request.total_energy_j, rtol=1e-6)

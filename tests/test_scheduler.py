@@ -1,0 +1,208 @@
+"""Unit tests for the decomposed runtime pieces: EventScheduler ordering
+and `busy_until` semantics, CostLedger accounting, and the
+InferenceServer's arrival-time params policy + micro-batched coalescing
+(with a stub model — no jit, no training)."""
+import numpy as np
+import pytest
+
+from repro.data.arrivals import Event
+from repro.runtime.inference import InferenceServer
+from repro.runtime.ledger import BREAKDOWN_KEYS, CostLedger
+from repro.runtime.scheduler import EventScheduler
+
+
+# ---------------------------------------------------------------------------
+# EventScheduler
+
+
+def _drain(sched):
+    order = []
+    sched.run(on_data=lambda ev, b: order.append(("data", ev.time, b)),
+              on_inference=lambda ev: order.append(("inf", ev.time)))
+    return order
+
+
+def test_scheduler_orders_events_by_time():
+    sched = EventScheduler()
+    for t in (5.0, 1.0, 3.0):
+        sched.push(Event(t, "data", 0, 0))
+    sched.push(Event(2.0, "inference", 0, 0))
+    order = _drain(sched)
+    assert [o[1] for o in order] == [1.0, 2.0, 3.0, 5.0]
+    assert sched.dispatched == 4
+    assert len(sched) == 0
+
+
+def test_scheduler_data_before_inference_on_ties():
+    """Ties dispatch data first — matching build_timeline's (time, kind)
+    sort, so a pre-built timeline replays in its constructed order."""
+    sched = EventScheduler([Event(1.0, "inference", 0, 0),
+                            Event(1.0, "data", 0, 0)])
+    order = _drain(sched)
+    assert [o[0] for o in order] == ["data", "inf"]
+
+
+def test_scheduler_stable_for_equal_keys():
+    sched = EventScheduler([Event(1.0, "data", 0, i) for i in range(5)])
+    seen = []
+    sched.run(on_data=lambda ev, b: seen.append(ev.index),
+              on_inference=lambda ev: None)
+    assert seen == [0, 1, 2, 3, 4]
+
+
+def test_scheduler_busy_until_serializes_rounds():
+    sched = EventScheduler()
+    start, end = sched.occupy(2.0, 3.0)
+    assert (start, end) == (2.0, 5.0)
+    assert not sched.idle_at(4.9) and sched.idle_at(5.0)
+    # a round requested while busy starts only when the device frees up
+    start, end = sched.occupy(3.0, 1.0)
+    assert (start, end) == (5.0, 6.0)
+    assert sched.busy_until == 6.0
+
+
+def test_scheduler_scenario_boundary_bookkeeping():
+    events = [Event(0.5, "data", 0, 0), Event(1.0, "data", 1, 0),
+              Event(1.5, "inference", 1, 0), Event(2.0, "data", 2, 0)]
+    sched = EventScheduler(events)
+    changes = []
+    flags = []
+    sched.run(on_data=lambda ev, b: flags.append(b),
+              on_inference=lambda ev: None,
+              on_scenario_change=lambda prev, ev: changes.append(
+                  (prev, ev.scenario)))
+    assert changes == [(0, 1), (1, 2)]
+    assert flags == [False, True, True]
+    assert sched.current_scenario == 2
+
+
+def test_scheduler_accepts_mid_run_pushes():
+    sched = EventScheduler([Event(1.0, "data", 0, 0)])
+    seen = []
+
+    def on_data(ev, boundary):
+        seen.append(ev.time)
+        if ev.time == 1.0:  # inject follow-up work while draining
+            sched.push(Event(4.0, "data", 0, 1))
+
+    sched.run(on_data=on_data, on_inference=lambda ev: None)
+    assert seen == [1.0, 4.0]
+
+
+# ---------------------------------------------------------------------------
+# CostLedger
+
+
+def test_ledger_accumulates_rounds_and_probes():
+    led = CostLedger()
+    assert set(led.breakdown) == set(BREAKDOWN_KEYS)
+    parts = {"t_compute": 1.0, "t_overhead": 2.0,
+             "e_compute": 10.0, "e_overhead": 5.0}
+    led.charge_round(flops=3e12, time_s=3.0, energy_j=15.0, parts=parts)
+    led.charge_round(flops=1e12, time_s=3.0, energy_j=15.0, parts=parts)
+    led.charge_probe("cka", 0.5, 2.5)
+    assert led.rounds == 2
+    assert led.total_time_s == pytest.approx(6.5)
+    assert led.total_energy_j == pytest.approx(32.5)
+    assert led.compute_tflops == pytest.approx(4.0)
+    assert led.breakdown["t_compute"] == pytest.approx(2.0)
+    assert led.breakdown["t_cka"] == pytest.approx(0.5)
+    assert led.breakdown["e_cka"] == pytest.approx(2.5)
+    # totals always reconcile with the breakdown
+    assert sum(led.breakdown[k] for k in
+               ("t_compute", "t_overhead", "t_cka")) == pytest.approx(
+                   led.total_time_s)
+
+
+# ---------------------------------------------------------------------------
+# InferenceServer (stub model: logits are right iff served by "good" params)
+
+
+class _StubModel:
+    def __init__(self):
+        self.calls = 0
+
+    def predict(self, params, batch):
+        self.calls += 1
+        labels = np.asarray(batch["labels"])
+        logits = np.zeros((len(labels), 4), np.float32)
+        if params == "good":
+            logits[np.arange(len(labels)), labels] = 1.0
+        else:  # always answer class 3
+            logits[:, 3] = 1.0
+        return logits
+
+
+def _req(labels):
+    return {"labels": np.asarray(labels, np.int32)}
+
+
+def test_server_per_request_path():
+    model = _StubModel()
+    srv = InferenceServer(model)
+    srv.publish("good", 0.0)
+    srv.submit(1.0, _req([0, 1]))
+    srv.submit(2.0, _req([2, 3]))
+    assert srv.accs == [1.0, 1.0]
+    assert srv.eval_calls == 2 and model.calls == 2
+
+
+def test_server_coalesces_within_window():
+    model = _StubModel()
+    srv = InferenceServer(model, batch_window=1.0)
+    srv.publish("good", 0.0)
+    srv.submit(1.0, _req([0, 1]))
+    srv.submit(1.5, _req([2, 2]))   # within window -> same group
+    srv.submit(5.0, _req([1, 0]))   # beyond window -> flushes first group
+    srv.flush()
+    assert srv.accs == [1.0, 1.0, 1.0]
+    assert srv.served == 3
+    assert srv.eval_calls == 2      # 3 requests, 2 forward passes
+    assert model.calls == 2
+
+
+def test_server_publish_flushes_with_arrival_time_params():
+    """Requests resolve params at arrival: a publish mid-window serves the
+    queued group with the old params before switching."""
+    model = _StubModel()
+    srv = InferenceServer(model, batch_window=10.0)
+    srv.publish("bad", 0.0)
+    srv.submit(1.0, _req([0, 1]))          # resolves to "bad"
+    srv.publish("good", 2.0)               # flushes the queued request
+    srv.submit(3.0, _req([0, 1]))          # resolves to "good"
+    srv.flush()
+    assert srv.accs == [0.0, 1.0]
+
+
+def test_server_expire_flushes_elapsed_window():
+    """A queued group must not be deferred past its window just because no
+    further request arrives — the timeline advancing (expire) flushes it,
+    so detector-mode change signals surface promptly."""
+    model = _StubModel()
+    srv = InferenceServer(model, batch_window=1.0,
+                          on_served=lambda logits: True)
+    srv.publish("good", 0.0)
+    srv.submit(1.0, _req([0]))
+    srv.expire(1.5)                    # still inside the window
+    assert srv.served == 0 and not srv.poll_change()
+    srv.expire(2.5)                    # window elapsed -> group served
+    assert srv.served == 1 and srv.accs == [1.0]
+    assert srv.poll_change() is True
+
+
+def test_server_on_served_latches_change_detection():
+    model = _StubModel()
+    hits = []
+
+    def on_served(logits):
+        hits.append(logits.shape[0])
+        return len(hits) == 2  # "detect" on the second request only
+
+    srv = InferenceServer(model, batch_window=5.0, on_served=on_served)
+    srv.publish("good", 0.0)
+    srv.submit(1.0, _req([0]))
+    srv.submit(1.5, _req([1, 2]))
+    srv.flush()
+    assert hits == [1, 2]               # per-request logits, arrival order
+    assert srv.poll_change() is True
+    assert srv.poll_change() is False   # consumed
