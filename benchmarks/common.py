@@ -7,8 +7,7 @@ from __future__ import annotations
 
 import json
 import os
-import time
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import numpy as np
 

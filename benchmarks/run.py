@@ -9,7 +9,6 @@ XLA-measured FLOPs) — see DESIGN.md §2."""
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 from benchmarks import common as C

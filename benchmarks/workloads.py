@@ -1,0 +1,221 @@
+"""Workload benchmark sweep: every controller x every workload preset.
+
+Runs the four paper controllers (immed / lazytune / simfreeze / etuner)
+against the declarative workload presets (`repro.workloads`) — multi-
+stream, staggered drift, MMPP bursts, diurnal + duty-cycle, mixed — and
+emits a schema'd, machine-readable ``BENCH_workloads.json`` at the repo
+root so the performance trajectory is tracked over time (CI runs the
+``--quick`` sweep on every push and uploads the file as an artifact).
+
+    PYTHONPATH=src python benchmarks/workloads.py --quick
+    PYTHONPATH=src python benchmarks/workloads.py --validate BENCH_workloads.json
+
+Every number is produced by the real runtime (jitted training, XLA-
+measured FLOPs) + the calibrated EdgeCostModel; nothing is hard-coded.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Sequence
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import make_controller
+from repro.configs import get_reduced
+from repro.data import streams
+from repro.models import build_model
+from repro.runtime.continual import ContinualRuntime
+from repro.workloads import WorkloadSpec, compile_workload, presets
+
+SCHEMA_VERSION = 1
+METHODS = ("immed", "lazytune", "simfreeze", "etuner")
+DEFAULT_OUT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "BENCH_workloads.json"))
+
+#: Numeric fields every cell must carry (schema contract with CI).
+CELL_FIELDS = ("acc", "time_s", "energy_j", "tflops", "rounds",
+               "recompiles", "events", "streams", "wall_s")
+
+
+# ---------------------------------------------------------------------------
+# one sweep cell
+
+
+def _stream_benchmarks(spec: WorkloadSpec, seed: int,
+                       batch_size: int) -> Dict[int, object]:
+    """Materialize one continual benchmark per stream (scenario 0 is
+    reserved for pretraining, so each needs num_scenarios + 1)."""
+    benches = {}
+    for i, ss in enumerate(spec.streams):
+        maker = streams.REGISTRY[ss.benchmark]
+        kw = dict(batches=max(ss.batches_per_scenario, 2),
+                  batch_size=batch_size, seed=seed + 13 * i)
+        if ss.benchmark != "s-cifar":
+            kw["num_scenarios"] = spec.num_scenarios + 1
+        benches[i] = maker(**kw)
+    return benches
+
+
+def run_workload(arch: str, spec: WorkloadSpec, method: str, *,
+                 seed: int = 0, batch_size: int = 8,
+                 pretrain_epochs: int = 1,
+                 inference_batch: int = 8) -> Dict:
+    """One (workload, controller) cell: full runtime run, paper metrics +
+    per-stream attribution."""
+    model = build_model(get_reduced(arch))
+    benches = _stream_benchmarks(spec, seed, batch_size)
+    ctrl = make_controller(model, method)
+    events = compile_workload(spec)
+    rt = ContinualRuntime(
+        model, benches[0], ctrl, seed=seed,
+        pretrain_epochs=pretrain_epochs, inference_batch=inference_batch,
+        stream_benchmarks={i: b for i, b in benches.items() if i},
+        controller_factory=lambda st: make_controller(model, method))
+    t0 = time.time()
+    res = rt.run(events=events)
+    return {
+        "workload": spec.name, "method": method,
+        "streams": len(spec.streams), "events": len(events),
+        "acc": res.avg_inference_acc, "time_s": res.total_time_s,
+        "energy_j": res.total_energy_j, "tflops": res.compute_tflops,
+        "rounds": res.rounds, "recompiles": res.recompiles,
+        "wall_s": round(time.time() - t0, 2),
+        "per_stream": {str(k): v for k, v in res.per_stream.items()},
+    }
+
+
+# ---------------------------------------------------------------------------
+# sweep + manifest
+
+
+def sweep(*, quick: bool = True, arch: str = "mobilenetv2", seed: int = 0,
+          workload_names: Optional[Sequence[str]] = None,
+          methods: Sequence[str] = METHODS) -> Dict:
+    scale = (dict(batches_per_scenario=4, inferences=10, num_scenarios=2)
+             if quick else
+             dict(batches_per_scenario=8, inferences=24, num_scenarios=3))
+    specs = presets(seed=seed, **scale)
+    names = list(workload_names) if workload_names else list(specs)
+    cells: List[Dict] = []
+    for name in names:
+        spec = specs[name]
+        base = None
+        for method in methods:
+            cell = run_workload(arch, spec, method, seed=seed)
+            if base is None:
+                base = cell
+            cell["time_norm"] = cell["time_s"] / max(base["time_s"], 1e-9)
+            cell["energy_norm"] = (cell["energy_j"]
+                                   / max(base["energy_j"], 1e-9))
+            cells.append(cell)
+            print(f"workloads,{name}/{method},acc={cell['acc']:.4f} "
+                  f"time={cell['time_s']:.1f}s energy={cell['energy_j']:.1f}J "
+                  f"rounds={cell['rounds']} wall={cell['wall_s']:.0f}s",
+                  flush=True)
+    import jax
+    return {
+        "schema_version": SCHEMA_VERSION, "suite": "workloads",
+        "arch": arch, "seed": seed, "quick": quick,
+        "created_unix": int(time.time()), "jax_version": jax.__version__,
+        "workloads": {n: specs[n].describe() for n in names},
+        "cells": cells,
+    }
+
+
+# ---------------------------------------------------------------------------
+# schema validation (used by CI and tests)
+
+
+def validate_bench(doc: Dict, *, min_workloads: int = 3,
+                   methods: Sequence[str] = METHODS) -> List[str]:
+    """Return a list of schema violations (empty = valid)."""
+    errors: List[str] = []
+    if not isinstance(doc, dict):
+        return ["document is not a JSON object"]
+    if doc.get("schema_version") != SCHEMA_VERSION:
+        errors.append(f"schema_version != {SCHEMA_VERSION}")
+    if doc.get("suite") != "workloads":
+        errors.append("suite != 'workloads'")
+    for key in ("arch", "workloads", "cells", "created_unix"):
+        if key not in doc:
+            errors.append(f"missing top-level key {key!r}")
+    cells = doc.get("cells") or []
+    if not isinstance(cells, list) or not cells:
+        errors.append("cells must be a non-empty list")
+        return errors
+    seen: Dict[str, set] = {}
+    for i, cell in enumerate(cells):
+        for f in CELL_FIELDS:
+            v = cell.get(f)
+            if not isinstance(v, (int, float)) or v != v or v < 0:
+                errors.append(f"cell {i}: field {f!r} missing or not a "
+                              f"non-negative finite number (got {v!r})")
+        if not isinstance(cell.get("per_stream"), dict):
+            errors.append(f"cell {i}: missing per_stream attribution")
+        if "workload" not in cell or "method" not in cell:
+            errors.append(f"cell {i}: missing workload/method labels")
+            continue
+        seen.setdefault(cell["workload"], set()).add(cell["method"])
+    if len(seen) < min_workloads:
+        errors.append(f"only {len(seen)} workload(s) covered; "
+                      f"need >= {min_workloads}")
+    for wl, ms in seen.items():
+        missing = set(methods) - ms
+        if missing:
+            errors.append(f"workload {wl!r}: missing controllers "
+                          f"{sorted(missing)}")
+    return errors
+
+
+# ---------------------------------------------------------------------------
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI scale: 2 scenarios, 4 batches/scenario")
+    ap.add_argument("--arch", default="mobilenetv2")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--workloads", default="",
+                    help="comma-separated preset names (default: all)")
+    ap.add_argument("--methods", default=",".join(METHODS))
+    ap.add_argument("--validate", metavar="PATH",
+                    help="validate an existing BENCH file and exit")
+    args = ap.parse_args()
+
+    if args.validate:
+        with open(args.validate) as f:
+            errors = validate_bench(json.load(f))
+        for e in errors:
+            print(f"SCHEMA ERROR: {e}", file=sys.stderr)
+        print(f"{args.validate}: " +
+              ("INVALID" if errors else "schema valid"))
+        return 1 if errors else 0
+
+    names = [n for n in args.workloads.split(",") if n] or None
+    methods = tuple(m for m in args.methods.split(",") if m)
+    t0 = time.time()
+    doc = sweep(quick=args.quick, arch=args.arch, seed=args.seed,
+                workload_names=names, methods=methods)
+    errors = validate_bench(doc, min_workloads=min(
+        3, len(doc["workloads"])), methods=methods)
+    if errors:
+        for e in errors:
+            print(f"SCHEMA ERROR: {e}", file=sys.stderr)
+        return 1
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {args.out}: {len(doc['cells'])} cells over "
+          f"{len(doc['workloads'])} workloads "
+          f"(wall {time.time() - t0:.0f}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,7 +18,6 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs.base import ModelConfig
-from repro.core import SimFreeze, SimFreezeConfig
 from repro.models import build_model
 from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
 

@@ -3,8 +3,7 @@ to each method's *scheduling decision*; simplifications are noted inline
 and in DESIGN.md."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import List
 
 import jax
 import numpy as np

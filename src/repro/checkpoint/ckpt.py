@@ -22,7 +22,7 @@ import os
 import shutil
 import tempfile
 import threading
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
 import numpy as np

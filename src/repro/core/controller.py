@@ -11,11 +11,11 @@ Ablation switches make the controller cover all four paper configurations:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional, Protocol, runtime_checkable
+from typing import Any, Protocol, runtime_checkable
 
 import numpy as np
 
-from repro.core.freeze_plan import FreezePlan, LayerFreezePlan, all_active
+from repro.core.freeze_plan import LayerFreezePlan, all_active
 from repro.core.lazytune import LazyTune, LazyTuneConfig
 from repro.core.ood import EnergyOODConfig, EnergyOODDetector
 from repro.core.simfreeze import SimFreeze, SimFreezeConfig

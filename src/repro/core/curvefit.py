@@ -15,7 +15,7 @@ to size the next round (``batches_needed``)."""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 import numpy as np
 from scipy.optimize import nnls

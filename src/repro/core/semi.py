@@ -8,7 +8,7 @@ augmentations are jax-native (random crop-shift + flip + channel jitter)
 so the whole objective jits."""
 from __future__ import annotations
 
-from typing import Callable, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

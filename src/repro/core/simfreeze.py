@@ -17,8 +17,8 @@ into skipped backward FLOPs, skipped gradient all-reduce chunks, and
 skipped optimizer updates (DESIGN.md §2)."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from dataclasses import dataclass
+from typing import Callable, List
 
 import numpy as np
 

@@ -4,11 +4,17 @@ a real-world trace). Deterministic given a seed."""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Literal, Sequence, Tuple
+from typing import List, Literal, Sequence
 
 import numpy as np
 
 Kind = Literal["data", "inference"]
+
+#: Tie-break rank at equal timestamps: data batches dispatch before
+#: inference requests. Single source of truth for both the scheduler's
+#: heap ordering and the workload compiler's sort — they must agree or a
+#: pre-sorted timeline would not replay in its constructed order.
+KIND_ORDER = {"data": 0, "inference": 1}
 
 
 @dataclass(frozen=True)
@@ -16,12 +22,17 @@ class Event:
     time: float
     kind: Kind
     scenario: int
-    index: int  # index within its stream
+    index: int   # index within its (stream, kind) sequence
+    stream: int = 0  # arrival stream id (0 = the single legacy stream)
 
 
-def _interarrivals(dist: str, n: int, mean_gap: float,
-                   rng: np.random.Generator,
-                   trace: Sequence[float] = ()) -> np.ndarray:
+def interarrivals(dist: str, n: int, mean_gap: float,
+                  rng: np.random.Generator,
+                  trace: Sequence[float] = ()) -> np.ndarray:
+    """Draw `n` inter-arrival gaps with the given mean from one of the
+    paper's §V-D distributions. Shared by `build_timeline` and the
+    workload generators (repro.workloads.generators), which add the
+    modulated processes (MMPP, diurnal) on top."""
     if n <= 0:
         return np.zeros(0)
     if dist == "poisson":
@@ -56,16 +67,16 @@ def build_timeline(*, num_scenarios: int, batches_per_scenario: int,
     rng = np.random.default_rng(seed)
     events: List[Event] = []
     for s in range(num_scenarios):
-        gaps = _interarrivals(data_dist, batches_per_scenario,
-                              scenario_span / max(batches_per_scenario, 1) * 0.9,
-                              rng)
+        gaps = interarrivals(data_dist, batches_per_scenario,
+                             scenario_span / max(batches_per_scenario, 1) * 0.9,
+                             rng)
         t = s * scenario_span + np.cumsum(gaps)
         t = np.minimum(t, (s + 1) * scenario_span - 1e-3)
         for i, ti in enumerate(t):
             events.append(Event(float(ti), "data", s, i))
     horizon = num_scenarios * scenario_span
-    gaps = _interarrivals(inf_dist, inferences_total,
-                          horizon / max(inferences_total, 1), rng)
+    gaps = interarrivals(inf_dist, inferences_total,
+                         horizon / max(inferences_total, 1), rng)
     t = np.cumsum(gaps)
     t = t * (horizon / max(t[-1], 1e-9)) if len(t) else t
     for i, ti in enumerate(t):

@@ -19,8 +19,8 @@ a 5% validation split (paper §IV-A) and a held-out test set per scenario.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import List
 
 import numpy as np
 

@@ -13,7 +13,6 @@ from __future__ import annotations
 
 import inspect
 from functools import partial
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,12 +8,10 @@ groups; here both are host-device meshes, which exercises the same
 jax.device_put resharding machinery."""
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import numpy as np
-from jax.sharding import Mesh, NamedSharding
-from jax.sharding import PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.configs.base import ModelConfig
 from repro.distributed import sharding as sh

@@ -21,10 +21,9 @@ from __future__ import annotations
 import threading
 from contextlib import contextmanager
 from dataclasses import dataclass
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -292,8 +291,6 @@ def named(mesh: Mesh, spec_tree):
 
 def opt_state_specs(param_spec_tree, opt_state, params):
     """Optimizer moments mirror their parameter's spec; scalars replicate."""
-    import numpy as np
-
     flat_p, _ = jax.tree_util.tree_flatten(params)
     flat_s = jax.tree_util.tree_flatten(param_spec_tree,
                                         is_leaf=lambda x: isinstance(x, P))[0]

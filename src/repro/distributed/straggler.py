@@ -14,8 +14,8 @@ synthetic timing traces; the interfaces are what a multi-host launcher
 would call around each step."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, List
 
 import numpy as np
 

@@ -62,8 +62,12 @@ def cka_terms_pallas(x: jax.Array, y: jax.Array, *, bn: int = 128,
     ni, nk = n // bn, d // bk
     grid = (ni, ni, nk)
 
-    row_block = lambda i, j, k: (i, k)
-    col_block = lambda i, j, k: (j, k)
+    def row_block(i, j, k):
+        return (i, k)
+
+    def col_block(i, j, k):
+        return (j, k)
+
     scalar_spec = pl.BlockSpec((1, 1), lambda i, j, k: (0, 0))
 
     hsic, kk, ll = pl.pallas_call(

@@ -62,7 +62,6 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, *,
         typ = type(cur)
         coerced = (val.lower() in ("1", "true")) if typ is bool else typ(val)
         cfg = cfg.replace(**{key: coerced})
-        record_override = True
     shape = get_shape(shape_name)
     skip = cell_is_applicable(cfg, shape)
     record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,

@@ -2,7 +2,7 @@
 correct, shardable, zero allocation. The dry-run lowers against these."""
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

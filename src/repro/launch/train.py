@@ -18,7 +18,7 @@ from repro.configs import ARCHS, get_reduced
 from repro.core.freeze_plan import FreezePlan
 from repro.distributed import sharding as sh
 from repro.launch.mesh import make_host_mesh
-from repro.models import build_model, transformer as T
+from repro.models import build_model
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 
 

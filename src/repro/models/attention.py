@@ -6,7 +6,7 @@ Shapes follow [B, S, H, hd]. GQA groups Hq query heads onto Hkv KV heads.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

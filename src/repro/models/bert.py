@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.freeze_plan import LayerFreezePlan, maybe_stop
+from repro.core.freeze_plan import maybe_stop
 from repro.models import common
 from repro.models.vit import _ln, _ln_p, init_ffn, init_mha, simple_mha
 

@@ -13,7 +13,7 @@ evaluate with batch statistics as well.
 from __future__ import annotations
 
 import math
-from typing import Any, List, Tuple
+from typing import List
 
 import jax
 import jax.numpy as jnp

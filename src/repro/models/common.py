@@ -167,7 +167,6 @@ def cross_entropy(logits: jax.Array, targets: jax.Array,
     model-axis-sharded) vocab dim — the target logit is picked with an
     elementwise iota comparison that XLA keeps fused and partial-sums."""
     logits = logits.astype(jnp.float32)
-    V = logits.shape[-1]
     m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
     shifted = logits - m
     logz = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))

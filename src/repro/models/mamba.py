@@ -128,7 +128,6 @@ def init_mamba_state(cfg: ModelConfig, batch: int) -> dict:
 def mamba_decode(p: dict, cfg: ModelConfig, x: jax.Array,
                  state: dict) -> Tuple[jax.Array, dict]:
     """x: [B,1,D]; exact recurrent step."""
-    B = x.shape[0]
     di, N, width = d_inner(cfg), cfg.mamba_state, cfg.mamba_conv
     xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
     x1, z = jnp.split(xz[:, 0], 2, axis=-1)              # [B,di]

@@ -12,7 +12,6 @@ kernel; the Pallas kernel in kernels/rwkv keeps the state in VMEM instead
 sequence length, which is why rwkv6-3b runs the long_500k cell."""
 from __future__ import annotations
 
-import math
 from typing import Tuple
 
 import jax

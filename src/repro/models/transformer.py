@@ -16,7 +16,6 @@ is stopped as well (case 3).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -52,7 +51,6 @@ def num_groups(cfg: ModelConfig) -> int:
 
 
 def _init_block(key, cfg: ModelConfig, offset: int) -> dict:
-    dt = common.dtype_of(cfg)
     kind = cfg.layer_kind(offset)
     is_moe = cfg.layer_is_moe(offset)
     k1, k2 = jax.random.split(key)

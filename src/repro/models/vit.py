@@ -2,13 +2,12 @@
 Unrolled pre-LN ViT; freeze units = patch-embed, each encoder block, head."""
 from __future__ import annotations
 
-from typing import List
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.freeze_plan import LayerFreezePlan, maybe_stop
+from repro.core.freeze_plan import maybe_stop
 from repro.models import common
 
 

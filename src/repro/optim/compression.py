@@ -16,7 +16,7 @@ tests/test_compression.py including the convergence-preserving property of
 error feedback."""
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

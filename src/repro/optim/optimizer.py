@@ -13,8 +13,7 @@ Design points for the continual-learning setting:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -102,7 +101,8 @@ def adamw_update(grads, state: AdamWState, params, config: AdamWConfig,
                            params, grads, state.m, state.v)
     else:
         out = jax.tree.map(leaf_update, params, grads, state.m, state.v, masks)
-    is_out = lambda x: isinstance(x, _Out)
+    def is_out(x):
+        return isinstance(x, _Out)
     p_new = jax.tree.map(lambda o: o[0], out, is_leaf=is_out)
     m_new = jax.tree.map(lambda o: o[1], out, is_leaf=is_out)
     v_new = jax.tree.map(lambda o: o[2], out, is_leaf=is_out)
@@ -155,7 +155,8 @@ def sgdm_update(grads, state: SGDMState, params, config: SGDMConfig,
                            params, grads, state.mom)
     else:
         out = jax.tree.map(leaf, params, grads, state.mom, masks)
-    is_out = lambda x: isinstance(x, _Out)
+    def is_out(x):
+        return isinstance(x, _Out)
     p_new = jax.tree.map(lambda o: o[0], out, is_leaf=is_out)
     m_new = jax.tree.map(lambda o: o[1], out, is_leaf=is_out)
     return p_new, SGDMState(step=state.step + 1, mom=m_new)

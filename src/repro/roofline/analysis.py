@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
@@ -66,7 +66,6 @@ class CollectiveStats:
 
 def parse_collectives(hlo_text: str) -> CollectiveStats:
     stats = CollectiveStats()
-    seen_done = set()
     for line in hlo_text.splitlines():
         m = _OP_RE.search(line)
         if not m:

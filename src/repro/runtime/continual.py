@@ -38,7 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -51,7 +51,7 @@ from repro.runtime.executor import (FakeQuantHook, FineTuneExecutor,
                                     ReplayBuffer, RoundHook, SimSiamHook,
                                     fake_quant, quantized_model)
 from repro.runtime.inference import InferenceServer
-from repro.runtime.ledger import CostLedger
+from repro.runtime.ledger import STREAM_KEYS, CostLedger
 from repro.runtime.scheduler import EventScheduler
 from repro.runtime.train_loop import (TrainStepCache, as_jnp, evaluate,
                                      make_optimizer_state)
@@ -73,6 +73,9 @@ class RunResult:
     breakdown: Dict[str, float] = field(default_factory=dict)
     controller_stats: Dict[str, Any] = field(default_factory=dict)
     val_curve: List[float] = field(default_factory=list)
+    # per-arrival-stream attribution (multi-stream workloads): stream id ->
+    # {time_s, energy_j, flops, rounds, avg_inference_acc, inferences}
+    per_stream: Dict[int, Dict[str, float]] = field(default_factory=dict)
 
     def summary(self) -> str:
         return (f"acc={self.avg_inference_acc*100:.2f}% "
@@ -93,10 +96,18 @@ class ContinualRuntime:
                  unlabeled_fraction: float = 0.0,
                  calibrate_cost: bool = True,
                  inference_window: float = 0.0,
-                 extra_hooks: Optional[List[RoundHook]] = None):
+                 extra_hooks: Optional[List[RoundHook]] = None,
+                 stream_benchmarks: Optional[Dict[int, ContinualBenchmark]] = None,
+                 controller_factory: Optional[Callable[[int], Any]] = None):
         self.model = model
         self.bench = benchmark
         self.controller = controller
+        # multi-stream workloads: stream id -> its own benchmark (falls back
+        # to `benchmark`); streams > 0 get controllers from
+        # `controller_factory(stream)` when given, else share `controller`
+        # (one policy object observing every stream).
+        self.stream_benchmarks = dict(stream_benchmarks or {})
+        self.controller_factory = controller_factory
         self.cost = cost_model
         self.opt_cfg = opt_cfg or AdamWConfig(lr=1e-3)
         self.seed = seed
@@ -148,7 +159,18 @@ class ContinualRuntime:
                       for e in events]
 
         # --- compose the subsystems -------------------------------------
-        ctrl = self.controller
+        # per-stream policy state: stream 0 is the primary controller;
+        # extra streams (multi-stream workloads) get their own controller
+        # from the factory, or share the primary one.
+        stream_ids = sorted({e.stream for e in events}) or [0]
+        controllers: Dict[int, Any] = {}
+        for st in stream_ids:
+            if st == 0 or self.controller_factory is None:
+                controllers[st] = self.controller
+            else:
+                controllers[st] = self.controller_factory(st)
+        benches = {st: self.stream_benchmarks.get(st, bench)
+                   for st in stream_ids}
         ledger = CostLedger()
         replay = ReplayBuffer(bench.scenarios[0].train_batches[:self.replay_batches])
         executor = FineTuneExecutor(self.steps, self.cost, ledger, replay,
@@ -156,19 +178,30 @@ class ContinualRuntime:
                                     calibrate_cost=self.calibrate_cost)
         executor.load(params, opt_state)
         scheduler = EventScheduler(events)
+        pending_change = {st: False for st in stream_ids}
+
+        def served(logits, stream=0) -> bool:
+            # route the request's logits to its stream's controller; a True
+            # return (detected scenario change) is latched per stream.
+            hit = controllers.get(stream, self.controller).inference_served(logits)
+            if hit:
+                pending_change[stream] = True
+            return hit
+
         server = InferenceServer(model, batch_window=self.inference_window,
-                                 on_served=ctrl.inference_served)
+                                 on_served=served)
         server.publish(params, 0.0)
         val_curve: List[float] = []
-        pending_change = False
 
-        def finish_round(now: float) -> None:
-            report = executor.execute_round(ctrl.plan, now, scheduler)
+        def finish_round(now: float, stream: int = 0) -> None:
+            ctrl = controllers[stream]
+            report = executor.execute_round(ctrl.plan, now, scheduler,
+                                            stream=stream)
             if report is None:
                 return
             server.publish(executor.params, report.end)
             # validation accuracy (labeled 5% split) -> LazyTune
-            val = bench.scenarios[scheduler.current_scenario].val
+            val = benches[stream].scenarios[scheduler.scenario_of(stream)].val
             val_acc, _ = evaluate(model, executor.params, as_jnp(val))
             val_curve.append(val_acc)
             cka_before = ctrl.simfreeze.state.cka_flops \
@@ -178,57 +211,69 @@ class ContinualRuntime:
                 dcka = ctrl.simfreeze.state.cka_flops - cka_before
                 if dcka:
                     tc, ec = executor.cost.compute_cost(dcka)
-                    ledger.charge_probe("cka", tc, ec)
+                    ledger.charge_probe("cka", tc, ec, stream=stream)
 
         def on_scenario_change(previous: int, ev: Event) -> None:
             # keep a replay sample of the just-entered scenario
-            sc = bench.scenarios[ev.scenario]
+            sc = benches[ev.stream].scenarios[ev.scenario]
             replay.add(sc.train_batches[ev.index % len(sc.train_batches)])
 
         def on_data(ev: Event, boundary: bool) -> None:
-            nonlocal pending_change
-            sc = bench.scenarios[ev.scenario]
+            st = ev.stream
+            ctrl = controllers[st]
+            sc = benches[st].scenarios[ev.scenario]
             batch = sc.train_batches[ev.index % len(sc.train_batches)]
             # bound micro-batch deferral: a queued group whose window has
             # elapsed is served now, so controller signals driven by
             # inference_served (LazyTune decay, scenario detection) lag by
             # at most one window.
             server.expire(ev.time)
-            if self.boundaries == "detector" and server.poll_change():
-                pending_change = True
-            if (boundary and self.boundaries == "oracle") or pending_change:
-                pending_change = False
+            change = pending_change[st] and self.boundaries == "detector"
+            if (boundary and self.boundaries == "oracle") or change:
+                pending_change[st] = False
                 if ctrl.plan is not None and hasattr(ctrl, "scenario_changed"):
                     ctrl.scenario_changed(executor.params, as_jnp(batch))
             if getattr(ctrl, "needs_reference", True) and \
                     hasattr(ctrl, "start_scenario") and \
-                    (boundary or (scheduler.current_scenario and not getattr(
+                    (boundary or (scheduler.scenario_of(st) and not getattr(
                         ctrl, "_scenario_started", False))):
                 ctrl.start_scenario(reference_params, as_jnp(batch))
                 ctrl._scenario_started = True
-            executor.enqueue(batch)
-            if ctrl.should_trigger(executor.pending) and \
+            executor.enqueue(batch, stream=st)
+            if ctrl.should_trigger(executor.pending_for(st)) and \
                     scheduler.idle_at(ev.time):
-                finish_round(ev.time)
+                finish_round(ev.time, st)
 
         def on_inference(ev: Event) -> None:
-            cur = scheduler.current_scenario
-            sc = bench.scenarios[min(ev.scenario, cur) or ev.scenario]
-            test = bench.scenarios[max(cur, 1)].test \
+            st = ev.stream
+            b = benches[st]
+            cur = scheduler.scenario_of(st)
+            sc = b.scenarios[min(ev.scenario, cur) or ev.scenario]
+            test = b.scenarios[max(cur, 1)].test \
                 if ev.scenario <= cur else sc.test
             idx = rng.choice(len(test["labels"]),
                              min(self.inference_batch, len(test["labels"])),
                              replace=False)
-            server.submit(ev.time, {k: v[idx] for k, v in test.items()})
+            server.submit(ev.time, {k: v[idx] for k, v in test.items()},
+                          stream=st)
 
         scheduler.run(on_data=on_data, on_inference=on_inference,
                       on_scenario_change=on_scenario_change)
         server.flush()
         # trailing flush: any buffered data still fine-tunes (no data dropped)
-        if executor.pending:
-            finish_round(scheduler.busy_until)
+        for st in executor.pending_streams:
+            finish_round(scheduler.busy_until, st)
 
+        ctrl = self.controller
         stats = ctrl.stats() if hasattr(ctrl, "stats") else {}
+        per_stream: Dict[int, Dict[str, float]] = {}
+        for st in stream_ids:
+            cell = dict(ledger.per_stream.get(
+                st, {k: 0.0 for k in STREAM_KEYS}))
+            accs = server.accs_by_stream.get(st, [])
+            cell["avg_inference_acc"] = float(np.mean(accs)) if accs else 0.0
+            cell["inferences"] = float(len(accs))
+            per_stream[st] = cell
         return RunResult(
             avg_inference_acc=server.avg_acc,
             total_time_s=ledger.total_time_s,
@@ -236,4 +281,4 @@ class ContinualRuntime:
             compute_tflops=ledger.compute_tflops, rounds=ledger.rounds,
             recompiles=self.steps.recompiles, inference_accs=server.accs,
             breakdown=ledger.breakdown, controller_stats=stats,
-            val_curve=val_curve)
+            val_curve=val_curve, per_stream=per_stream)

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -177,7 +177,10 @@ class FineTuneExecutor:
         self.rng = rng
         self.hooks = list(hooks)
         self.calibrate_cost = calibrate_cost
-        self.buffer: List[dict] = []
+        # pending batches, bucketed by arrival stream: a round drains one
+        # stream's bucket (multi-stream workloads share the device and the
+        # params, but trigger and account per stream)
+        self.buffers: Dict[int, List[dict]] = {}
         self.compiled_plans = set()
         self.params = None
         self.opt_state = None
@@ -187,27 +190,36 @@ class FineTuneExecutor:
         self.params = params
         self.opt_state = opt_state
 
-    def enqueue(self, batch: dict) -> None:
-        self.buffer.append(batch)
+    def enqueue(self, batch: dict, stream: int = 0) -> None:
+        self.buffers.setdefault(stream, []).append(batch)
 
     @property
     def pending(self) -> int:
-        return len(self.buffer)
+        """Total buffered batches across all streams."""
+        return sum(len(b) for b in self.buffers.values())
+
+    def pending_for(self, stream: int) -> int:
+        return len(self.buffers.get(stream, ()))
+
+    @property
+    def pending_streams(self) -> List[int]:
+        return sorted(s for s, b in self.buffers.items() if b)
 
     # ---- round -----------------------------------------------------------
-    def execute_round(self, plan, now: float, scheduler) -> Optional[RoundReport]:
-        """Train one round on everything buffered (plus one replay batch),
-        charge the ledger, and reserve device time on the scheduler.
-        Returns None when nothing is buffered."""
-        if not self.buffer:
+    def execute_round(self, plan, now: float, scheduler,
+                      stream: int = 0) -> Optional[RoundReport]:
+        """Train one round on everything buffered for `stream` (plus one
+        replay batch), charge the ledger (attributed to that stream), and
+        reserve device time on the scheduler. Returns None when nothing is
+        buffered."""
+        if not self.buffers.get(stream):
             return None
         recompile = 0
         if plan not in self.compiled_plans:
             self.compiled_plans.add(plan)
             recompile = 1
         step = self.steps.get(plan)
-        batches = list(self.buffer)
-        self.buffer.clear()
+        batches = self.buffers.pop(stream)
         if self.replay:
             batches.append(self.replay.sample(self.rng))
         for h in self.hooks:
@@ -235,7 +247,7 @@ class FineTuneExecutor:
             self.calibrate_cost = False
         t, e, parts = self.cost.round_cost(flops, recompiles=recompile)
         self.ledger.charge_round(flops=flops, time_s=t, energy_j=e,
-                                 parts=parts)
+                                 parts=parts, stream=stream)
         start, end = scheduler.occupy(now, t)
         return RoundReport(iters=len(batches), flops=flops, time_s=t,
                            energy_j=e, recompiled=bool(recompile),

@@ -42,19 +42,24 @@ class _Pending:
     time: float
     request: Dict[str, np.ndarray]
     params: Any  # resolved at submit time (arrival-time visibility policy)
+    stream: int = 0  # arrival stream (multi-stream workloads)
 
 
 class InferenceServer:
     """Request queue + params-visibility policy + optional micro-batching.
 
-    `on_served(logits) -> bool` is invoked once per request, in arrival
-    order, with that request's logits; a True return is latched into
-    `change_detected` (the energy-score scenario detector's signal) until
-    the composition root consumes it via `poll_change`.
+    `on_served(logits, stream) -> bool` is invoked once per request, in
+    arrival order, with that request's logits and arrival-stream id (so a
+    multi-stream composition root can route the signal to that stream's
+    controller). A True return is additionally latched into
+    `change_detected` / `poll_change` — a stream-agnostic convenience
+    latch for embedders that don't track per-stream state themselves
+    (runtime/continual.py latches per stream inside its own callback
+    instead).
     """
 
     def __init__(self, model, *, batch_window: float = 0.0,
-                 on_served: Optional[Callable[[np.ndarray], bool]] = None):
+                 on_served: Optional[Callable[[np.ndarray, int], bool]] = None):
         self.model = model
         self.batch_window = float(batch_window)
         self.on_served = on_served
@@ -63,8 +68,9 @@ class InferenceServer:
         self.visible_params = None
         self.visible_at = 0.0
         self.latest_params = None
-        # recorded outcomes
+        # recorded outcomes (global, plus a per-stream view)
         self.accs: List[float] = []
+        self.accs_by_stream: Dict[int, List[float]] = {}
         self.served = 0
         self.eval_calls = 0
         self.change_detected = False
@@ -85,18 +91,22 @@ class InferenceServer:
         return self.visible_params if t >= self.visible_at else self.latest_params
 
     # ---- request path ----------------------------------------------------
-    def submit(self, t: float, request: Dict[str, np.ndarray]) -> None:
-        """Serve (or enqueue) one inference request arriving at time `t`.
-        The params are resolved *now* — arrival-time visibility — so
-        coalescing never changes which model state answers a request."""
+    def submit(self, t: float, request: Dict[str, np.ndarray],
+               stream: int = 0) -> None:
+        """Serve (or enqueue) one inference request arriving at time `t` on
+        arrival stream `stream`. The params are resolved *now* —
+        arrival-time visibility — so coalescing never changes which model
+        state answers a request. Requests from different streams may share
+        a coalesced group (one device, one forward pass); accuracy
+        recording and `on_served` routing stay per-request."""
         params = self._resolve(t)
         if self.batch_window <= 0.0:
-            self._serve([_Pending(t, request, params)])
+            self._serve([_Pending(t, request, params, stream)])
             return
         if self._queue and (t - self._queue[0].time > self.batch_window
                             or self._queue[0].params is not params):
             self.flush()
-        self._queue.append(_Pending(t, request, params))
+        self._queue.append(_Pending(t, request, params, stream))
 
     def flush(self) -> None:
         if self._queue:
@@ -142,8 +152,9 @@ class InferenceServer:
 
     def _record(self, p: _Pending, acc: float, logits) -> None:
         self.accs.append(acc)
+        self.accs_by_stream.setdefault(p.stream, []).append(acc)
         self.served += 1
-        if self.on_served is not None and self.on_served(logits):
+        if self.on_served is not None and self.on_served(logits, p.stream):
             self.change_detected = True
 
     # ---- reporting -------------------------------------------------------

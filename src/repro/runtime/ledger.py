@@ -20,6 +20,13 @@ BREAKDOWN_KEYS = ("t_compute", "t_overhead", "e_compute", "e_overhead",
                   "t_cka", "e_cka")
 
 
+#: Per-stream attribution keys: every charge lands both in the global
+#: totals and in `per_stream[stream]` under these names, so a multi-stream
+#: run can answer "which stream spent the joules" (and tests can assert the
+#: attributions always sum back to the totals).
+STREAM_KEYS = ("time_s", "energy_j", "flops", "rounds")
+
+
 @dataclass
 class CostLedger:
     total_time_s: float = 0.0
@@ -28,19 +35,31 @@ class CostLedger:
     rounds: int = 0
     breakdown: Dict[str, float] = field(
         default_factory=lambda: {k: 0.0 for k in BREAKDOWN_KEYS})
+    per_stream: Dict[int, Dict[str, float]] = field(default_factory=dict)
+
+    def _stream(self, stream: int) -> Dict[str, float]:
+        return self.per_stream.setdefault(
+            stream, {k: 0.0 for k in STREAM_KEYS})
 
     def charge_round(self, *, flops: float, time_s: float, energy_j: float,
-                     parts: Dict[str, float]) -> None:
+                     parts: Dict[str, float], stream: int = 0) -> None:
         """One fine-tuning round: `parts` is EdgeCostModel's breakdown dict
-        (t_compute/t_overhead/e_compute/e_overhead)."""
+        (t_compute/t_overhead/e_compute/e_overhead); `stream` is the
+        arrival stream whose buffered batches the round trained."""
         self.total_time_s += time_s
         self.total_energy_j += energy_j
         self.total_flops += flops
         self.rounds += 1
         for k in ("t_compute", "t_overhead", "e_compute", "e_overhead"):
             self.breakdown[k] += parts[k]
+        per = self._stream(stream)
+        per["time_s"] += time_s
+        per["energy_j"] += energy_j
+        per["flops"] += flops
+        per["rounds"] += 1
 
-    def charge_probe(self, key: str, time_s: float, energy_j: float) -> None:
+    def charge_probe(self, key: str, time_s: float, energy_j: float,
+                     stream: int = 0) -> None:
         """An auxiliary compute charge outside the round proper (e.g. `key`
         = 'cka'). Adds to the totals and to `t_<key>` / `e_<key>`."""
         time_s, energy_j = float(time_s), float(energy_j)
@@ -48,6 +67,9 @@ class CostLedger:
         self.breakdown[f"e_{key}"] = self.breakdown.get(f"e_{key}", 0.0) + energy_j
         self.total_time_s += time_s
         self.total_energy_j += energy_j
+        per = self._stream(stream)
+        per["time_s"] += time_s
+        per["energy_j"] += energy_j
 
     @property
     def compute_tflops(self) -> float:

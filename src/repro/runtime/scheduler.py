@@ -17,14 +17,13 @@ composition root in response to the callbacks emitted here.
 from __future__ import annotations
 
 import heapq
-from typing import Callable, Iterable, Optional
+from typing import Callable, Dict, Iterable, Optional
 
-from repro.data.arrivals import Event
-
-# Events pop in (time, kind, insertion-order) order: `"data" < "inference"`
-# lexicographically, matching data/arrivals.build_timeline's sort, so a
-# pre-built timeline replays in exactly its constructed order.
-_KIND_ORDER = {"data": 0, "inference": 1}
+# Events pop in (time, kind, insertion-order) order: `"data" <
+# "inference"` (KIND_ORDER), matching build_timeline's sort and
+# workloads/generators.compile_workload's, so a pre-built timeline
+# replays in exactly its constructed order.
+from repro.data.arrivals import KIND_ORDER, Event
 
 OnData = Callable[[Event, bool], None]          # (event, scenario_boundary)
 OnInference = Callable[[Event], None]
@@ -40,9 +39,16 @@ class EventScheduler:
     - `occupy(start, duration)` models the device being busy: the actual
       start is delayed past any in-flight work (`busy_until`), and the new
       `busy_until` is returned so callers can timestamp visibility.
-    - `current_scenario` advances when a data event from a later scenario
-      is dispatched; the boundary is surfaced both via `on_scenario_change`
-      and the `scenario_boundary` flag on `on_data`.
+    - scenario progress is tracked **per stream** (`scenario_of(stream)`):
+      a stream's counter advances when one of its data events carries a new
+      scenario id; the boundary is surfaced both via `on_scenario_change`
+      and the `scenario_boundary` flag on `on_data`. Streams progress
+      independently — stream 1 may still be in scenario 1 while stream 0
+      has drifted to scenario 3.
+    - `current_scenario` keeps its legacy meaning: the scenario id of the
+      most recent data-event boundary, regardless of stream. Single-stream
+      timelines (every event on stream 0) see exactly the pre-multi-stream
+      behaviour; multi-stream callers should use `scenario_of`.
     """
 
     def __init__(self, events: Iterable[Event] = ()):
@@ -51,18 +57,28 @@ class EventScheduler:
         self.now = 0.0
         self.busy_until = 0.0
         self.current_scenario = 0
+        self.stream_scenarios: Dict[int, int] = {}
         self.dispatched = 0
         for e in events:
             self.push(e)
 
     # ---- queue -----------------------------------------------------------
     def push(self, event: Event) -> None:
-        key = (event.time, _KIND_ORDER.get(event.kind, 2), self._seq)
+        key = (event.time, KIND_ORDER.get(event.kind, 2), self._seq)
         heapq.heappush(self._heap, (key, event))
         self._seq += 1
 
     def __len__(self) -> int:
         return len(self._heap)
+
+    @property
+    def streams(self):
+        """Stream ids that have dispatched at least one data event."""
+        return sorted(self.stream_scenarios)
+
+    def scenario_of(self, stream: int = 0) -> int:
+        """Current scenario of one stream (0 until its first data event)."""
+        return self.stream_scenarios.get(stream, 0)
 
     # ---- device occupancy ------------------------------------------------
     def idle_at(self, t: float) -> bool:
@@ -87,12 +103,15 @@ class EventScheduler:
             self.now = max(self.now, ev.time)
             self.dispatched += 1
             if ev.kind == "data":
-                boundary = ev.scenario != self.current_scenario
+                previous = self.stream_scenarios.get(ev.stream, 0)
+                boundary = ev.scenario != previous
                 if boundary:
-                    previous = self.current_scenario
+                    self.stream_scenarios[ev.stream] = ev.scenario
                     self.current_scenario = ev.scenario
                     if on_scenario_change is not None:
                         on_scenario_change(previous, ev)
+                elif ev.stream not in self.stream_scenarios:
+                    self.stream_scenarios[ev.stream] = ev.scenario
                 on_data(ev, boundary)
             else:
                 on_inference(ev)

@@ -4,7 +4,6 @@ decode-shape dry-runs."""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional
 
 import jax
 import jax.numpy as jnp

@@ -4,13 +4,12 @@ FLOPs per plan for the cost model."""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.optim import (AdamWConfig, SGDMConfig, adamw_init, adamw_update,
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
                          sgdm_init, sgdm_update)
 
 

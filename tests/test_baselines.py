@@ -60,7 +60,7 @@ def test_rigl_masks_and_flops_scale(setup):
     ctrl = RigLController(model, with_lazytune=False, sparsity=0.5)
     wrapped = ctrl.wrap_model()
     rt = ContinualRuntime(wrapped, bench, ctrl, pretrain_epochs=1)
-    res = rt.run(inferences_total=8)
+    rt.run(inferences_total=8)
     assert ctrl.masks is not None
     dens = [float(np.mean(np.asarray(m))) for m in jax.tree.leaves(ctrl.masks)
             if np.asarray(m).ndim >= 2]

@@ -1,12 +1,11 @@
 """Unit tests for the ETuner core: curve fit, LazyTune, SimFreeze, OOD,
 freeze plans."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import (AccuracyCurve, EnergyOODConfig, EnergyOODDetector,
-                        FreezePlan, LayerFreezePlan, LazyTune, LazyTuneConfig,
+                        FreezePlan, LazyTune, LazyTuneConfig,
                         SimFreeze, SimFreezeConfig, all_active, cka,
                         fit_accuracy_curve, lm_segments)
 
@@ -94,8 +93,7 @@ def test_cka_self_is_one():
 
 
 def test_cka_forms_agree():
-    from repro.core.cka import (_center, _flatten_features, cka_example_form,
-                                cka_feature_form)
+    from repro.core.cka import _center, cka_example_form, cka_feature_form
 
     rng = np.random.default_rng(1)
     x = _center(jnp.asarray(rng.normal(size=(48, 96)), jnp.float32))

@@ -6,9 +6,6 @@ import subprocess
 import sys
 import textwrap
 
-import numpy as np
-import pytest
-
 from repro.distributed.straggler import StragglerConfig, StragglerTracker
 
 

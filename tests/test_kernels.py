@@ -1,6 +1,5 @@
 """Per-kernel validation: shape/dtype sweeps, interpret-mode Pallas body vs
 pure-jnp oracle (ref.py)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

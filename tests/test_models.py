@@ -7,7 +7,6 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS, PAPER_MODELS, get_reduced
-from repro.core.freeze_plan import FreezePlan, LayerFreezePlan
 from repro.models import build_model
 
 RNG = jax.random.PRNGKey(7)

@@ -3,7 +3,6 @@ dispatch equivalence."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_reduced
 from repro.models import moe

@@ -1,12 +1,10 @@
 """Roofline machinery: HLO collective parsing, per-device cost accounting,
 model-FLOPs estimates."""
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.configs.base import TRAIN_4K, DECODE_32K, PREFILL_32K
+from repro.configs.base import TRAIN_4K, DECODE_32K
 from repro.roofline import analysis as RA
 
 

@@ -89,6 +89,57 @@ def test_scheduler_accepts_mid_run_pushes():
     assert seen == [1.0, 4.0]
 
 
+def test_scheduler_per_stream_scenario_counters():
+    """Streams drift independently: each stream's boundary fires on *its*
+    scenario progression, not the interleaved global one."""
+    events = [Event(1.0, "data", 1, 0, stream=0),
+              Event(2.0, "data", 1, 0, stream=1),   # same scenario, new stream
+              Event(3.0, "data", 2, 1, stream=0),   # stream 0 drifts first
+              Event(4.0, "data", 1, 1, stream=1),   # stream 1 still in 1
+              Event(5.0, "data", 2, 2, stream=1)]   # now stream 1 drifts
+    sched = EventScheduler(events)
+    boundaries = []
+    changes = []
+    sched.run(on_data=lambda ev, b: boundaries.append((ev.stream, ev.scenario, b)),
+              on_inference=lambda ev: None,
+              on_scenario_change=lambda prev, ev: changes.append(
+                  (ev.stream, prev, ev.scenario)))
+    assert boundaries == [(0, 1, True), (1, 1, True), (0, 2, True),
+                          (1, 1, False), (1, 2, True)]
+    assert changes == [(0, 0, 1), (1, 0, 1), (0, 1, 2), (1, 1, 2)]
+    assert sched.scenario_of(0) == 2 and sched.scenario_of(1) == 2
+    assert sched.streams == [0, 1]
+
+
+def test_scheduler_multi_stream_dispatch_deterministic():
+    """Dispatch over interleaved streams is time-ordered and identical
+    across replays (ties: data before inference, then insertion order)."""
+    events = [Event(3.0, "inference", 1, 0, stream=1),
+              Event(3.0, "data", 1, 0, stream=0),
+              Event(1.0, "data", 1, 0, stream=1),
+              Event(2.0, "data", 1, 1, stream=1),
+              Event(2.0, "inference", 1, 0, stream=0)]
+    orders = []
+    for _ in range(2):
+        sched = EventScheduler(events)
+        seen = []
+        sched.run(on_data=lambda ev, b: seen.append(("d", ev.time, ev.stream)),
+                  on_inference=lambda ev: seen.append(("i", ev.time, ev.stream)))
+        orders.append(seen)
+    assert orders[0] == orders[1]
+    assert orders[0] == [("d", 1.0, 1), ("d", 2.0, 1), ("i", 2.0, 0),
+                         ("d", 3.0, 0), ("i", 3.0, 1)]
+    assert [t for _, t, _ in orders[0]] == sorted(t for _, t, _ in orders[0])
+
+
+def test_scheduler_single_stream_current_scenario_legacy():
+    """`current_scenario` keeps its pre-multi-stream meaning for stream-0
+    timelines (the golden regression path)."""
+    sched = EventScheduler([Event(1.0, "data", 1, 0), Event(2.0, "data", 2, 0)])
+    sched.run(on_data=lambda ev, b: None, on_inference=lambda ev: None)
+    assert sched.current_scenario == 2 == sched.scenario_of(0)
+
+
 # ---------------------------------------------------------------------------
 # CostLedger
 
@@ -112,6 +163,27 @@ def test_ledger_accumulates_rounds_and_probes():
     assert sum(led.breakdown[k] for k in
                ("t_compute", "t_overhead", "t_cka")) == pytest.approx(
                    led.total_time_s)
+
+
+def test_ledger_per_stream_attribution_sums_to_totals():
+    led = CostLedger()
+    parts = {"t_compute": 1.0, "t_overhead": 2.0,
+             "e_compute": 10.0, "e_overhead": 5.0}
+    led.charge_round(flops=2e12, time_s=3.0, energy_j=15.0, parts=parts,
+                     stream=0)
+    led.charge_round(flops=1e12, time_s=3.0, energy_j=15.0, parts=parts,
+                     stream=1)
+    led.charge_round(flops=1e12, time_s=3.0, energy_j=15.0, parts=parts,
+                     stream=1)
+    led.charge_probe("cka", 0.5, 2.5, stream=1)
+    assert set(led.per_stream) == {0, 1}
+    assert led.per_stream[0]["rounds"] == 1 and led.per_stream[1]["rounds"] == 2
+    for total, key in ((led.total_time_s, "time_s"),
+                       (led.total_energy_j, "energy_j"),
+                       (led.total_flops, "flops"),
+                       (led.rounds, "rounds")):
+        assert sum(v[key] for v in led.per_stream.values()) == \
+            pytest.approx(total)
 
 
 # ---------------------------------------------------------------------------
@@ -180,7 +252,7 @@ def test_server_expire_flushes_elapsed_window():
     so detector-mode change signals surface promptly."""
     model = _StubModel()
     srv = InferenceServer(model, batch_window=1.0,
-                          on_served=lambda logits: True)
+                          on_served=lambda logits, stream: True)
     srv.publish("good", 0.0)
     srv.submit(1.0, _req([0]))
     srv.expire(1.5)                    # still inside the window
@@ -190,11 +262,33 @@ def test_server_expire_flushes_elapsed_window():
     assert srv.poll_change() is True
 
 
+def test_server_per_stream_accuracy_and_signal_routing():
+    """Requests carry their arrival stream: per-stream accuracy views are
+    recorded, and `on_served` receives the stream id (so a multi-stream
+    composition root can route controller signals)."""
+    model = _StubModel()
+    routed = []
+
+    def on_served(logits, stream):
+        routed.append(stream)
+        return False
+
+    srv = InferenceServer(model, batch_window=10.0, on_served=on_served)
+    srv.publish("good", 0.0)
+    srv.submit(1.0, _req([0]), stream=0)
+    srv.submit(1.5, _req([1, 2]), stream=1)  # same group, different stream
+    srv.flush()
+    assert routed == [0, 1]
+    assert srv.eval_calls == 1               # still one coalesced pass
+    assert srv.accs_by_stream == {0: [1.0], 1: [1.0]}
+    assert srv.accs == [1.0, 1.0]
+
+
 def test_server_on_served_latches_change_detection():
     model = _StubModel()
     hits = []
 
-    def on_served(logits):
+    def on_served(logits, stream):
         hits.append(logits.shape[0])
         return len(hits) == 2  # "detect" on the second request only
 

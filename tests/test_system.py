@@ -8,7 +8,6 @@ paper's main claims, at reduced scale):
 - checkpoint/restart mid-stream resumes losslessly
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

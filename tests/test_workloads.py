@@ -1,0 +1,252 @@
+"""Workload subsystem tests: spec validation, generator bit-
+reproducibility and structure (ordering, stream tags, duty-cycle windows,
+staggered drift), the two-stream runtime's per-stream cost attribution,
+and the BENCH_workloads.json schema validator."""
+import numpy as np
+import pytest
+
+from repro.workloads import (DutyCycle, StreamSpec, WorkloadSpec,
+                             compile_workload, presets)
+
+SPECS = presets(batches_per_scenario=6, inferences=16, num_scenarios=3)
+
+
+# ---------------------------------------------------------------------------
+# spec validation
+
+
+def test_spec_validation_rejects_bad_configs():
+    with pytest.raises(ValueError):
+        WorkloadSpec("empty", ()).validate()
+    with pytest.raises(ValueError):
+        WorkloadSpec("bad-dist", (StreamSpec(data_dist="weibull"),)).validate()
+    with pytest.raises(ValueError):
+        WorkloadSpec("bad-drift", (StreamSpec(),), drift="chaos").validate()
+    with pytest.raises(ValueError):  # modulated dists need their configs
+        WorkloadSpec("no-cfg", (StreamSpec(inf_dist="mmpp"),)).validate()
+    with pytest.raises(ValueError):
+        WorkloadSpec("bad-duty", (StreamSpec(
+            duty_cycle=DutyCycle(on_fraction=0.0)),)).validate()
+    from repro.workloads import DiurnalConfig, MMPPConfig
+    with pytest.raises(ValueError):  # rate would go negative (amplitude>1)
+        WorkloadSpec("bad-diurnal", (StreamSpec(
+            inf_dist="diurnal",
+            diurnal=DiurnalConfig(amplitude=1.5)),)).validate()
+    with pytest.raises(ValueError):  # non-positive multipliers
+        WorkloadSpec("bad-mmpp", (StreamSpec(
+            inf_dist="mmpp",
+            mmpp=MMPPConfig(burst_mult=0.0)),)).validate()
+
+
+# ---------------------------------------------------------------------------
+# generators
+
+
+@pytest.mark.parametrize("name", sorted(SPECS))
+def test_compile_is_bit_reproducible(name):
+    """The compiled timeline is a pure function of the spec — two compiles
+    (and a compile of an equal copy) produce identical event lists."""
+    spec = SPECS[name]
+    first = compile_workload(spec)
+    assert compile_workload(spec) == first
+    import dataclasses
+    assert compile_workload(dataclasses.replace(spec)) == first
+
+
+@pytest.mark.parametrize("name", sorted(SPECS))
+def test_compiled_timeline_structure(name):
+    spec = SPECS[name]
+    events = compile_workload(spec)
+    times = [e.time for e in events]
+    assert times == sorted(times)
+    assert {e.stream for e in events} == set(range(len(spec.streams)))
+    # scenario ids: 1..num_scenarios (0 is reserved for pretraining)
+    assert {e.scenario for e in events} <= set(
+        range(1, spec.num_scenarios + 1))
+    for st, ss in enumerate(spec.streams):
+        data = [e for e in events if e.stream == st and e.kind == "data"]
+        inf = [e for e in events if e.stream == st and e.kind == "inference"]
+        assert len(data) == spec.num_scenarios * ss.batches_per_scenario
+        assert len(inf) == ss.inferences
+        # data events stay inside their stream's scenario window
+        off = spec.stream_offset(st) + ss.phase
+        for e in data:
+            s0 = off + (e.scenario - 1) * spec.scenario_span
+            assert s0 <= e.time < s0 + spec.scenario_span
+
+
+def test_seed_changes_timeline():
+    a = compile_workload(SPECS["two-stream"])
+    import dataclasses
+    b = compile_workload(dataclasses.replace(SPECS["two-stream"], seed=7))
+    assert a != b
+
+
+def test_duty_cycle_windows_respected():
+    """diurnal-duty only emits during the on-window of each duty period —
+    for *every* event kind: data rides the duty warp, the diurnal NHPP
+    composes the duty indicator into its rate (the scenario grid is a
+    whole number of periods, so wall-clock modulo is well-defined)."""
+    spec = SPECS["diurnal-duty"]
+    dc = spec.streams[0].duty_cycle
+    for e in compile_workload(spec):
+        assert e.time % dc.period <= dc.period * dc.on_fraction + 1e-6, e
+
+
+def test_warp_boundary_event_stays_in_on_window():
+    """An arrival pinned to the very end of active time must not warp
+    onto the next period's off-boundary (the rescale pins t[-1])."""
+    spec = WorkloadSpec("pd", (StreamSpec(
+        inf_dist="poisson", duty_cycle=DutyCycle(period=50.0,
+                                                 on_fraction=0.6),
+        batches_per_scenario=4, inferences=50),), num_scenarios=3,
+        scenario_span=100.0).validate()
+    for e in compile_workload(spec):
+        assert e.time % 50.0 <= 30.0 + 1e-6, e
+
+
+def test_diurnal_period_is_wall_clock_under_duty_cycle():
+    """Composing diurnal with a duty cycle must not stretch the diurnal
+    period: with period == 2 duty periods, arrivals concentrate in the
+    sine's rising half of each wall-clock period."""
+    from repro.workloads import DiurnalConfig
+
+    spec = WorkloadSpec("dd", (StreamSpec(
+        inf_dist="diurnal",
+        diurnal=DiurnalConfig(period=100.0, amplitude=0.8),
+        duty_cycle=DutyCycle(period=50.0, on_fraction=0.6),
+        batches_per_scenario=4, inferences=200),), num_scenarios=3,
+        scenario_span=100.0).validate()
+    t = np.array([e.time for e in compile_workload(spec)
+                  if e.kind == "inference"]) % 100.0
+    # sin peaks at t%100 == 25, troughs at 75
+    assert np.sum(t < 50.0) > 1.5 * np.sum(t >= 50.0)
+
+
+def test_staggered_drift_offsets_streams():
+    """two-stream is staggered: stream 1 crosses each scenario boundary
+    half a span after stream 0."""
+    spec = SPECS["two-stream"]
+    events = compile_workload(spec)
+
+    def first_data(stream, scenario):
+        return min(e.time for e in events
+                   if e.stream == stream and e.kind == "data"
+                   and e.scenario == scenario)
+
+    off = spec.stream_offset(1)
+    assert off == pytest.approx(spec.scenario_span / 2)
+    for sc in range(1, spec.num_scenarios + 1):
+        lo = off + (sc - 1) * spec.scenario_span
+        assert lo <= first_data(1, sc) < lo + spec.scenario_span
+
+
+def test_mmpp_is_burstier_than_poisson():
+    """Fixed-seed sanity: the MMPP stream's inter-arrival squared
+    coefficient of variation exceeds the Poisson stream's (bursts =
+    overdispersion)."""
+    def scv(spec):
+        t = np.array([e.time for e in compile_workload(spec)
+                      if e.kind == "inference"])
+        gaps = np.diff(np.sort(t))
+        return float(np.var(gaps) / np.mean(gaps) ** 2)
+
+    big = presets(batches_per_scenario=4, inferences=160, num_scenarios=3)
+    assert scv(big["bursty-mmpp"]) > scv(big["single-poisson"]) * 1.5
+
+
+# ---------------------------------------------------------------------------
+# two-stream runtime: per-stream attribution
+
+
+@pytest.fixture(scope="module")
+def two_stream_result():
+    from repro.configs import get_reduced
+    from repro.core import ETunerConfig, ETunerController
+    from repro.data import streams
+    from repro.models import build_model
+    from repro.runtime.continual import ContinualRuntime
+
+    spec = WorkloadSpec(
+        "tiny-two-stream",
+        (StreamSpec(batches_per_scenario=3, inferences=5),
+         StreamSpec(benchmark="ni", batches_per_scenario=3, inferences=5)),
+        num_scenarios=2, drift="staggered", seed=0).validate()
+    model = build_model(get_reduced("mobilenetv2"))
+
+    def make(_st=0):
+        return ETunerController(model, ETunerConfig(
+            lazytune=False, simfreeze=False, detect_scenario_changes=False))
+
+    b0 = streams.nc_benchmark(num_scenarios=3, batches=3, batch_size=8,
+                              seed=0)
+    b1 = streams.ni_benchmark(num_scenarios=3, batches=3, batch_size=8,
+                              seed=13)
+    rt = ContinualRuntime(model, b0, make(), pretrain_epochs=1, seed=0,
+                          stream_benchmarks={1: b1},
+                          controller_factory=make)
+    return rt.run(events=compile_workload(spec))
+
+
+def test_two_stream_ledger_attribution_sums_to_totals(two_stream_result):
+    res = two_stream_result
+    assert set(res.per_stream) == {0, 1}
+    assert res.per_stream[0]["rounds"] > 0 and res.per_stream[1]["rounds"] > 0
+    for key, total in (("time_s", res.total_time_s),
+                       ("energy_j", res.total_energy_j),
+                       ("rounds", float(res.rounds))):
+        np.testing.assert_allclose(
+            sum(v[key] for v in res.per_stream.values()), total, rtol=1e-9)
+    np.testing.assert_allclose(
+        sum(v["flops"] for v in res.per_stream.values()),
+        res.compute_tflops * 1e12, rtol=1e-9)
+
+
+def test_two_stream_per_request_accounting(two_stream_result):
+    res = two_stream_result
+    assert res.per_stream[0]["inferences"] == 5.0
+    assert res.per_stream[1]["inferences"] == 5.0
+    assert len(res.inference_accs) == 10
+    # global average is the request-weighted mean of per-stream averages
+    weighted = sum(v["avg_inference_acc"] * v["inferences"]
+                   for v in res.per_stream.values()) / 10.0
+    np.testing.assert_allclose(res.avg_inference_acc, weighted, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# BENCH schema validator
+
+
+def _valid_doc():
+    import benchmarks.workloads as W
+
+    cell = {f: 1.0 for f in W.CELL_FIELDS}
+    cells = [dict(cell, workload=w, method=m, per_stream={"0": {}})
+             for w in ("a", "b", "c") for m in W.METHODS]
+    return W, {
+        "schema_version": W.SCHEMA_VERSION, "suite": "workloads",
+        "arch": "mobilenetv2", "created_unix": 1, "quick": True,
+        "workloads": {"a": {}, "b": {}, "c": {}}, "cells": cells,
+    }
+
+
+def test_bench_schema_validator_accepts_valid_doc():
+    W, doc = _valid_doc()
+    assert W.validate_bench(doc) == []
+
+
+def test_bench_schema_validator_flags_violations():
+    W, doc = _valid_doc()
+    assert W.validate_bench({}) != []
+    bad = dict(doc, schema_version=99)
+    assert any("schema_version" in e for e in W.validate_bench(bad))
+    bad = dict(doc, cells=doc["cells"][:4])       # one workload only
+    assert any("workload" in e for e in W.validate_bench(bad))
+    bad = dict(doc, cells=[dict(c) for c in doc["cells"]])
+    del bad["cells"][0]["acc"]
+    assert any("'acc'" in e for e in W.validate_bench(bad))
+    bad = dict(doc, cells=[dict(c) for c in doc["cells"]])
+    bad["cells"][0]["time_s"] = float("nan")
+    assert any("time_s" in e for e in W.validate_bench(bad))
+    bad = dict(doc, cells=doc["cells"][1:])       # missing one controller
+    assert any("missing controllers" in e for e in W.validate_bench(bad))
