@@ -1,0 +1,147 @@
+"""Compare two ``BENCH_workloads.json`` artifacts and flag regressions.
+
+The ROADMAP's "BENCH trajectory tooling" starter: CI regenerates the
+quick sweep on every push and diffs it against the committed baseline —
+a cell whose metric moves beyond the noise threshold *in the bad
+direction* (accuracy down; modeled time/energy/FLOPs up) fails the job,
+so a perf/accuracy regression can't land silently. Baseline cells that
+vanish also fail (coverage must never shrink); brand-new cells are
+reported but don't fail.
+
+Accuracy gets its own (wider) threshold: cell accuracies average a few
+dozen requests, so XLA-CPU codegen differences between the machine that
+committed the baseline and the CI runner can flip a borderline request
+(~several % relative) with no code change — ``--acc-threshold`` defaults
+to 0.25, loose enough to absorb a flip or two yet still catching real
+accuracy collapses. The modeled cost metrics stay tight by default; note
+they too can step by roughly one round's worth (~10%) when a borderline
+val accuracy flips an accuracy-adaptive controller's trigger decision,
+which is why CI passes an intermediate ``--threshold``.
+
+    PYTHONPATH=src python benchmarks/bench_diff.py BASE.json NEW.json \
+        [--threshold 0.05] [--acc-threshold 0.25] [--list-all]
+
+Exit codes: 0 = within noise, 1 = regression(s), 2 = incomparable
+documents (schema mismatch / unreadable).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+#: metric -> direction that counts as a regression ('down' = lower is a
+#: regression, 'up' = higher is). Modeled costs regress upward; accuracy
+#: regresses downward. `rounds`/`recompiles` are scheduling outcomes, not
+#: costs — drifts there show up in time/energy anyway, so they are
+#: reported but never fail the diff.
+METRIC_DIRECTIONS = {
+    "acc": "down",
+    "time_s": "up",
+    "energy_j": "up",
+    "tflops": "up",
+}
+INFO_METRICS = ("rounds", "recompiles", "preemptions")
+
+
+def cell_key(cell: Dict) -> Tuple[str, str, int]:
+    """Identity of a sweep cell across artifacts. `preemptible` is part
+    of the key: a prioritized preset runs once per QoS mode."""
+    return (cell.get("workload", "?"), cell.get("method", "?"),
+            int(cell.get("preemptible", 0)))
+
+
+def _rel_change(base: float, new: float) -> float:
+    return (new - base) / max(abs(base), 1e-9)
+
+
+def diff_cells(base_doc: Dict, new_doc: Dict, *, threshold: float = 0.05,
+               acc_threshold: float = 0.25) -> Tuple[List[str], List[str]]:
+    """Return (regressions, infos): human-readable lines. A regression is
+    a tracked metric moving beyond its threshold (relative; `acc` uses
+    the wider `acc_threshold` — module docstring) in its bad direction,
+    or a baseline cell missing from the new artifact."""
+    base_cells = {cell_key(c): c for c in base_doc.get("cells", [])}
+    new_cells = {cell_key(c): c for c in new_doc.get("cells", [])}
+    regressions: List[str] = []
+    infos: List[str] = []
+    for key in sorted(base_cells):
+        label = "{}/{}{}".format(key[0], key[1],
+                                 "+preempt" if key[2] else "")
+        if key not in new_cells:
+            regressions.append(f"{label}: cell missing from new artifact")
+            continue
+        b, n = base_cells[key], new_cells[key]
+        for metric, bad_dir in METRIC_DIRECTIONS.items():
+            if metric not in b or metric not in n:
+                continue
+            thr = acc_threshold if metric == "acc" else threshold
+            change = _rel_change(float(b[metric]), float(n[metric]))
+            moved_badly = change < -thr if bad_dir == "down" \
+                else change > thr
+            line = (f"{label}: {metric} {float(b[metric]):.6g} -> "
+                    f"{float(n[metric]):.6g} ({change:+.1%})")
+            if moved_badly:
+                regressions.append(line)
+            elif abs(change) > thr:
+                infos.append(line + " [improvement]")
+        for metric in INFO_METRICS:
+            if b.get(metric) != n.get(metric) and metric in b:
+                infos.append(f"{label}: {metric} {b.get(metric)} -> "
+                             f"{n.get(metric)}")
+    for key in sorted(set(new_cells) - set(base_cells)):
+        infos.append("{}/{}{}: new cell (no baseline)".format(
+            key[0], key[1], "+preempt" if key[2] else ""))
+    return regressions, infos
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("base", help="baseline BENCH_workloads.json")
+    ap.add_argument("new", help="freshly generated BENCH_workloads.json")
+    ap.add_argument("--threshold", type=float, default=0.05,
+                    help="relative noise threshold for the modeled cost "
+                         "metrics (default 0.05)")
+    ap.add_argument("--acc-threshold", type=float, default=0.25,
+                    help="relative noise threshold for accuracy "
+                         "(default 0.25; module docstring)")
+    ap.add_argument("--list-all", action="store_true",
+                    help="print informational drifts too")
+    args = ap.parse_args()
+
+    docs = []
+    for path in (args.base, args.new):
+        try:
+            with open(path) as f:
+                docs.append(json.load(f))
+        except (OSError, ValueError) as e:
+            print(f"bench_diff: cannot read {path}: {e}", file=sys.stderr)
+            return 2
+    base_doc, new_doc = docs
+    if base_doc.get("schema_version") != new_doc.get("schema_version"):
+        print(f"bench_diff: schema_version mismatch "
+              f"({base_doc.get('schema_version')} vs "
+              f"{new_doc.get('schema_version')}) — regenerate the "
+              f"committed baseline alongside the schema bump",
+              file=sys.stderr)
+        return 2
+
+    regressions, infos = diff_cells(base_doc, new_doc,
+                                    threshold=args.threshold,
+                                    acc_threshold=args.acc_threshold)
+    if args.list_all:
+        for line in infos:
+            print(f"INFO {line}")
+    for line in regressions:
+        print(f"REGRESSION {line}", file=sys.stderr)
+    n = len(base_doc.get("cells", []))
+    print(f"bench_diff: {n} baseline cell(s), threshold "
+          f"{args.threshold:.0%}: "
+          + (f"{len(regressions)} regression(s)" if regressions
+             else "within noise"))
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

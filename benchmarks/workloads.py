@@ -31,14 +31,24 @@ from repro.models import build_model
 from repro.runtime.continual import ContinualRuntime
 from repro.workloads import WorkloadSpec, compile_workload, presets
 
-SCHEMA_VERSION = 1
+#: v2 adds QoS: a `preemptible` flag + `preemptions` count per cell
+#: (prioritized presets run once per mode), and per-stream
+#: `latency_p50`/`latency_p95` serving-latency columns (request arrival ->
+#: params-visible service instant, seconds) in the per_stream attribution.
+SCHEMA_VERSION = 2
 METHODS = ("immed", "lazytune", "simfreeze", "etuner")
 DEFAULT_OUT = os.path.abspath(
     os.path.join(os.path.dirname(__file__), "..", "BENCH_workloads.json"))
 
 #: Numeric fields every cell must carry (schema contract with CI).
 CELL_FIELDS = ("acc", "time_s", "energy_j", "tflops", "rounds",
-               "recompiles", "events", "streams", "wall_s")
+               "recompiles", "events", "streams", "wall_s",
+               "preemptible", "preemptions")
+
+#: Numeric fields every per-stream attribution cell must carry.
+STREAM_FIELDS = ("time_s", "energy_j", "flops", "rounds", "preemptions",
+                 "avg_inference_acc", "inferences",
+                 "latency_p50", "latency_p95")
 
 
 # ---------------------------------------------------------------------------
@@ -63,9 +73,12 @@ def _stream_benchmarks(spec: WorkloadSpec, seed: int,
 def run_workload(arch: str, spec: WorkloadSpec, method: str, *,
                  seed: int = 0, batch_size: int = 8,
                  pretrain_epochs: int = 1,
-                 inference_batch: int = 8) -> Dict:
+                 inference_batch: int = 8,
+                 preemptible: bool = False) -> Dict:
     """One (workload, controller) cell: full runtime run, paper metrics +
-    per-stream attribution."""
+    per-stream attribution (incl. p50/p95 serving latency). `preemptible`
+    turns on QoS round preemption (high-priority arrivals split in-flight
+    rounds of lower-priority streams)."""
     model = build_model(get_reduced(arch))
     benches = _stream_benchmarks(spec, seed, batch_size)
     ctrl = make_controller(model, method)
@@ -74,7 +87,8 @@ def run_workload(arch: str, spec: WorkloadSpec, method: str, *,
         model, benches[0], ctrl, seed=seed,
         pretrain_epochs=pretrain_epochs, inference_batch=inference_batch,
         stream_benchmarks={i: b for i, b in benches.items() if i},
-        controller_factory=lambda st: make_controller(model, method))
+        controller_factory=lambda st: make_controller(model, method),
+        preemptible=preemptible)
     t0 = time.time()
     res = rt.run(events=events)
     return {
@@ -83,6 +97,7 @@ def run_workload(arch: str, spec: WorkloadSpec, method: str, *,
         "acc": res.avg_inference_acc, "time_s": res.total_time_s,
         "energy_j": res.total_energy_j, "tflops": res.compute_tflops,
         "rounds": res.rounds, "recompiles": res.recompiles,
+        "preemptible": int(preemptible), "preemptions": res.preemptions,
         "wall_s": round(time.time() - t0, 2),
         "per_stream": {str(k): v for k, v in res.per_stream.items()},
     }
@@ -103,19 +118,30 @@ def sweep(*, quick: bool = True, arch: str = "mobilenetv2", seed: int = 0,
     cells: List[Dict] = []
     for name in names:
         spec = specs[name]
+        # prioritized presets (qos) sweep both QoS modes so the artifact
+        # records the preemption latency win next to its baseline
+        modes = ((False, True) if any(s.priority for s in spec.streams)
+                 else (False,))
         base = None
         for method in methods:
-            cell = run_workload(arch, spec, method, seed=seed)
-            if base is None:
-                base = cell
-            cell["time_norm"] = cell["time_s"] / max(base["time_s"], 1e-9)
-            cell["energy_norm"] = (cell["energy_j"]
-                                   / max(base["energy_j"], 1e-9))
-            cells.append(cell)
-            print(f"workloads,{name}/{method},acc={cell['acc']:.4f} "
-                  f"time={cell['time_s']:.1f}s energy={cell['energy_j']:.1f}J "
-                  f"rounds={cell['rounds']} wall={cell['wall_s']:.0f}s",
-                  flush=True)
+            for preemptible in modes:
+                cell = run_workload(arch, spec, method, seed=seed,
+                                    preemptible=preemptible)
+                if base is None:
+                    base = cell
+                cell["time_norm"] = cell["time_s"] / max(base["time_s"], 1e-9)
+                cell["energy_norm"] = (cell["energy_j"]
+                                       / max(base["energy_j"], 1e-9))
+                cells.append(cell)
+                tag = "/qos" if preemptible else ""
+                print(f"workloads,{name}/{method}{tag},"
+                      f"acc={cell['acc']:.4f} "
+                      f"time={cell['time_s']:.1f}s "
+                      f"energy={cell['energy_j']:.1f}J "
+                      f"rounds={cell['rounds']} "
+                      f"preempt={cell['preemptions']} "
+                      f"wall={cell['wall_s']:.0f}s",
+                      flush=True)
     import jax
     return {
         "schema_version": SCHEMA_VERSION, "suite": "workloads",
@@ -154,8 +180,18 @@ def validate_bench(doc: Dict, *, min_workloads: int = 3,
             if not isinstance(v, (int, float)) or v != v or v < 0:
                 errors.append(f"cell {i}: field {f!r} missing or not a "
                               f"non-negative finite number (got {v!r})")
-        if not isinstance(cell.get("per_stream"), dict):
+        per = cell.get("per_stream")
+        if not isinstance(per, dict):
             errors.append(f"cell {i}: missing per_stream attribution")
+        else:
+            for sid, sc in per.items():
+                for f in STREAM_FIELDS:
+                    v = sc.get(f) if isinstance(sc, dict) else None
+                    if not isinstance(v, (int, float)) or v != v or v < 0:
+                        errors.append(
+                            f"cell {i} stream {sid}: field {f!r} missing "
+                            f"or not a non-negative finite number "
+                            f"(got {v!r})")
         if "workload" not in cell or "method" not in cell:
             errors.append(f"cell {i}: missing workload/method labels")
             continue

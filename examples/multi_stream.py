@@ -31,6 +31,10 @@ def main():
     ap.add_argument("--inferences", type=int, default=16,
                     help="inference requests per stream over the horizon")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--preemptible", action="store_true",
+                    help="QoS: let higher-priority inference arrivals "
+                         "split in-flight fine-tuning rounds (try with "
+                         "--workload qos)")
     args = ap.parse_args()
 
     spec = presets(batches_per_scenario=args.batches,
@@ -38,19 +42,23 @@ def main():
                    num_scenarios=args.scenarios,
                    seed=args.seed)[args.workload]
     print(f"workload {spec.name}: {len(spec.streams)} stream(s), "
-          f"{spec.num_scenarios} scenarios, drift={spec.drift}")
-    cell = run_workload(args.arch, spec, args.method, seed=args.seed)
+          f"{spec.num_scenarios} scenarios, drift={spec.drift}, "
+          f"preemptible={args.preemptible}")
+    cell = run_workload(args.arch, spec, args.method, seed=args.seed,
+                        preemptible=args.preemptible)
     print(f"{args.method:10s} acc={cell['acc']*100:6.2f}% "
           f"time={cell['time_s']:7.1f}s energy={cell['energy_j']:7.1f}J "
           f"rounds={cell['rounds']} events={cell['events']} "
+          f"preemptions={cell['preemptions']} "
           f"(wall {cell['wall_s']:.0f}s)")
     for sid, per in sorted(cell["per_stream"].items()):
         ss = spec.streams[int(sid)]
         print(f"  stream {sid} [{ss.modality}/{ss.benchmark} "
-              f"data={ss.data_dist} inf={ss.inf_dist}] "
+              f"data={ss.data_dist} inf={ss.inf_dist} prio={ss.priority}] "
               f"acc={per['avg_inference_acc']*100:6.2f}% "
               f"time={per['time_s']:6.1f}s energy={per['energy_j']:6.1f}J "
-              f"rounds={per['rounds']:.0f} requests={per['inferences']:.0f}")
+              f"rounds={per['rounds']:.0f} requests={per['inferences']:.0f} "
+              f"p50={per['latency_p50']:.2f}s p95={per['latency_p95']:.2f}s")
 
 
 if __name__ == "__main__":

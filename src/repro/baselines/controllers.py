@@ -31,7 +31,11 @@ class _Base:
     def plan(self):
         return self._plan
 
-    def should_trigger(self, batches_available: int) -> bool:
+    def should_trigger(self, batches_available: int,
+                       staleness: float = 0.0) -> bool:
+        # `staleness` (seconds since this stream's last round — see
+        # repro.core.ControllerProtocol) is accepted protocol-wide; the
+        # paper baselines don't weigh it.
         if self.with_lazytune:
             return self.lazytune.should_trigger(batches_available)
         return batches_available >= 1
@@ -65,7 +69,8 @@ class StaticController(_Base):
         super().__init__(model, with_lazytune=False)
         self.interval = interval
 
-    def should_trigger(self, batches_available: int) -> bool:
+    def should_trigger(self, batches_available: int,
+                       staleness: float = 0.0) -> bool:
         return batches_available >= self.interval
 
 
@@ -298,7 +303,8 @@ class EkyaController(_Base):
         self._since_profile = 0
         self.profile_rounds = 0
 
-    def should_trigger(self, batches_available: int) -> bool:
+    def should_trigger(self, batches_available: int,
+                       staleness: float = 0.0) -> bool:
         if self.with_lazytune:
             return self.lazytune.should_trigger(batches_available)
         return batches_available >= self.window_batches

@@ -11,7 +11,7 @@ Ablation switches make the controller cover all four paper configurations:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Protocol, runtime_checkable
+from typing import Any, Optional, Protocol, runtime_checkable
 
 import numpy as np
 
@@ -31,9 +31,13 @@ class ControllerProtocol(Protocol):
 
     - `plan` (property): the current freeze plan — a hashable static jit
       argument; a changed plan implies a recompile charge.
-    - `should_trigger(batches_available)`: called on every buffered data
-      batch; return True to launch a fine-tuning round now (the runtime
-      additionally requires the device to be idle).
+    - `should_trigger(batches_available, staleness=0.0)`: called on every
+      buffered data batch; return True to launch a fine-tuning round now
+      (the runtime additionally requires the device to be idle).
+      `staleness` is the wall-clock seconds since *this stream's* last
+      round completed (run start counts as fresh) — a QoS-aware policy
+      can use it to keep low-priority streams from starving while a
+      latency-critical stream's arrivals keep winning the device.
     - `round_finished(iters, val_acc, params)`: after each round, with the
       number of iterations run, validation accuracy, and the new params.
     - `inference_served(logits)`: after each served request, with that
@@ -50,7 +54,8 @@ class ControllerProtocol(Protocol):
     @property
     def plan(self) -> Any: ...
 
-    def should_trigger(self, batches_available: int) -> bool: ...
+    def should_trigger(self, batches_available: int,
+                       staleness: float = 0.0) -> bool: ...
 
     def round_finished(self, iters: int, val_acc: float, params) -> None: ...
 
@@ -67,6 +72,10 @@ class ETunerConfig:
     lazytune_cfg: LazyTuneConfig = field(default_factory=LazyTuneConfig)
     simfreeze_cfg: SimFreezeConfig = field(default_factory=SimFreezeConfig)
     ood_cfg: EnergyOODConfig = field(default_factory=EnergyOODConfig)
+    # QoS starvation guard: trigger a round regardless of LazyTune's
+    # accumulation target once this stream has gone `max_staleness`
+    # timeline-seconds without one (None = disabled, the paper behaviour)
+    max_staleness: Optional[float] = None
 
 
 class ETunerController:
@@ -102,7 +111,11 @@ class ETunerController:
         if self.cfg.simfreeze:
             self.simfreeze.start_scenario(reference_params, probe_batch)
 
-    def should_trigger(self, batches_available: int) -> bool:
+    def should_trigger(self, batches_available: int,
+                       staleness: float = 0.0) -> bool:
+        if self.cfg.max_staleness is not None and batches_available \
+                and staleness >= self.cfg.max_staleness:
+            return True  # starvation guard (QoS; DESIGN.md §8)
         if not self.cfg.lazytune:
             return batches_available >= 1  # immediate fine-tuning
         return self.lazytune.should_trigger(batches_available)

@@ -24,6 +24,12 @@ class Event:
     scenario: int
     index: int   # index within its (stream, kind) sequence
     stream: int = 0  # arrival stream id (0 = the single legacy stream)
+    # QoS priority inherited from the stream's `StreamSpec.priority`:
+    # higher dispatches first at equal (time, kind), and a high enough
+    # priority may preempt an in-flight fine-tuning round (scheduler.py).
+    # 0 = the legacy don't-care priority, so single-stream timelines are
+    # byte-identical to their pre-QoS selves.
+    priority: int = 0
 
 
 def interarrivals(dist: str, n: int, mean_gap: float,

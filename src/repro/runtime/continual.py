@@ -74,8 +74,11 @@ class RunResult:
     controller_stats: Dict[str, Any] = field(default_factory=dict)
     val_curve: List[float] = field(default_factory=list)
     # per-arrival-stream attribution (multi-stream workloads): stream id ->
-    # {time_s, energy_j, flops, rounds, avg_inference_acc, inferences}
+    # {time_s, energy_j, flops, rounds, preemptions, avg_inference_acc,
+    #  inferences, latency_p50, latency_p95}
     per_stream: Dict[int, Dict[str, float]] = field(default_factory=dict)
+    # QoS: total round splits absorbed by lower-priority streams' rounds
+    preemptions: int = 0
 
     def summary(self) -> str:
         return (f"acc={self.avg_inference_acc*100:.2f}% "
@@ -98,7 +101,8 @@ class ContinualRuntime:
                  inference_window: float = 0.0,
                  extra_hooks: Optional[List[RoundHook]] = None,
                  stream_benchmarks: Optional[Dict[int, ContinualBenchmark]] = None,
-                 controller_factory: Optional[Callable[[int], Any]] = None):
+                 controller_factory: Optional[Callable[[int], Any]] = None,
+                 preemptible: bool = False):
         self.model = model
         self.bench = benchmark
         self.controller = controller
@@ -119,6 +123,14 @@ class ContinualRuntime:
         self.unlabeled_fraction = unlabeled_fraction
         self.calibrate_cost = calibrate_cost
         self.inference_window = inference_window
+        # QoS: when True, fine-tuning rounds run as preemptible
+        # reservations — a strictly-higher-priority inference arrival
+        # splits the in-flight round (served at its arrival instant
+        # instead of waiting for the round's end) and the round resumes,
+        # its cost charged in segments that sum to the unpreempted charge.
+        # Default False keeps the golden single-stream regression
+        # bit-exact (rounds complete synchronously at trigger time).
+        self.preemptible = preemptible
         # round hooks: model-wrapping ones bind first so every later
         # consumer (train steps, serving, SimSiam features) sees the
         # wrapped model.
@@ -161,7 +173,11 @@ class ContinualRuntime:
         # --- compose the subsystems -------------------------------------
         # per-stream policy state: stream 0 is the primary controller;
         # extra streams (multi-stream workloads) get their own controller
-        # from the factory, or share the primary one.
+        # from the factory, or share the primary one. Streams *absent*
+        # from the start-of-run event list (e.g. a probe Event pushed onto
+        # the live scheduler mid-drain — ROADMAP's detector-driven probes)
+        # fall back to the primary controller/benchmark via the accessors
+        # below instead of KeyError-ing the callbacks.
         stream_ids = sorted({e.stream for e in events}) or [0]
         controllers: Dict[int, Any] = {}
         for st in stream_ids:
@@ -171,6 +187,20 @@ class ContinualRuntime:
                 controllers[st] = self.controller_factory(st)
         benches = {st: self.stream_benchmarks.get(st, bench)
                    for st in stream_ids}
+
+        def ctrl_for(st: int):
+            return controllers.get(st, self.controller)
+
+        def bench_for(st: int) -> ContinualBenchmark:
+            return benches.get(st, bench)
+
+        # QoS: a stream's priority rides on its events (StreamSpec.priority
+        # -> Event.priority); a round reserves the device at its stream's
+        # priority, so only strictly-higher-priority arrivals can split it.
+        stream_priority: Dict[int, int] = {st: 0 for st in stream_ids}
+        for e in events:
+            stream_priority[e.stream] = max(stream_priority[e.stream],
+                                            e.priority)
         ledger = CostLedger()
         replay = ReplayBuffer(bench.scenarios[0].train_batches[:self.replay_batches])
         executor = FineTuneExecutor(self.steps, self.cost, ledger, replay,
@@ -178,12 +208,29 @@ class ContinualRuntime:
                                     calibrate_cost=self.calibrate_cost)
         executor.load(params, opt_state)
         scheduler = EventScheduler(events)
+        # live handle: controller callbacks / tests may push events onto
+        # the running timeline (mid-drain push is supported)
+        self.scheduler = scheduler
         pending_change = {st: False for st in stream_ids}
+        # per-stream policy latches, owned by the runtime — NOT stored on
+        # the controller object: streams may share one controller (no
+        # controller_factory), and the first stream's start_scenario must
+        # not suppress every other stream's
+        scenario_started: Dict[int, bool] = {}
+        # per-stream staleness: wall-clock since the stream's last round
+        # completed (run start counts as "fresh"), fed to should_trigger
+        # so priority-aware controllers can weigh starvation
+        last_round_end: Dict[int, float] = {}
+        # scenario snapshot at round launch: a lazily-finalized
+        # (preemptible) round must validate against the scenario whose
+        # batches it trained, not whatever the stream drifted to by the
+        # time the timeline passes the reservation's end
+        launch_scenario: Dict[int, int] = {}
 
         def served(logits, stream=0) -> bool:
             # route the request's logits to its stream's controller; a True
             # return (detected scenario change) is latched per stream.
-            hit = controllers.get(stream, self.controller).inference_served(logits)
+            hit = ctrl_for(stream).inference_served(logits)
             if hit:
                 pending_change[stream] = True
             return hit
@@ -193,15 +240,18 @@ class ContinualRuntime:
         server.publish(params, 0.0)
         val_curve: List[float] = []
 
-        def finish_round(now: float, stream: int = 0) -> None:
-            ctrl = controllers[stream]
-            report = executor.execute_round(ctrl.plan, now, scheduler,
-                                            stream=stream)
-            if report is None:
-                return
+        def complete(report) -> None:
+            # a round's results reach the rest of the system when it
+            # completes: publish to serving, validate, notify the
+            # stream's controller, charge SimFreeze's CKA probes
+            stream = report.stream
+            ctrl = ctrl_for(stream)
             server.publish(executor.params, report.end)
-            # validation accuracy (labeled 5% split) -> LazyTune
-            val = benches[stream].scenarios[scheduler.scenario_of(stream)].val
+            # validation accuracy (labeled 5% split) -> LazyTune; the
+            # split belongs to the scenario current at round *launch*
+            val = bench_for(stream).scenarios[
+                launch_scenario.pop(stream,
+                                    scheduler.scenario_of(stream))].val
             val_acc, _ = evaluate(model, executor.params, as_jnp(val))
             val_curve.append(val_acc)
             cka_before = ctrl.simfreeze.state.cka_flops \
@@ -212,41 +262,66 @@ class ContinualRuntime:
                 if dcka:
                     tc, ec = executor.cost.compute_cost(dcka)
                     ledger.charge_probe("cka", tc, ec, stream=stream)
+            last_round_end[stream] = report.end
+
+        def settle(now: float) -> None:
+            # preemptible rounds complete lazily: once the timeline passes
+            # a reservation's end, finalize it (train the remaining
+            # checkpointed batches, charge the exact-remainder segment)
+            report = executor.finalize_round(now)
+            if report is not None:
+                complete(report)
+
+        def finish_round(now: float, stream: int = 0) -> None:
+            launch_scenario[stream] = scheduler.scenario_of(stream)
+            report = executor.execute_round(
+                ctrl_for(stream).plan, now, scheduler, stream=stream,
+                priority=stream_priority.get(stream, 0),
+                preemptible=self.preemptible)
+            if report is None and executor.active_round is None:
+                launch_scenario.pop(stream, None)  # nothing was buffered
+            elif report is not None:  # synchronous (non-preemptible) path
+                complete(report)
 
         def on_scenario_change(previous: int, ev: Event) -> None:
             # keep a replay sample of the just-entered scenario
-            sc = benches[ev.stream].scenarios[ev.scenario]
+            sc = bench_for(ev.stream).scenarios[ev.scenario]
             replay.add(sc.train_batches[ev.index % len(sc.train_batches)])
 
         def on_data(ev: Event, boundary: bool) -> None:
             st = ev.stream
-            ctrl = controllers[st]
-            sc = benches[st].scenarios[ev.scenario]
+            settle(ev.time)
+            ctrl = ctrl_for(st)
+            sc = bench_for(st).scenarios[ev.scenario]
             batch = sc.train_batches[ev.index % len(sc.train_batches)]
             # bound micro-batch deferral: a queued group whose window has
             # elapsed is served now, so controller signals driven by
             # inference_served (LazyTune decay, scenario detection) lag by
             # at most one window.
             server.expire(ev.time)
-            change = pending_change[st] and self.boundaries == "detector"
+            change = pending_change.get(st, False) \
+                and self.boundaries == "detector"
             if (boundary and self.boundaries == "oracle") or change:
                 pending_change[st] = False
                 if ctrl.plan is not None and hasattr(ctrl, "scenario_changed"):
                     ctrl.scenario_changed(executor.params, as_jnp(batch))
             if getattr(ctrl, "needs_reference", True) and \
                     hasattr(ctrl, "start_scenario") and \
-                    (boundary or (scheduler.scenario_of(st) and not getattr(
-                        ctrl, "_scenario_started", False))):
+                    (boundary or (scheduler.scenario_of(st)
+                                  and not scenario_started.get(st, False))):
                 ctrl.start_scenario(reference_params, as_jnp(batch))
-                ctrl._scenario_started = True
+                scenario_started[st] = True
             executor.enqueue(batch, stream=st)
-            if ctrl.should_trigger(executor.pending_for(st)) and \
+            if ctrl.should_trigger(executor.pending_for(st),
+                                   staleness=ev.time
+                                   - last_round_end.get(st, 0.0)) and \
                     scheduler.idle_at(ev.time):
                 finish_round(ev.time, st)
 
         def on_inference(ev: Event) -> None:
             st = ev.stream
-            b = benches[st]
+            settle(ev.time)
+            b = bench_for(st)
             cur = scheduler.scenario_of(st)
             sc = b.scenarios[min(ev.scenario, cur) or ev.scenario]
             test = b.scenarios[max(cur, 1)].test \
@@ -254,25 +329,45 @@ class ContinualRuntime:
             idx = rng.choice(len(test["labels"]),
                              min(self.inference_batch, len(test["labels"])),
                              replace=False)
+            # QoS serving latency (arrival -> modeled service instant): an
+            # idle device serves at once; a busy one makes the request
+            # wait out the round's occupancy — unless the arrival outranks
+            # a preemptible round, which it splits and is served at its
+            # arrival time (the round resumes; its end is unchanged).
+            if scheduler.idle_at(ev.time):
+                latency = 0.0
+            elif scheduler.can_preempt(ev.time, ev.priority):
+                executor.preempt(ev.time, scheduler)
+                latency = 0.0
+            else:
+                latency = scheduler.busy_until - ev.time
             server.submit(ev.time, {k: v[idx] for k, v in test.items()},
-                          stream=st)
+                          stream=st, latency=latency)
 
         scheduler.run(on_data=on_data, on_inference=on_inference,
                       on_scenario_change=on_scenario_change)
+        settle(float("inf"))  # finalize a round still in flight at drain end
         server.flush()
         # trailing flush: any buffered data still fine-tunes (no data dropped)
         for st in executor.pending_streams:
             finish_round(scheduler.busy_until, st)
+            settle(float("inf"))
 
         ctrl = self.controller
         stats = ctrl.stats() if hasattr(ctrl, "stats") else {}
         per_stream: Dict[int, Dict[str, float]] = {}
-        for st in stream_ids:
+        # include streams first seen mid-run (events pushed onto the live
+        # scheduler carry streams the start-of-run list never saw)
+        for st in sorted(set(stream_ids) | set(ledger.per_stream)
+                         | set(server.accs_by_stream)):
             cell = dict(ledger.per_stream.get(
                 st, {k: 0.0 for k in STREAM_KEYS}))
             accs = server.accs_by_stream.get(st, [])
             cell["avg_inference_acc"] = float(np.mean(accs)) if accs else 0.0
             cell["inferences"] = float(len(accs))
+            lats = server.latencies_by_stream.get(st, [])
+            cell["latency_p50"] = float(np.percentile(lats, 50)) if lats else 0.0
+            cell["latency_p95"] = float(np.percentile(lats, 95)) if lats else 0.0
             per_stream[st] = cell
         return RunResult(
             avg_inference_acc=server.avg_acc,
@@ -281,4 +376,5 @@ class ContinualRuntime:
             compute_tflops=ledger.compute_tflops, rounds=ledger.rounds,
             recompiles=self.steps.recompiles, inference_accs=server.accs,
             breakdown=ledger.breakdown, controller_stats=stats,
-            val_curve=val_curve, per_stream=per_stream)
+            val_curve=val_curve, per_stream=per_stream,
+            preemptions=ledger.preemptions)

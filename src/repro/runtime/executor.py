@@ -162,6 +162,48 @@ class RoundReport:
     recompiled: bool
     start: float
     end: float
+    stream: int = 0      # arrival stream whose buffer the round drained
+    segments: int = 1    # occupancy segments (1 unless preempted)
+    preemptions: int = 0  # higher-priority splits the round absorbed
+
+
+class ActiveRound:
+    """Checkpointed state of an in-flight *preemptible* round.
+
+    The round's full cost (time/energy/FLOPs/parts) is fixed when it
+    launches — preemption changes *when* the work runs, never how much —
+    and is charged to the ledger in per-segment slices as occupancy
+    elapses. `trained` is the checkpointed batch-iterator position:
+    batches train lazily as the modeled timeline covers their completion
+    point, so a preemption observes exactly the params the device would
+    hold at that instant. The final segment charges the exact remainder
+    of every cost component, so segments always sum to the unpreempted
+    round's charge (a property test pins this)."""
+
+    def __init__(self, step, plan, stream: int, batches, flops: float,
+                 time_s: float, energy_j: float, parts, recompiled: bool,
+                 reservation):
+        self.step = step
+        self.plan = plan
+        self.stream = stream
+        self.batches = batches
+        self.trained = 0
+        self.flops = flops
+        self.time_s = time_s
+        self.energy_j = energy_j
+        self.parts = dict(parts)
+        self.recompiled = recompiled
+        self.reservation = reservation
+        self.first_start = reservation.start
+        self.seg_start = reservation.start
+        self.segments = 0
+        self.preemptions = 0
+        self.charged = {"time_s": 0.0, "energy_j": 0.0, "flops": 0.0}
+        self.charged_parts = {k: 0.0 for k in self.parts}
+
+    @property
+    def end(self) -> float:
+        return self.reservation.end
 
 
 class FineTuneExecutor:
@@ -184,6 +226,8 @@ class FineTuneExecutor:
         self.compiled_plans = set()
         self.params = None
         self.opt_state = None
+        # in-flight preemptible round (at most one: the device is single)
+        self.active_round: Optional[ActiveRound] = None
 
     # ---- state -----------------------------------------------------------
     def load(self, params, opt_state) -> None:
@@ -206,35 +250,20 @@ class FineTuneExecutor:
         return sorted(s for s, b in self.buffers.items() if b)
 
     # ---- round -----------------------------------------------------------
-    def execute_round(self, plan, now: float, scheduler,
-                      stream: int = 0) -> Optional[RoundReport]:
-        """Train one round on everything buffered for `stream` (plus one
-        replay batch), charge the ledger (attributed to that stream), and
-        reserve device time on the scheduler. Returns None when nothing is
-        buffered."""
-        if not self.buffers.get(stream):
-            return None
-        recompile = 0
-        if plan not in self.compiled_plans:
-            self.compiled_plans.add(plan)
-            recompile = 1
-        step = self.steps.get(plan)
-        batches = self.buffers.pop(stream)
-        if self.replay:
-            batches.append(self.replay.sample(self.rng))
+    def _train_batch(self, step, b: dict) -> None:
+        """One training iteration: the first hook that claims the batch
+        updates the params; otherwise the plan-aware supervised step."""
+        jb = as_jnp(b)
         for h in self.hooks:
-            h.on_round_start(self.ledger.rounds)
-        for b in batches:
-            jb = as_jnp(b)
-            handled = None
-            for h in self.hooks:
-                handled = h.process_batch(self.params, b, jb)
-                if handled is not None:
-                    self.params = handled
-                    break
-            if handled is None:
-                self.params, self.opt_state, _ = step(self.params,
-                                                      self.opt_state, jb)
+            handled = h.process_batch(self.params, b, jb)
+            if handled is not None:
+                self.params = handled
+                return
+        self.params, self.opt_state, _ = step(self.params,
+                                              self.opt_state, jb)
+
+    def _round_cost(self, plan, batches, recompile: int):
+        """XLA-measured round FLOPs + (one-shot calibrated) modeled cost."""
         flops = self.steps.flops(plan, as_jnp(batches[0])) * len(batches)
         if self.calibrate_cost:
             # Preserve the paper's compute/overhead balance (Fig. 3) at
@@ -246,12 +275,137 @@ class FineTuneExecutor:
                 self.cost, flops_per_sec=max(per_iter * 2 / 0.8, 1.0))
             self.calibrate_cost = False
         t, e, parts = self.cost.round_cost(flops, recompiles=recompile)
-        self.ledger.charge_round(flops=flops, time_s=t, energy_j=e,
-                                 parts=parts, stream=stream)
-        start, end = scheduler.occupy(now, t)
-        return RoundReport(iters=len(batches), flops=flops, time_s=t,
-                           energy_j=e, recompiled=bool(recompile),
-                           start=start, end=end)
+        return flops, t, e, parts
+
+    def execute_round(self, plan, now: float, scheduler, stream: int = 0,
+                      *, priority: int = 0,
+                      preemptible: bool = False) -> Optional[RoundReport]:
+        """Train one round on everything buffered for `stream` (plus one
+        replay batch), charge the ledger (attributed to that stream), and
+        reserve device time on the scheduler. Returns None when nothing is
+        buffered.
+
+        With ``preemptible=True`` the round *launches* instead of running
+        to completion: its cost is fixed and the device reserved up front
+        (at the stream's `priority`), but batches train lazily as the
+        timeline covers them, so a higher-priority arrival can split the
+        occupancy (`preempt`) and the round completes only when
+        `finalize_round` is called at/after its reservation's end. In
+        that mode this method returns None and the caller polls
+        `active_round` / `finalize_round`."""
+        if not self.buffers.get(stream):
+            return None
+        assert self.active_round is None, "previous round not finalized"
+        recompile = 0
+        if plan not in self.compiled_plans:
+            self.compiled_plans.add(plan)
+            recompile = 1
+        step = self.steps.get(plan)
+        batches = self.buffers.pop(stream)
+        if self.replay:
+            batches.append(self.replay.sample(self.rng))
+        for h in self.hooks:
+            h.on_round_start(self.ledger.rounds)
+        if not preemptible:
+            # legacy synchronous path — bit-exact with the pre-QoS runtime
+            for b in batches:
+                self._train_batch(step, b)
+            flops, t, e, parts = self._round_cost(plan, batches, recompile)
+            self.ledger.charge_round(flops=flops, time_s=t, energy_j=e,
+                                     parts=parts, stream=stream)
+            start, end = scheduler.occupy(now, t, stream=stream,
+                                          priority=priority)
+            return RoundReport(iters=len(batches), flops=flops, time_s=t,
+                               energy_j=e, recompiled=bool(recompile),
+                               start=start, end=end, stream=stream)
+        flops, t, e, parts = self._round_cost(plan, batches, recompile)
+        res = scheduler.occupy(now, t, stream=stream, priority=priority,
+                               preemptible=True)
+        self.active_round = ActiveRound(step, plan, stream, batches, flops,
+                                        t, e, parts, bool(recompile), res)
+        return None
+
+    def _advance_training(self, ar: ActiveRound, elapsed: float) -> None:
+        """Train every batch whose modeled completion point lies within
+        the first `elapsed` seconds of the round (uniform per-batch
+        spread; mid-batch progress is carried by the time accounting, not
+        re-done)."""
+        n = len(ar.batches)
+        target = min(n, int(n * elapsed / max(ar.time_s, 1e-12)))
+        while ar.trained < target:
+            self._train_batch(ar.step, ar.batches[ar.trained])
+            ar.trained += 1
+
+    def _charge_segment(self, ar: ActiveRound, seg_dur: float,
+                        final: bool) -> None:
+        """Charge one occupancy segment: proportional slices of every cost
+        component, except the final segment which charges the exact
+        remainder (so segments sum to the unpreempted round's charge with
+        no float drift)."""
+        if final:
+            time_s = ar.time_s - ar.charged["time_s"]
+            energy_j = ar.energy_j - ar.charged["energy_j"]
+            flops = ar.flops - ar.charged["flops"]
+            parts = {k: v - ar.charged_parts[k] for k, v in ar.parts.items()}
+        else:
+            f = seg_dur / max(ar.time_s, 1e-12)
+            time_s, energy_j, flops = (ar.time_s * f, ar.energy_j * f,
+                                       ar.flops * f)
+            parts = {k: v * f for k, v in ar.parts.items()}
+        self.ledger.charge_round_segment(flops=flops, time_s=time_s,
+                                         energy_j=energy_j, parts=parts,
+                                         stream=ar.stream, final=final)
+        ar.charged["time_s"] += time_s
+        ar.charged["energy_j"] += energy_j
+        ar.charged["flops"] += flops
+        for k, v in parts.items():
+            ar.charged_parts[k] += v
+        ar.segments += 1
+
+    def preempt(self, t: float, scheduler) -> None:
+        """A higher-priority arrival at time `t` splits the in-flight
+        round: train the batches the device completed by `t`, charge the
+        elapsed segment to the round's stream, and immediately re-occupy
+        the remainder (the arrival only claims the preemption *point* —
+        serving is instantaneous in this cost model, so the round's end
+        time is unchanged). Callers gate on `scheduler.can_preempt`."""
+        ar = self.active_round
+        assert ar is not None, "no active round to preempt"
+        if t == ar.seg_start:
+            # same-instant arrival: the round is already split at exactly
+            # `t` (or has not yet run at all) — zero occupancy elapsed, so
+            # there is no segment to charge and physically only one split;
+            # the arrival is simply served at the existing preemption point
+            return
+        self._advance_training(ar, ar.charged["time_s"] + (t - ar.seg_start))
+        self._charge_segment(ar, t - ar.seg_start, final=False)
+        self.ledger.note_preemption(ar.stream)
+        ar.preemptions += 1
+        remaining = scheduler.preempt(t)
+        ar.reservation = scheduler.occupy(
+            t, remaining, stream=ar.stream,
+            priority=ar.reservation.priority, preemptible=True)
+        ar.seg_start = t
+
+    def finalize_round(self, now: Optional[float] = None
+                       ) -> Optional[RoundReport]:
+        """Complete the in-flight preemptible round: train the remaining
+        batches, charge the final segment (exact remainder), and report.
+        No-op (None) when no round is active or, if `now` is given, while
+        the reservation has not yet elapsed (``now < end``)."""
+        ar = self.active_round
+        if ar is None or (now is not None and now < ar.end):
+            return None
+        while ar.trained < len(ar.batches):
+            self._train_batch(ar.step, ar.batches[ar.trained])
+            ar.trained += 1
+        self._charge_segment(ar, ar.end - ar.seg_start, final=True)
+        self.active_round = None
+        return RoundReport(iters=len(ar.batches), flops=ar.flops,
+                           time_s=ar.time_s, energy_j=ar.energy_j,
+                           recompiled=ar.recompiled, start=ar.first_start,
+                           end=ar.end, stream=ar.stream,
+                           segments=ar.segments, preemptions=ar.preemptions)
 
 
 # ---------------------------------------------------------------------------

@@ -71,6 +71,11 @@ class InferenceServer:
         # recorded outcomes (global, plus a per-stream view)
         self.accs: List[float] = []
         self.accs_by_stream: Dict[int, List[float]] = {}
+        # recorded serving latency (request arrival -> modeled service
+        # time, seconds) per arrival stream; purely observational — the
+        # composition root computes it from device occupancy (QoS
+        # preemption drives a high-priority request's latency to 0)
+        self.latencies_by_stream: Dict[int, List[float]] = {}
         self.served = 0
         self.eval_calls = 0
         self.change_detected = False
@@ -92,13 +97,25 @@ class InferenceServer:
 
     # ---- request path ----------------------------------------------------
     def submit(self, t: float, request: Dict[str, np.ndarray],
-               stream: int = 0) -> None:
+               stream: int = 0, latency: float = 0.0) -> None:
         """Serve (or enqueue) one inference request arriving at time `t` on
         arrival stream `stream`. The params are resolved *now* —
         arrival-time visibility — so coalescing never changes which model
         state answers a request. Requests from different streams may share
         a coalesced group (one device, one forward pass); accuracy
-        recording and `on_served` routing stay per-request."""
+        recording and `on_served` routing stay per-request.
+
+        Coalescing window semantics (pinned by a boundary-value test in
+        tests/test_scheduler.py): the window is **closed** — a request
+        landing at *exactly* ``first.time + batch_window`` still joins the
+        open group; only a strictly later one starts a new group. `expire`
+        uses the same closed-boundary rule, so the two paths can never
+        disagree about a group's fate.
+
+        `latency` is the caller-computed serving latency (arrival ->
+        modeled service time); it is recorded per stream and reported via
+        `RunResult.per_stream` percentiles, never acted on here."""
+        self.latencies_by_stream.setdefault(stream, []).append(float(latency))
         params = self._resolve(t)
         if self.batch_window <= 0.0:
             self._serve([_Pending(t, request, params, stream)])
@@ -118,7 +135,11 @@ class InferenceServer:
         The composition root calls this as the timeline advances so a
         coalesced group (and anything latched by its `on_served`
         callbacks, e.g. scenario-change detection) is never deferred past
-        its window just because no further request arrived."""
+        its window just because no further request arrived. Boundary rule
+        matches `submit` (closed window): at ``now == first.time +
+        batch_window`` the group is still open — a request landing at
+        that exact instant must coalesce — and it expires only strictly
+        after."""
         if self._queue and now - self._queue[0].time > self.batch_window:
             self.flush()
 

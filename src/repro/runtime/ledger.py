@@ -23,8 +23,11 @@ BREAKDOWN_KEYS = ("t_compute", "t_overhead", "e_compute", "e_overhead",
 #: Per-stream attribution keys: every charge lands both in the global
 #: totals and in `per_stream[stream]` under these names, so a multi-stream
 #: run can answer "which stream spent the joules" (and tests can assert the
-#: attributions always sum back to the totals).
-STREAM_KEYS = ("time_s", "energy_j", "flops", "rounds")
+#: attributions always sum back to the totals). `preemptions` counts how
+#: many times the stream's in-flight round was split by a higher-priority
+#: arrival (QoS preemption; it is a counter, not a cost — excluded from
+#: the sums-to-totals contract, which covers the first four keys).
+STREAM_KEYS = ("time_s", "energy_j", "flops", "rounds", "preemptions")
 
 
 @dataclass
@@ -46,17 +49,39 @@ class CostLedger:
         """One fine-tuning round: `parts` is EdgeCostModel's breakdown dict
         (t_compute/t_overhead/e_compute/e_overhead); `stream` is the
         arrival stream whose buffered batches the round trained."""
+        self.charge_round_segment(flops=flops, time_s=time_s,
+                                  energy_j=energy_j, parts=parts,
+                                  stream=stream, final=True)
+
+    def charge_round_segment(self, *, flops: float, time_s: float,
+                             energy_j: float, parts: Dict[str, float],
+                             stream: int = 0, final: bool = True) -> None:
+        """One *segment* of a (possibly preempted) round. A preemptible
+        round charges each occupancy segment as it completes; the caller
+        splits the round's total cost across segments so they sum exactly
+        to the unpreempted round's charge. `final=True` on the last (or
+        only) segment counts the round itself."""
         self.total_time_s += time_s
         self.total_energy_j += energy_j
         self.total_flops += flops
-        self.rounds += 1
         for k in ("t_compute", "t_overhead", "e_compute", "e_overhead"):
             self.breakdown[k] += parts[k]
         per = self._stream(stream)
         per["time_s"] += time_s
         per["energy_j"] += energy_j
         per["flops"] += flops
-        per["rounds"] += 1
+        if final:
+            self.rounds += 1
+            per["rounds"] += 1
+
+    def note_preemption(self, stream: int = 0) -> None:
+        """A higher-priority arrival split `stream`'s in-flight round."""
+        self._stream(stream)["preemptions"] += 1
+
+    @property
+    def preemptions(self) -> int:
+        return int(sum(v.get("preemptions", 0)
+                       for v in self.per_stream.values()))
 
     def charge_probe(self, key: str, time_s: float, energy_j: float,
                      stream: int = 0) -> None:

@@ -17,17 +17,44 @@ composition root in response to the callbacks emitted here.
 from __future__ import annotations
 
 import heapq
+from dataclasses import dataclass
 from typing import Callable, Dict, Iterable, Optional
 
-# Events pop in (time, kind, insertion-order) order: `"data" <
-# "inference"` (KIND_ORDER), matching build_timeline's sort and
-# workloads/generators.compile_workload's, so a pre-built timeline
-# replays in exactly its constructed order.
+# Events pop in (time, kind, -priority, insertion-order) order: `"data" <
+# "inference"` (KIND_ORDER), then higher `Event.priority` first, matching
+# build_timeline's sort and workloads/generators.compile_workload's, so a
+# pre-built timeline replays in exactly its constructed order. Priority 0
+# everywhere (the legacy case) degenerates to the original
+# (time, kind, insertion) order.
 from repro.data.arrivals import KIND_ORDER, Event
 
 OnData = Callable[[Event, bool], None]          # (event, scenario_boundary)
 OnInference = Callable[[Event], None]
 OnScenarioChange = Callable[[int, Event], None]  # (previous_scenario, event)
+
+
+@dataclass
+class Reservation:
+    """One granted slice of device time (`occupy`'s return value).
+
+    Iterable as ``(start, end)`` so legacy ``start, end = occupy(...)``
+    call sites keep working. A *preemptible* reservation may be split by
+    `EventScheduler.preempt`: its `end` is pulled back to the preemption
+    instant and the caller re-occupies the returned remainder, so one
+    logical fine-tuning round becomes several reservations (segments)
+    whose durations sum to the original grant."""
+    start: float
+    end: float
+    stream: int = 0
+    priority: int = 0
+    preemptible: bool = False
+
+    @property
+    def duration(self) -> float:
+        return self.end - self.start
+
+    def __iter__(self):
+        return iter((self.start, self.end))
 
 
 class EventScheduler:
@@ -37,8 +64,11 @@ class EventScheduler:
       mid-run, e.g. detector-driven probes); dispatch is always
       time-ordered, stable for ties.
     - `occupy(start, duration)` models the device being busy: the actual
-      start is delayed past any in-flight work (`busy_until`), and the new
-      `busy_until` is returned so callers can timestamp visibility.
+      start is delayed past any in-flight work (`busy_until`), and the
+      returned `Reservation` carries the granted interval so callers can
+      timestamp visibility. A *preemptible* reservation can be split at a
+      strictly-higher-priority arrival (`can_preempt`/`preempt`) — QoS
+      preemption, DESIGN.md §8.
     - scenario progress is tracked **per stream** (`scenario_of(stream)`):
       a stream's counter advances when one of its data events carries a new
       scenario id; the boundary is surfaced both via `on_scenario_change`
@@ -59,12 +89,14 @@ class EventScheduler:
         self.current_scenario = 0
         self.stream_scenarios: Dict[int, int] = {}
         self.dispatched = 0
+        self.reservation: Optional[Reservation] = None  # in-flight grant
         for e in events:
             self.push(e)
 
     # ---- queue -----------------------------------------------------------
     def push(self, event: Event) -> None:
-        key = (event.time, KIND_ORDER.get(event.kind, 2), self._seq)
+        key = (event.time, KIND_ORDER.get(event.kind, 2),
+               -getattr(event, "priority", 0), self._seq)
         heapq.heappush(self._heap, (key, event))
         self._seq += 1
 
@@ -85,13 +117,43 @@ class EventScheduler:
         """True when the device can start new work at time `t`."""
         return t >= self.busy_until
 
-    def occupy(self, start: float, duration: float):
+    def occupy(self, start: float, duration: float, *, stream: int = 0,
+               priority: int = 0, preemptible: bool = False) -> Reservation:
         """Reserve the device for `duration` seconds, no earlier than
-        `start` and never overlapping in-flight work. Returns the
-        (actual_start, end) interval; `busy_until` advances to `end`."""
+        `start` and never overlapping in-flight work. Returns a
+        `Reservation` (unpacks as ``(actual_start, end)`` for legacy
+        callers); `busy_until` advances to its end. A `preemptible`
+        reservation may later be split by `preempt`."""
         actual = max(start, self.busy_until)
         self.busy_until = actual + duration
-        return actual, self.busy_until
+        self.reservation = Reservation(actual, self.busy_until, stream,
+                                       priority, preemptible)
+        return self.reservation
+
+    def can_preempt(self, t: float, priority: int) -> bool:
+        """True when an arrival of `priority` at time `t` may split the
+        in-flight reservation: the device is busy, the reservation opted
+        in, and the arrival outranks the reservation's stream."""
+        r = self.reservation
+        return (r is not None and r.preemptible and t < r.end
+                and t >= r.start and priority > r.priority)
+
+    def preempt(self, t: float) -> float:
+        """Split the in-flight reservation at time `t`: its `end` is
+        pulled back to `t` (the completed segment), `busy_until` rewinds
+        with it, and the unserved remainder (seconds) is returned — the
+        owner re-occupies it (usually immediately, yielding only the
+        preemption *point* to the arrival). Callers gate on
+        `can_preempt`; splitting a non-preemptible reservation is always
+        an error (its cost was charged as one synchronous round)."""
+        r = self.reservation
+        if r is None or not r.preemptible or t < r.start or t >= r.end:
+            raise ValueError(f"no preemptible reservation to split at t={t}")
+        remaining = r.end - t
+        r.end = t
+        self.busy_until = t
+        self.reservation = None
+        return remaining
 
     # ---- dispatch --------------------------------------------------------
     def run(self, *, on_data: OnData, on_inference: OnInference,

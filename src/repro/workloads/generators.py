@@ -152,26 +152,28 @@ def stream_events(spec: WorkloadSpec, stream: int,
         t = offset + sc * span + np.minimum(t, span - 1e-3)
         for i, ti in enumerate(t):
             events.append(Event(float(ti), "data", first_scenario + sc, i,
-                                stream=stream))
+                                stream=stream, priority=s.priority))
     # -- inference requests: over the whole horizon ------------------------
     t = _arrival_times(s.inf_dist, s.inferences, horizon, rng, s)
     t = offset + np.minimum(t, horizon - 1e-3)
     for i, ti in enumerate(t):
         sc = min(int((ti - offset) // span), spec.num_scenarios - 1)
         events.append(Event(float(ti), "inference", first_scenario + sc, i,
-                            stream=stream))
+                            stream=stream, priority=s.priority))
     return events
 
 
 def compile_workload(spec: WorkloadSpec,
                      first_scenario: int = 1) -> List[Event]:
     """Merged, time-sorted multi-stream timeline for `spec`. Ties break
-    (kind: data first, then stream, then index) — a total order, so the
-    compiled timeline is deterministic given the spec."""
+    (kind: data first, then higher priority, then stream, then index) — a
+    total order matching `EventScheduler`'s heap key, so the compiled
+    timeline is deterministic given the spec and replays in exactly its
+    constructed order."""
     spec.validate()
     events: List[Event] = []
     for stream in range(len(spec.streams)):
         events.extend(stream_events(spec, stream, first_scenario))
     events.sort(key=lambda e: (e.time, KIND_ORDER.get(e.kind, 2),
-                               e.stream, e.index))
+                               -e.priority, e.stream, e.index))
     return events

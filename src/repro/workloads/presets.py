@@ -63,6 +63,20 @@ def presets(*, batches_per_scenario: int = 8, inferences: int = 24,
                          inferences=max(inferences // 2, 4),
                          phase=scenario_span / 7)),
                      **geom),
+        # QoS: a latency-critical query stream (high priority, few
+        # training batches, many requests) sharing the device with a bulk
+        # tuning stream (priority 0, heavy batch load — its rounds keep
+        # the device busy, which is exactly what preemption must cut
+        # through). The sweep runs this preset with preemption off and on
+        # and reports per-stream p50/p95 serving latency.
+        WorkloadSpec("qos",
+                     (cv(priority=2, inferences=inferences * 2,
+                         batches_per_scenario=max(
+                             batches_per_scenario // 2, 2)),
+                      cv(benchmark="ni", priority=0,
+                         batches_per_scenario=batches_per_scenario * 2,
+                         inferences=max(inferences // 2, 4))),
+                     **geom),
     ]
     return {s.validate().name: s for s in specs}
 

@@ -67,6 +67,12 @@ class StreamSpec:
     batches_per_scenario: int = 8
     inferences: int = 24              # requests over the whole horizon
     phase: float = 0.0                # wall-clock offset of this stream
+    # QoS priority (higher = more latency-critical): rides on every event
+    # the stream emits; at equal timestamps higher-priority events
+    # dispatch first, and when the runtime runs `preemptible=True` the
+    # stream's inference arrivals split in-flight fine-tuning rounds of
+    # strictly lower-priority streams. 0 = bulk / best-effort.
+    priority: int = 0
     mmpp: Optional[MMPPConfig] = None
     diurnal: Optional[DiurnalConfig] = None
     duty_cycle: Optional[DutyCycle] = None
@@ -99,6 +105,10 @@ class WorkloadSpec:
             raise ValueError(f"workload {self.name!r}: drift {self.drift!r} "
                              f"not in {DRIFT_SCHEDULES}")
         for i, s in enumerate(self.streams):
+            if not isinstance(s.priority, int) or s.priority < 0:
+                raise ValueError(
+                    f"workload {self.name!r} stream {i}: priority must be "
+                    f"a non-negative int (got {s.priority!r})")
             for d in (s.data_dist, s.inf_dist):
                 if d not in ARRIVAL_DISTS:
                     raise ValueError(

@@ -1,0 +1,307 @@
+"""QoS layer tests: preemptible fine-tuning rounds (segment-charged cost
+conservation, checkpointed batch iterator), serving-latency accounting on
+the qos preset, and the multi-stream runtime bugfix regressions (unseen
+stream pushed mid-run; per-stream `start_scenario` latch with a shared
+controller)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import ETunerConfig, ETunerController
+from repro.data import streams
+from repro.data.arrivals import Event
+from repro.models import build_model
+from repro.runtime.continual import ContinualRuntime
+from repro.runtime.costmodel import EdgeCostModel
+from repro.runtime.executor import FineTuneExecutor, ReplayBuffer
+from repro.runtime.ledger import CostLedger
+from repro.runtime.scheduler import EventScheduler
+from repro.workloads import compile_workload, presets
+
+
+# ---------------------------------------------------------------------------
+# executor-level property: preempted segments conserve the round's cost
+
+
+class _FakeSteps:
+    """TrainStepCache stand-in: params count applied batches, fixed
+    per-batch FLOPs — no jit, no model."""
+    recompiles = 0
+
+    def get(self, plan):
+        return lambda p, o, b: (p + 1, o, 0.0)
+
+    def flops(self, plan, jb):
+        return 1e9
+
+
+def _mk_executor():
+    ledger = CostLedger()
+    ex = FineTuneExecutor(_FakeSteps(), EdgeCostModel(), ledger,
+                          ReplayBuffer(), rng=np.random.default_rng(0),
+                          calibrate_cost=False)
+    ex.load(0, None)
+    return ex, ledger
+
+
+def _run_round(split_fracs):
+    """One 5-batch round, preempted at each fraction of its duration (empty
+    tuple = the synchronous unpreempted path). Returns (ledger, report,
+    params)."""
+    ex, ledger = _mk_executor()
+    for _ in range(5):
+        ex.enqueue({"x": np.zeros(2, np.float32)}, stream=1)
+    sched = EventScheduler()
+    if not split_fracs:
+        report = ex.execute_round("plan", 10.0, sched, stream=1)
+        return ledger, report, ex.params
+    assert ex.execute_round("plan", 10.0, sched, stream=1, priority=0,
+                            preemptible=True) is None
+    total = ex.active_round.time_s
+    for f in split_fracs:
+        t = 10.0 + f * total
+        assert sched.can_preempt(t, priority=9)
+        ex.preempt(t, sched)
+    report = ex.finalize_round()
+    return ledger, report, ex.params
+
+
+@pytest.mark.parametrize("splits", [(0.5,), (0.2, 0.4, 0.9), (0.01, 0.99)])
+def test_preempted_round_segments_conserve_cost(splits):
+    """Property (ISSUE satellite): however a round is split, its segment
+    charges sum to the unpreempted round's time/energy/FLOPs/breakdown,
+    the round end is unchanged, and every batch still trains once."""
+    base_ledger, base_report, base_params = _run_round(())
+    led, rep, params = _run_round(splits)
+    assert params == base_params                  # all 5 batches trained
+    assert rep.end == pytest.approx(base_report.end)
+    assert rep.segments == len(splits) + 1
+    assert rep.preemptions == len(splits)
+    assert led.rounds == base_ledger.rounds == 1
+    assert led.total_time_s == pytest.approx(base_ledger.total_time_s,
+                                             rel=1e-12)
+    assert led.total_energy_j == pytest.approx(base_ledger.total_energy_j,
+                                               rel=1e-12)
+    assert led.total_flops == pytest.approx(base_ledger.total_flops,
+                                            rel=1e-12)
+    for k, v in base_ledger.breakdown.items():
+        assert led.breakdown[k] == pytest.approx(v, rel=1e-12, abs=1e-15)
+    for k in ("time_s", "energy_j", "flops", "rounds"):
+        assert led.per_stream[1][k] == pytest.approx(
+            base_ledger.per_stream[1][k], rel=1e-12)
+    assert led.per_stream[1]["preemptions"] == len(splits)
+
+
+def test_same_instant_arrivals_count_one_preemption():
+    """Several high-priority requests clamped to one timestamp (the
+    generators pin overflow arrivals to the horizon) ride a single split:
+    re-preempting at the existing segment start is a no-op — no
+    zero-duration segment, no inflated preemption count."""
+    ex, ledger = _mk_executor()
+    for _ in range(4):
+        ex.enqueue({"x": np.zeros(2, np.float32)}, stream=1)
+    sched = EventScheduler()
+    ex.execute_round("plan", 0.0, sched, stream=1, preemptible=True)
+    t = 0.5 * ex.active_round.time_s
+    ex.preempt(t, sched)
+    ex.preempt(t, sched)     # same-instant re-preempt: no-op
+    ex.preempt(t, sched)     # and again — still one physical split
+    report = ex.finalize_round()
+    assert report.preemptions == 1 and report.segments == 2
+    assert ledger.per_stream[1]["preemptions"] == 1
+
+
+def test_preemption_checkpoints_batch_iterator():
+    """Mid-round preemption trains exactly the batches the device had
+    completed by the split instant — the rest stay checkpointed."""
+    ex, _ = _mk_executor()
+    for _ in range(4):
+        ex.enqueue({"x": np.zeros(2, np.float32)})
+    sched = EventScheduler()
+    ex.execute_round("plan", 0.0, sched, preemptible=True)
+    ar = ex.active_round
+    ex.preempt(0.5 * ar.time_s, sched)     # half the round -> 2 of 4 batches
+    assert ar.trained == 2 and ex.params == 2
+    ex.finalize_round()
+    assert ex.params == 4 and ex.active_round is None
+
+
+# ---------------------------------------------------------------------------
+# runtime-level: the qos preset with preemption off/on
+
+
+def _immed(model):
+    return ETunerController(model, ETunerConfig(
+        lazytune=False, simfreeze=False, detect_scenario_changes=False))
+
+
+@pytest.fixture(scope="module")
+def qos_runs():
+    spec = presets(batches_per_scenario=4, inferences=10,
+                   num_scenarios=2)["qos"]
+    events = compile_workload(spec)
+
+    def run(preemptible):
+        model = build_model(get_reduced("mobilenetv2"))
+        b0 = streams.nc_benchmark(num_scenarios=3, batches=4, batch_size=8,
+                                  seed=0)
+        b1 = streams.ni_benchmark(num_scenarios=3, batches=8, batch_size=8,
+                                  seed=13)
+        rt = ContinualRuntime(model, b0, _immed(model), pretrain_epochs=1,
+                              seed=0, stream_benchmarks={1: b1},
+                              controller_factory=lambda st: _immed(model),
+                              preemptible=preemptible)
+        return rt.run(events=events)
+
+    return run(False), run(True)
+
+
+def test_qos_preemption_cuts_high_priority_latency(qos_runs):
+    """Acceptance criterion: the high-priority stream's p95 serving
+    latency is strictly lower with preemption on, and preemptions are
+    attributed to the bulk stream whose rounds were split."""
+    off, on = qos_runs
+    assert off.preemptions == 0
+    assert on.preemptions > 0
+    assert on.per_stream[1]["preemptions"] == on.preemptions  # bulk stream
+    assert on.per_stream[0]["preemptions"] == 0
+    assert on.per_stream[0]["latency_p95"] < off.per_stream[0]["latency_p95"]
+
+
+def test_max_staleness_starvation_guard():
+    """`ETunerConfig.max_staleness` forces a round for a stream that has
+    gone that long without one, overriding LazyTune's accumulation target
+    — but never fires with an empty buffer."""
+    model = build_model(get_reduced("mobilenetv2"))
+    ctrl = ETunerController(model, ETunerConfig(
+        lazytune=True, simfreeze=False, detect_scenario_changes=False,
+        max_staleness=30.0))
+    ctrl.lazytune.state.batches_needed = 4.0  # LazyTune wants to wait
+    assert not ctrl.should_trigger(1, staleness=0.0)
+    assert not ctrl.should_trigger(1, staleness=29.9)
+    assert ctrl.should_trigger(1, staleness=30.0)   # starved: force it
+    assert not ctrl.should_trigger(0, staleness=99.0)  # nothing buffered
+    fresh = ETunerController(model, ETunerConfig(
+        lazytune=True, simfreeze=False, detect_scenario_changes=False))
+    fresh.lazytune.state.batches_needed = 4.0
+    assert not fresh.should_trigger(1, staleness=1e9)  # default: disabled
+
+
+def test_qos_preemption_conserves_totals(qos_runs):
+    """Splitting rounds must not change what the run costs: segment
+    charges reconcile to the same totals as the unpreempted run."""
+    off, on = qos_runs
+    assert on.rounds == off.rounds
+    # val_curve parity additionally pins that a lazily-finalized round
+    # validates against the scenario current at its *launch* (not
+    # whatever the stream drifted to by finalize time)
+    np.testing.assert_allclose(on.val_curve, off.val_curve, atol=1e-6)
+    np.testing.assert_allclose(on.total_time_s, off.total_time_s,
+                               rtol=1e-9)
+    np.testing.assert_allclose(on.total_energy_j, off.total_energy_j,
+                               rtol=1e-9)
+    np.testing.assert_allclose(on.compute_tflops, off.compute_tflops,
+                               rtol=1e-9)
+    for st in (0, 1):
+        for key in ("time_s", "energy_j", "flops", "rounds"):
+            np.testing.assert_allclose(on.per_stream[st][key],
+                                       off.per_stream[st][key], rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# bugfix regressions (ISSUE satellites)
+
+
+def _tiny_runtime(ctrl_cls=ETunerController, **kw):
+    model = build_model(get_reduced("mobilenetv2"))
+    bench = streams.nc_benchmark(num_classes=10, num_scenarios=3, batches=3,
+                                 batch_size=8, seed=0)
+    ctrl = ctrl_cls(model, ETunerConfig(
+        lazytune=False, simfreeze=False, detect_scenario_changes=False))
+    return ContinualRuntime(model, bench, ctrl, pretrain_epochs=1, seed=0,
+                            **kw), ctrl
+
+
+def test_unseen_stream_pushed_mid_run_does_not_crash():
+    """Regression (ISSUE satellite): an Event carrying a stream id the
+    start-of-run list never saw — pushed onto the live scheduler from
+    inside a callback, the detector-driven-probe pattern — used to
+    KeyError in on_data/served; it now defaults to the primary
+    controller/benchmark and is fully accounted."""
+    rt, ctrl = _tiny_runtime()
+    pushed = []
+
+    orig_served = ctrl.inference_served
+
+    def served_and_push(logits):
+        if not pushed:
+            pushed.append(True)
+            now = rt.scheduler.now
+            rt.scheduler.push(Event(now + 1.0, "data", 1, 0, stream=7))
+            rt.scheduler.push(Event(now + 1.5, "inference", 1, 0, stream=7))
+        return orig_served(logits)
+
+    ctrl.inference_served = served_and_push
+    events = [Event(1.0, "data", 1, 0), Event(2.0, "inference", 1, 0),
+              Event(10.0, "data", 1, 1), Event(30.0, "data", 2, 0)]
+    res = rt.run(events=events)
+    assert pushed
+    assert 7 in res.per_stream
+    assert res.per_stream[7]["inferences"] == 1.0
+    assert res.per_stream[7]["rounds"] >= 1  # its data batch fine-tuned
+
+
+def test_lazy_finalize_validates_against_launch_scenario(monkeypatch):
+    """A preemptible round finalized *after* its stream drifted must
+    validate against the scenario whose batches it trained (snapshotted
+    at launch) — the scheduler's scenario bookkeeping advances before
+    on_data's settle, so reading it at finalize time would grade round 1
+    on scenario 2's val split. Spies on the val batches actually
+    evaluated."""
+    import repro.runtime.continual as C
+
+    val_labels = []
+    real_eval = C.evaluate
+
+    def spy(model, params, batch):
+        val_labels.append(np.asarray(batch["labels"]))
+        return real_eval(model, params, batch)
+
+    monkeypatch.setattr(C, "evaluate", spy)
+    rt, _ = _tiny_runtime(preemptible=True)
+    events = [Event(1.0, "data", 1, 0),
+              Event(50.0, "data", 2, 0),   # boundary event finalizes it
+              Event(60.0, "data", 2, 1)]
+    res = rt.run(events=events)
+    assert res.rounds == 3 and len(val_labels) == 3
+    np.testing.assert_array_equal(
+        val_labels[0], np.asarray(rt.bench.scenarios[1].val["labels"]))
+    np.testing.assert_array_equal(
+        val_labels[1], np.asarray(rt.bench.scenarios[2].val["labels"]))
+
+
+class _StartCountingController(ETunerController):
+    def __init__(self, model, cfg):
+        super().__init__(model, cfg)
+        self.starts = 0
+
+    def start_scenario(self, reference_params, probe_batch):
+        self.starts += 1
+        super().start_scenario(reference_params, probe_batch)
+
+
+def test_shared_controller_start_scenario_not_suppressed_across_streams():
+    """Regression (ISSUE satellite): the `_scenario_started` latch used to
+    live on the controller object, so streams sharing one controller (no
+    controller_factory) leaked start state into each other; it now lives
+    in a per-stream dict in the runtime, and no attribute is written onto
+    the user-owned controller."""
+    rt, ctrl = _tiny_runtime(ctrl_cls=_StartCountingController)
+    events = [Event(1.0, "data", 1, 0, stream=0),
+              Event(2.0, "data", 1, 0, stream=1),
+              Event(3.0, "data", 1, 1, stream=1)]
+    rt.run(events=events)
+    # one start per stream's first scenario; the third event (same stream,
+    # same scenario) must not re-start
+    assert ctrl.starts == 2
+    assert not hasattr(ctrl, "_scenario_started")

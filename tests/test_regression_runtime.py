@@ -85,6 +85,13 @@ def test_hooks_match_pre_refactor_runtime(golden):
            golden["semi_quant"])
 
 
+def test_preemptible_off_replays_golden(golden):
+    """QoS off (`preemptible=False`, explicit) keeps the runtime on the
+    synchronous round path: the golden trace replays bit-exact, so the
+    QoS layer is provably inert unless opted into."""
+    _check(_run("etuner", preemptible=False), golden["etuner"])
+
+
 # ---------------------------------------------------------------------------
 # micro-batched serving equivalence
 

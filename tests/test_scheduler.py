@@ -132,6 +132,51 @@ def test_scheduler_multi_stream_dispatch_deterministic():
     assert [t for _, t, _ in orders[0]] == sorted(t for _, t, _ in orders[0])
 
 
+def test_scheduler_priority_orders_equal_time_events():
+    """QoS tie-break: at equal timestamps, kind still wins (data before
+    inference), then higher `Event.priority` dispatches first; priority-0
+    timelines keep the exact legacy (time, kind, insertion) order."""
+    sched = EventScheduler([Event(1.0, "inference", 0, 0, stream=0),
+                            Event(1.0, "inference", 0, 1, stream=1, priority=5),
+                            Event(1.0, "data", 0, 0, stream=2),
+                            Event(1.0, "data", 0, 1, stream=3, priority=1)])
+    seen = []
+    sched.run(on_data=lambda ev, b: seen.append(("d", ev.stream)),
+              on_inference=lambda ev: seen.append(("i", ev.stream)))
+    assert seen == [("d", 3), ("d", 2), ("i", 1), ("i", 0)]
+
+
+def test_reservation_unpacks_and_preempts():
+    """`occupy` returns a Reservation that legacy callers tuple-unpack; a
+    preemptible one can be split by a strictly-higher-priority arrival,
+    rewinding `busy_until` so the remainder can be re-reserved."""
+    sched = EventScheduler()
+    res = sched.occupy(1.0, 4.0, stream=1, priority=1, preemptible=True)
+    start, end = res
+    assert (start, end) == (1.0, 5.0)
+    assert res.duration == pytest.approx(4.0)
+    assert sched.can_preempt(2.0, 2)
+    assert not sched.can_preempt(2.0, 1)    # equal priority never preempts
+    assert not sched.can_preempt(5.0, 9)    # past the reservation's end
+    remaining = sched.preempt(2.0)
+    assert remaining == pytest.approx(3.0)
+    assert sched.busy_until == 2.0 and res.end == 2.0
+    res2 = sched.occupy(2.0, remaining, stream=1, priority=1,
+                        preemptible=True)
+    assert (res2.start, res2.end) == (2.0, 5.0)  # round end unchanged
+
+
+def test_non_preemptible_reservation_cannot_be_split():
+    sched = EventScheduler()
+    sched.occupy(0.0, 2.0)  # legacy call: not preemptible
+    assert not sched.can_preempt(1.0, 99)
+    with pytest.raises(ValueError):
+        sched.preempt(1.0)  # inside the interval, but not preemptible
+    assert sched.busy_until == 2.0  # occupancy untouched
+    with pytest.raises(ValueError):
+        sched.preempt(3.0)  # outside any reservation
+
+
 def test_scheduler_single_stream_current_scenario_legacy():
     """`current_scenario` keeps its pre-multi-stream meaning for stream-0
     timelines (the golden regression path)."""
@@ -184,6 +229,39 @@ def test_ledger_per_stream_attribution_sums_to_totals():
                        (led.rounds, "rounds")):
         assert sum(v[key] for v in led.per_stream.values()) == \
             pytest.approx(total)
+
+
+def test_ledger_segment_charges_sum_to_unpreempted_round():
+    """A preempted round charged in proportional segments (final = exact
+    remainder) reconciles with the one-shot charge: same totals, same
+    breakdown, one round counted only at the final segment."""
+    parts = {"t_compute": 1.0, "t_overhead": 2.0,
+             "e_compute": 10.0, "e_overhead": 5.0}
+    whole = CostLedger()
+    whole.charge_round(flops=3e12, time_s=3.0, energy_j=15.0, parts=parts,
+                       stream=1)
+    split = CostLedger()
+    f = 0.3  # first segment: 30% of the round
+    split.charge_round_segment(
+        flops=3e12 * f, time_s=3.0 * f, energy_j=15.0 * f,
+        parts={k: v * f for k, v in parts.items()}, stream=1, final=False)
+    split.note_preemption(stream=1)
+    assert split.rounds == 0  # not a round until the final segment
+    split.charge_round_segment(
+        flops=3e12 - 3e12 * f, time_s=3.0 - 3.0 * f,
+        energy_j=15.0 - 15.0 * f,
+        parts={k: v - v * f for k, v in parts.items()}, stream=1,
+        final=True)
+    assert split.rounds == whole.rounds == 1
+    assert split.total_time_s == pytest.approx(whole.total_time_s)
+    assert split.total_energy_j == pytest.approx(whole.total_energy_j)
+    assert split.total_flops == pytest.approx(whole.total_flops)
+    for k in ("t_compute", "t_overhead", "e_compute", "e_overhead"):
+        assert split.breakdown[k] == pytest.approx(whole.breakdown[k])
+    for k in ("time_s", "energy_j", "flops", "rounds"):
+        assert split.per_stream[1][k] == pytest.approx(whole.per_stream[1][k])
+    assert split.per_stream[1]["preemptions"] == 1
+    assert split.preemptions == 1 and whole.preemptions == 0
 
 
 # ---------------------------------------------------------------------------
@@ -282,6 +360,37 @@ def test_server_per_stream_accuracy_and_signal_routing():
     assert srv.eval_calls == 1               # still one coalesced pass
     assert srv.accs_by_stream == {0: [1.0], 1: [1.0]}
     assert srv.accs == [1.0, 1.0]
+
+
+def test_server_window_boundary_is_closed():
+    """Pinned semantics (submit/expire docstrings): the coalescing window
+    is *closed* — a request landing at exactly ``first.time +
+    batch_window`` joins the open group; only a strictly later arrival
+    starts a new one. `expire` agrees: the group is still open at exactly
+    the boundary instant."""
+    model = _StubModel()
+    srv = InferenceServer(model, batch_window=1.0)
+    srv.publish("good", 0.0)
+    srv.submit(1.0, _req([0]))
+    srv.expire(2.0)                 # exactly first + window: still open
+    assert srv.eval_calls == 0
+    srv.submit(2.0, _req([1]))      # boundary arrival coalesces
+    assert srv.eval_calls == 0
+    srv.submit(2.0 + 1e-9, _req([2]))  # strictly past: new group
+    assert srv.eval_calls == 1 and srv.served == 2
+    srv.expire(3.5)                 # strictly past the new group's window
+    assert srv.eval_calls == 2 and srv.served == 3
+    assert srv.accs == [1.0, 1.0, 1.0]
+
+
+def test_server_records_per_stream_latency():
+    model = _StubModel()
+    srv = InferenceServer(model)
+    srv.publish("good", 0.0)
+    srv.submit(1.0, _req([0]), stream=0, latency=0.0)
+    srv.submit(2.0, _req([1]), stream=1, latency=1.5)
+    srv.submit(3.0, _req([2]), stream=1, latency=0.5)
+    assert srv.latencies_by_stream == {0: [0.0], 1: [1.5, 0.5]}
 
 
 def test_server_on_served_latches_change_detection():

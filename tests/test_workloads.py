@@ -36,6 +36,8 @@ def test_spec_validation_rejects_bad_configs():
         WorkloadSpec("bad-mmpp", (StreamSpec(
             inf_dist="mmpp",
             mmpp=MMPPConfig(burst_mult=0.0)),)).validate()
+    with pytest.raises(ValueError):  # QoS priority must be a non-neg int
+        WorkloadSpec("bad-prio", (StreamSpec(priority=-1),)).validate()
 
 
 # ---------------------------------------------------------------------------
@@ -121,6 +123,19 @@ def test_diurnal_period_is_wall_clock_under_duty_cycle():
                   if e.kind == "inference"]) % 100.0
     # sin peaks at t%100 == 25, troughs at 75
     assert np.sum(t < 50.0) > 1.5 * np.sum(t >= 50.0)
+
+
+def test_qos_preset_threads_priorities_onto_events():
+    """The qos preset mixes a latency-critical stream with a bulk one;
+    `compile_workload` stamps each stream's priority on every one of its
+    events, and equal-time ties sort higher priority first (after kind)."""
+    spec = SPECS["qos"]
+    prios = [s.priority for s in spec.streams]
+    assert prios[0] > prios[1] == 0
+    events = compile_workload(spec)
+    for e in events:
+        assert e.priority == spec.streams[e.stream].priority
+    assert {e.priority for e in events} == set(prios)
 
 
 def test_staggered_drift_offsets_streams():
@@ -221,7 +236,9 @@ def _valid_doc():
     import benchmarks.workloads as W
 
     cell = {f: 1.0 for f in W.CELL_FIELDS}
-    cells = [dict(cell, workload=w, method=m, per_stream={"0": {}})
+    stream_cell = {f: 1.0 for f in W.STREAM_FIELDS}
+    cells = [dict(cell, workload=w, method=m,
+                  per_stream={"0": dict(stream_cell)})
              for w in ("a", "b", "c") for m in W.METHODS]
     return W, {
         "schema_version": W.SCHEMA_VERSION, "suite": "workloads",
@@ -248,5 +265,122 @@ def test_bench_schema_validator_flags_violations():
     bad = dict(doc, cells=[dict(c) for c in doc["cells"]])
     bad["cells"][0]["time_s"] = float("nan")
     assert any("time_s" in e for e in W.validate_bench(bad))
+    bad = dict(doc, cells=[dict(c) for c in doc["cells"]])
+    del bad["cells"][0]["preemptible"]            # v2 QoS cell fields
+    assert any("preemptible" in e for e in W.validate_bench(bad))
     bad = dict(doc, cells=doc["cells"][1:])       # missing one controller
     assert any("missing controllers" in e for e in W.validate_bench(bad))
+    # v2: per-stream attributions must carry the serving-latency columns
+    bad = dict(doc, cells=[dict(c, per_stream={"0": dict(c["per_stream"]["0"])})
+                           for c in doc["cells"]])
+    del bad["cells"][0]["per_stream"]["0"]["latency_p95"]
+    assert any("latency_p95" in e for e in W.validate_bench(bad))
+
+
+# ---------------------------------------------------------------------------
+# bench_diff: BENCH trajectory regression gate (CI tooling)
+
+
+def _diff_docs():
+    cell = {"workload": "w", "method": "immed", "preemptible": 0,
+            "acc": 0.5, "time_s": 10.0, "energy_j": 100.0, "tflops": 1.0,
+            "rounds": 5, "recompiles": 1, "preemptions": 0}
+    base = {"schema_version": 2, "cells": [dict(cell)]}
+    new = {"schema_version": 2, "cells": [dict(cell)]}
+    return base, new
+
+
+def test_bench_diff_within_noise_passes():
+    import benchmarks.bench_diff as BD
+
+    base, new = _diff_docs()
+    new["cells"][0]["time_s"] = 10.3   # +3% < 5% threshold
+    new["cells"][0]["acc"] = 0.49      # -2% < 5% threshold
+    regressions, _ = BD.diff_cells(base, new, threshold=0.05)
+    assert regressions == []
+
+
+def test_bench_diff_flags_directional_regressions():
+    """acc regresses *down*, modeled costs regress *up*; improvements in
+    either direction never fail."""
+    import benchmarks.bench_diff as BD
+
+    base, new = _diff_docs()
+    new["cells"][0]["acc"] = 0.4       # -20%: regression at acc thr 5%
+    new["cells"][0]["time_s"] = 12.0   # +20%: regression
+    new["cells"][0]["energy_j"] = 80.0  # -20%: improvement, not a failure
+    regressions, infos = BD.diff_cells(base, new, threshold=0.05,
+                                       acc_threshold=0.05)
+    assert len(regressions) == 2
+    assert any("acc" in r for r in regressions)
+    assert any("time_s" in r for r in regressions)
+    assert any("energy_j" in i and "improvement" in i for i in infos)
+
+
+def test_bench_diff_acc_has_its_own_wider_threshold():
+    """A borderline-request flip (float drift across machines) moves acc
+    by a few % relative — inside the default acc threshold even when the
+    cost threshold is tight; a genuine accuracy collapse still fails."""
+    import benchmarks.bench_diff as BD
+
+    base, new = _diff_docs()
+    new["cells"][0]["acc"] = 0.45      # -10%: within default acc noise
+    regressions, _ = BD.diff_cells(base, new, threshold=0.05)
+    assert regressions == []
+    new["cells"][0]["acc"] = 0.3       # -40%: a real collapse
+    regressions, _ = BD.diff_cells(base, new, threshold=0.05)
+    assert len(regressions) == 1 and "acc" in regressions[0]
+
+
+def test_bench_diff_missing_cell_is_a_regression():
+    import benchmarks.bench_diff as BD
+
+    base, new = _diff_docs()
+    new["cells"] = []
+    regressions, _ = BD.diff_cells(base, new)
+    assert len(regressions) == 1 and "missing" in regressions[0]
+
+
+def test_bench_diff_new_cell_and_preemptible_key():
+    """`preemptible` participates in cell identity (a prioritized preset
+    runs once per QoS mode); a cell present only in the new artifact is
+    informational."""
+    import benchmarks.bench_diff as BD
+
+    base, new = _diff_docs()
+    extra = dict(new["cells"][0], preemptible=1)
+    new["cells"].append(extra)
+    regressions, infos = BD.diff_cells(base, new)
+    assert regressions == []
+    assert any("new cell" in i and "+preempt" in i for i in infos)
+
+
+def test_bench_diff_cli_exit_codes(tmp_path):
+    import json as _json
+    import os
+    import subprocess
+    import sys
+
+    base, new = _diff_docs()
+    new["cells"][0]["time_s"] = 20.0
+    p_base, p_new = tmp_path / "base.json", tmp_path / "new.json"
+    p_base.write_text(_json.dumps(base))
+    p_new.write_text(_json.dumps(new))
+    script = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                          "bench_diff.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(script), "..")]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    ok = subprocess.run([sys.executable, script, str(p_base), str(p_base)],
+                        env=env, capture_output=True)
+    assert ok.returncode == 0
+    bad = subprocess.run([sys.executable, script, str(p_base), str(p_new)],
+                         env=env, capture_output=True)
+    assert bad.returncode == 1
+    assert b"REGRESSION" in bad.stderr
+    mismatched = dict(new, schema_version=1)
+    p_new.write_text(_json.dumps(mismatched))
+    inc = subprocess.run([sys.executable, script, str(p_base), str(p_new)],
+                         env=env, capture_output=True)
+    assert inc.returncode == 2
