@@ -4,8 +4,12 @@ The ROADMAP's "BENCH trajectory tooling" starter: CI regenerates the
 quick sweep on every push and diffs it against the committed baseline —
 a cell whose metric moves beyond the noise threshold *in the bad
 direction* (accuracy down; modeled time/energy/FLOPs up) fails the job,
-so a perf/accuracy regression can't land silently. Baseline cells that
-vanish also fail (coverage must never shrink); brand-new cells are
+so a perf/accuracy regression can't land silently. The same directional
+gate covers the per-stream `latency_p50`/`latency_p95` serving-latency
+columns (upward = regression; sub-millisecond absolute moves are noise)
+and the v3 per-model-slot columns (slot costs up / slot accuracy down =
+regression). Baseline cells — and baseline per-stream/per-model entries —
+that vanish also fail (coverage must never shrink); brand-new cells are
 reported but don't fail.
 
 Accuracy gets its own (wider) threshold: cell accuracies average a few
@@ -42,7 +46,27 @@ METRIC_DIRECTIONS = {
     "energy_j": "up",
     "tflops": "up",
 }
-INFO_METRICS = ("rounds", "recompiles", "preemptions")
+INFO_METRICS = ("rounds", "recompiles", "preemptions", "swaps")
+
+#: per-stream attribution metrics gated with the same directional rule:
+#: serving latency regresses upward. Latencies are often exactly 0 (idle
+#: device), where relative change is meaningless — `_ABS_FLOOR` skips
+#: sub-millisecond absolute moves.
+STREAM_METRIC_DIRECTIONS = {
+    "latency_p50": "up",
+    "latency_p95": "up",
+}
+
+#: per-model-slot attribution metrics (BENCH schema v3): slot costs
+#: regress upward, slot accuracy downward (it uses `--acc-threshold`).
+MODEL_METRIC_DIRECTIONS = {
+    "time_s": "up",
+    "energy_j": "up",
+    "flops": "up",
+    "avg_inference_acc": "down",
+}
+
+_ABS_FLOOR = {"latency_p50": 1e-3, "latency_p95": 1e-3}
 
 
 def cell_key(cell: Dict) -> Tuple[str, str, int]:
@@ -56,12 +80,53 @@ def _rel_change(base: float, new: float) -> float:
     return (new - base) / max(abs(base), 1e-9)
 
 
+def _gate_metric(label: str, metric: str, bval: float, nval: float,
+                 thr: float, bad_dir: str, regressions: List[str],
+                 infos: List[str]) -> None:
+    """Apply one directional threshold check and file the result."""
+    if abs(nval - bval) <= _ABS_FLOOR.get(metric, 0.0):
+        return
+    change = _rel_change(bval, nval)
+    moved_badly = change < -thr if bad_dir == "down" else change > thr
+    line = f"{label}: {metric} {bval:.6g} -> {nval:.6g} ({change:+.1%})"
+    if moved_badly:
+        regressions.append(line)
+    elif abs(change) > thr:
+        infos.append(line + " [improvement]")
+
+
+def _diff_sub(label: str, kind: str, b: Dict, n: Dict,
+              directions: Dict[str, str], threshold: float,
+              acc_threshold: float, regressions: List[str],
+              infos: List[str]) -> None:
+    """Gate one attribution sub-dict (`per_stream` / `per_model`): every
+    baseline entry must survive, and its tracked metrics obey the same
+    directional thresholds as the cell metrics."""
+    for sid in sorted(b.get(kind) or {}):
+        bsub = b[kind][sid]
+        nsub = (n.get(kind) or {}).get(sid)
+        if nsub is None:
+            regressions.append(
+                f"{label}: {kind}[{sid}] missing from new artifact")
+            continue
+        for metric, bad_dir in directions.items():
+            if metric not in bsub or metric not in nsub:
+                continue
+            thr = acc_threshold if "acc" in metric else threshold
+            _gate_metric(f"{label} {kind}[{sid}]", metric,
+                         float(bsub[metric]), float(nsub[metric]), thr,
+                         bad_dir, regressions, infos)
+
+
 def diff_cells(base_doc: Dict, new_doc: Dict, *, threshold: float = 0.05,
                acc_threshold: float = 0.25) -> Tuple[List[str], List[str]]:
     """Return (regressions, infos): human-readable lines. A regression is
     a tracked metric moving beyond its threshold (relative; `acc` uses
     the wider `acc_threshold` — module docstring) in its bad direction,
-    or a baseline cell missing from the new artifact."""
+    or a baseline cell missing from the new artifact. Gating covers the
+    cell metrics *and* the per-stream serving-latency and per-model-slot
+    attribution columns (a QoS or ModelPool regression hiding inside
+    unchanged totals still fails)."""
     base_cells = {cell_key(c): c for c in base_doc.get("cells", [])}
     new_cells = {cell_key(c): c for c in new_doc.get("cells", [])}
     regressions: List[str] = []
@@ -77,15 +142,12 @@ def diff_cells(base_doc: Dict, new_doc: Dict, *, threshold: float = 0.05,
             if metric not in b or metric not in n:
                 continue
             thr = acc_threshold if metric == "acc" else threshold
-            change = _rel_change(float(b[metric]), float(n[metric]))
-            moved_badly = change < -thr if bad_dir == "down" \
-                else change > thr
-            line = (f"{label}: {metric} {float(b[metric]):.6g} -> "
-                    f"{float(n[metric]):.6g} ({change:+.1%})")
-            if moved_badly:
-                regressions.append(line)
-            elif abs(change) > thr:
-                infos.append(line + " [improvement]")
+            _gate_metric(label, metric, float(b[metric]), float(n[metric]),
+                         thr, bad_dir, regressions, infos)
+        _diff_sub(label, "per_stream", b, n, STREAM_METRIC_DIRECTIONS,
+                  threshold, acc_threshold, regressions, infos)
+        _diff_sub(label, "per_model", b, n, MODEL_METRIC_DIRECTIONS,
+                  threshold, acc_threshold, regressions, infos)
         for metric in INFO_METRICS:
             if b.get(metric) != n.get(metric) and metric in b:
                 infos.append(f"{label}: {metric} {b.get(metric)} -> "

@@ -29,26 +29,37 @@ from repro.configs import get_reduced
 from repro.data import streams
 from repro.models import build_model
 from repro.runtime.continual import ContinualRuntime
+from repro.runtime.modelpool import ModelPool, ModelSlot
 from repro.workloads import WorkloadSpec, compile_workload, presets
 
-#: v2 adds QoS: a `preemptible` flag + `preemptions` count per cell
-#: (prioritized presets run once per mode), and per-stream
-#: `latency_p50`/`latency_p95` serving-latency columns (request arrival ->
-#: params-visible service instant, seconds) in the per_stream attribution.
-SCHEMA_VERSION = 2
+#: v3 adds the ModelPool columns: per-cell `models` (slot count) and
+#: `swaps` (cold-slot swap-ins), and a `per_model` attribution dict —
+#: one entry per model slot (single-model cells report the "default"
+#: slot) whose cost keys sum to the cell totals like `per_stream` does.
+#: (v2 added QoS: `preemptible`/`preemptions` cells and per-stream
+#: `latency_p50`/`latency_p95` serving-latency columns.)
+SCHEMA_VERSION = 3
 METHODS = ("immed", "lazytune", "simfreeze", "etuner")
 DEFAULT_OUT = os.path.abspath(
     os.path.join(os.path.dirname(__file__), "..", "BENCH_workloads.json"))
 
+#: Per-modality architecture: the model a ModelPool slot runs. "cv" uses
+#: the sweep's `--arch`; other modalities are fixed paper models.
+MODALITY_ARCH = {"nlp": "bert-base"}
+
 #: Numeric fields every cell must carry (schema contract with CI).
 CELL_FIELDS = ("acc", "time_s", "energy_j", "tflops", "rounds",
                "recompiles", "events", "streams", "wall_s",
-               "preemptible", "preemptions")
+               "preemptible", "preemptions", "models", "swaps")
 
 #: Numeric fields every per-stream attribution cell must carry.
 STREAM_FIELDS = ("time_s", "energy_j", "flops", "rounds", "preemptions",
                  "avg_inference_acc", "inferences",
                  "latency_p50", "latency_p95")
+
+#: Numeric fields every per-model attribution cell must carry (v3).
+MODEL_FIELDS = ("time_s", "energy_j", "flops", "rounds", "swaps",
+                "avg_inference_acc", "inferences")
 
 
 # ---------------------------------------------------------------------------
@@ -70,36 +81,79 @@ def _stream_benchmarks(spec: WorkloadSpec, seed: int,
     return benches
 
 
+def build_pool(arch: str, spec: WorkloadSpec, benches: Dict[int, object],
+               *, memory_budget_mb: float = 0.0) -> ModelPool:
+    """One model slot per modality the spec names: 'cv' runs the sweep
+    arch, other modalities their `MODALITY_ARCH` paper model; each slot
+    pretrains/validates on the benchmark of its first bound stream."""
+    slots = []
+    for m in spec.modalities:
+        if m != "cv" and m not in MODALITY_ARCH:
+            raise ValueError(
+                f"no architecture mapped for modality {m!r}; extend "
+                f"benchmarks.workloads.MODALITY_ARCH (known: "
+                f"{['cv'] + sorted(MODALITY_ARCH)})")
+        slot_arch = arch if m == "cv" else MODALITY_ARCH[m]
+        first = next(i for i, s in enumerate(spec.streams)
+                     if s.modality == m)
+        slots.append(ModelSlot(m, build_model(get_reduced(slot_arch)),
+                               benches[first]))
+    return ModelPool(slots, memory_budget_mb=memory_budget_mb)
+
+
 def run_workload(arch: str, spec: WorkloadSpec, method: str, *,
                  seed: int = 0, batch_size: int = 8,
                  pretrain_epochs: int = 1,
                  inference_batch: int = 8,
-                 preemptible: bool = False) -> Dict:
+                 preemptible: bool = False,
+                 memory_budget_mb: float = 0.0) -> Dict:
     """One (workload, controller) cell: full runtime run, paper metrics +
-    per-stream attribution (incl. p50/p95 serving latency). `preemptible`
-    turns on QoS round preemption (high-priority arrivals split in-flight
-    rounds of lower-priority streams)."""
-    model = build_model(get_reduced(arch))
+    per-stream and per-model attribution (incl. p50/p95 serving latency).
+    `preemptible` turns on QoS round preemption (high-priority arrivals
+    split in-flight rounds of lower-priority streams). A spec naming more
+    than one modality (the faithful `mixed` preset) runs on a `ModelPool`
+    — one model slot per modality sharing the device under
+    `memory_budget_mb` (0 = unlimited, no swap charges)."""
     benches = _stream_benchmarks(spec, seed, batch_size)
-    ctrl = make_controller(model, method)
     events = compile_workload(spec)
-    rt = ContinualRuntime(
-        model, benches[0], ctrl, seed=seed,
-        pretrain_epochs=pretrain_epochs, inference_batch=inference_batch,
-        stream_benchmarks={i: b for i, b in benches.items() if i},
-        controller_factory=lambda st: make_controller(model, method),
-        preemptible=preemptible)
     t0 = time.time()
+    pool = None
+    if len(spec.modalities) > 1:
+        pool = build_pool(arch, spec, benches,
+                          memory_budget_mb=memory_budget_mb)
+        rt = ContinualRuntime(
+            None, None, None, seed=seed,
+            pretrain_epochs=pretrain_epochs,
+            inference_batch=inference_batch,
+            stream_benchmarks=benches,
+            controller_factory=lambda slot: make_controller(
+                pool.slot(slot).model, method),
+            preemptible=preemptible, model_pool=pool)
+    else:
+        model = build_model(get_reduced(arch))
+        rt = ContinualRuntime(
+            model, benches[0], make_controller(model, method), seed=seed,
+            pretrain_epochs=pretrain_epochs,
+            inference_batch=inference_batch,
+            stream_benchmarks={i: b for i, b in benches.items() if i},
+            controller_factory=lambda st: make_controller(model, method),
+            preemptible=preemptible)
     res = rt.run(events=events)
     return {
         "workload": spec.name, "method": method,
         "streams": len(spec.streams), "events": len(events),
+        "models": len(spec.modalities),
         "acc": res.avg_inference_acc, "time_s": res.total_time_s,
         "energy_j": res.total_energy_j, "tflops": res.compute_tflops,
         "rounds": res.rounds, "recompiles": res.recompiles,
         "preemptible": int(preemptible), "preemptions": res.preemptions,
+        "swaps": res.swaps,
         "wall_s": round(time.time() - t0, 2),
         "per_stream": {str(k): v for k, v in res.per_stream.items()},
+        "per_model": dict(res.per_model),
+        # multi-model cells record the pool manifest (slot footprints as
+        # measured at run start + the budget the cell ran under)
+        **({"pool": pool.describe()} if pool is not None else {}),
     }
 
 
@@ -140,6 +194,7 @@ def sweep(*, quick: bool = True, arch: str = "mobilenetv2", seed: int = 0,
                       f"energy={cell['energy_j']:.1f}J "
                       f"rounds={cell['rounds']} "
                       f"preempt={cell['preemptions']} "
+                      f"models={cell['models']} swaps={cell['swaps']} "
                       f"wall={cell['wall_s']:.0f}s",
                       flush=True)
     import jax
@@ -190,6 +245,18 @@ def validate_bench(doc: Dict, *, min_workloads: int = 3,
                     if not isinstance(v, (int, float)) or v != v or v < 0:
                         errors.append(
                             f"cell {i} stream {sid}: field {f!r} missing "
+                            f"or not a non-negative finite number "
+                            f"(got {v!r})")
+        pm = cell.get("per_model")
+        if not isinstance(pm, dict) or not pm:
+            errors.append(f"cell {i}: missing per_model attribution (v3)")
+        else:
+            for mid, mc in pm.items():
+                for f in MODEL_FIELDS:
+                    v = mc.get(f) if isinstance(mc, dict) else None
+                    if not isinstance(v, (int, float)) or v != v or v < 0:
+                        errors.append(
+                            f"cell {i} model {mid}: field {f!r} missing "
                             f"or not a non-negative finite number "
                             f"(got {v!r})")
         if "workload" not in cell or "method" not in cell:

@@ -1,11 +1,20 @@
 """Multi-stream workload driver: run one workload preset (multi-stream /
 bursty MMPP / diurnal+duty-cycle / mixed — see repro.workloads.presets)
-against a chosen controller and print the global plus per-stream outcome
-(accuracy, modeled time/energy, rounds — the CostLedger attributes every
-charge to the arrival stream whose batches the round trained).
+against a chosen controller and print the global, per-stream and
+per-model outcome (accuracy, modeled time/energy, rounds — the CostLedger
+attributes every charge both to the arrival stream whose batches the
+round trained and to the model slot that executed it).
+
+The `mixed` preset is a true mixed-modality run: its NLP stream binds to
+a real BERT/20news model slot in a ModelPool, sharing the device with
+the CV slot. `--memory-budget` caps device memory (MB): a budget smaller
+than the resident set forces cold-slot swap charges (t_swap/e_swap),
+visible in the per-model `swaps` column.
 
     PYTHONPATH=src python examples/multi_stream.py --workload two-stream \
         --method etuner --batches 6 --inferences 16 --scenarios 3
+    PYTHONPATH=src python examples/multi_stream.py --workload mixed \
+        --memory-budget 2.5
 """
 import argparse
 import os
@@ -24,7 +33,9 @@ def main():
     ap.add_argument("--method", default="etuner",
                     choices=list(METHODS) + ["egeria", "slimfit", "ekya"])
     ap.add_argument("--arch", default="mobilenetv2",
-                    choices=["mobilenetv2", "resnet50", "deit-tiny"])
+                    choices=["mobilenetv2", "resnet50", "deit-tiny"],
+                    help="model for 'cv' streams (an 'nlp' stream always "
+                         "gets the BERT slot)")
     ap.add_argument("--scenarios", type=int, default=3)
     ap.add_argument("--batches", type=int, default=6,
                     help="training batches per scenario per stream")
@@ -35,6 +46,10 @@ def main():
                     help="QoS: let higher-priority inference arrivals "
                          "split in-flight fine-tuning rounds (try with "
                          "--workload qos)")
+    ap.add_argument("--memory-budget", type=float, default=0.0,
+                    help="ModelPool device memory budget in MB (0 = "
+                         "unlimited); only multi-modality workloads "
+                         "(mixed) swap — try 2.5 to force it")
     args = ap.parse_args()
 
     spec = presets(batches_per_scenario=args.batches,
@@ -42,14 +57,16 @@ def main():
                    num_scenarios=args.scenarios,
                    seed=args.seed)[args.workload]
     print(f"workload {spec.name}: {len(spec.streams)} stream(s), "
+          f"{len(spec.modalities)} model slot(s) {spec.modalities}, "
           f"{spec.num_scenarios} scenarios, drift={spec.drift}, "
           f"preemptible={args.preemptible}")
     cell = run_workload(args.arch, spec, args.method, seed=args.seed,
-                        preemptible=args.preemptible)
+                        preemptible=args.preemptible,
+                        memory_budget_mb=args.memory_budget)
     print(f"{args.method:10s} acc={cell['acc']*100:6.2f}% "
           f"time={cell['time_s']:7.1f}s energy={cell['energy_j']:7.1f}J "
           f"rounds={cell['rounds']} events={cell['events']} "
-          f"preemptions={cell['preemptions']} "
+          f"preemptions={cell['preemptions']} swaps={cell['swaps']} "
           f"(wall {cell['wall_s']:.0f}s)")
     for sid, per in sorted(cell["per_stream"].items()):
         ss = spec.streams[int(sid)]
@@ -59,6 +76,11 @@ def main():
               f"time={per['time_s']:6.1f}s energy={per['energy_j']:6.1f}J "
               f"rounds={per['rounds']:.0f} requests={per['inferences']:.0f} "
               f"p50={per['latency_p50']:.2f}s p95={per['latency_p95']:.2f}s")
+    for mid, per in sorted(cell["per_model"].items()):
+        print(f"  model  {mid:7s} acc={per['avg_inference_acc']*100:6.2f}% "
+              f"time={per['time_s']:6.1f}s energy={per['energy_j']:6.1f}J "
+              f"rounds={per['rounds']:.0f} requests={per['inferences']:.0f} "
+              f"swaps={per['swaps']:.0f}")
 
 
 if __name__ == "__main__":

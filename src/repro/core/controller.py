@@ -135,6 +135,16 @@ class ETunerController:
             return self.detector.observe(logits)
         return False
 
+    def probe_served(self, logits: np.ndarray) -> bool:
+        """Dedicated drift-confirmation pass (detector-driven probes): the
+        runtime pushes a probe Event when `inference_served` flags a
+        change, runs one forward pass over the stream's validation split,
+        and only latches the change if this returns True. Side-effect-free
+        — LazyTune's inference-arrival decay counts real requests only."""
+        if not self.cfg.detect_scenario_changes:
+            return True
+        return self.detector.confirm(logits)
+
     def scenario_changed(self, params, new_probe_batch) -> None:
         """External or detected scenario boundary (Alg. 1 l.19-26)."""
         if self.cfg.lazytune:

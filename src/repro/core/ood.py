@@ -31,6 +31,10 @@ class EnergyOODDetector:
         self._m2 = 0.0
         self._cooldown = 0
         self.detections = 0
+        # (mean, std) snapshotted at the last detection, *before* the
+        # stats reset — the baseline a dedicated confirmation probe is
+        # z-tested against (detector-driven probes, DESIGN.md)
+        self._baseline = None
 
     @staticmethod
     def energy(logits: np.ndarray) -> float:
@@ -55,11 +59,23 @@ class EnergyOODDetector:
         z = (np.mean(self._recent) - self._mean) / std
         if z > self.cfg.z_threshold:
             self.detections += 1
+            self._baseline = (self._mean, std)
             self._reset_stats()
             self._cooldown = self.cfg.cooldown
             return True
         self._update_stats(e)
         return False
+
+    def confirm(self, logits: np.ndarray) -> bool:
+        """Side-effect-free drift check for a *dedicated* confirmation
+        probe (detector-driven probes): z-test the probe pass's energy
+        against the baseline snapshotted at the triggering detection.
+        Never perturbs the running request statistics; True before any
+        detection happened (nothing to refute the trigger with)."""
+        if self._baseline is None:
+            return True
+        mean, std = self._baseline
+        return (self.energy(logits) - mean) / std > self.cfg.z_threshold
 
     def _update_stats(self, e: float) -> None:
         self._count += 1

@@ -8,13 +8,15 @@ from typing import List, Literal, Sequence
 
 import numpy as np
 
-Kind = Literal["data", "inference"]
+Kind = Literal["data", "inference", "probe"]
 
 #: Tie-break rank at equal timestamps: data batches dispatch before
-#: inference requests. Single source of truth for both the scheduler's
-#: heap ordering and the workload compiler's sort — they must agree or a
-#: pre-sorted timeline would not replay in its constructed order.
-KIND_ORDER = {"data": 0, "inference": 1}
+#: inference requests, and drift-confirmation probes (detector mode) run
+#: last — they observe the state the colliding events produced. Single
+#: source of truth for both the scheduler's heap ordering and the workload
+#: compiler's sort — they must agree or a pre-sorted timeline would not
+#: replay in its constructed order.
+KIND_ORDER = {"data": 0, "inference": 1, "probe": 2}
 
 
 @dataclass(frozen=True)
@@ -30,6 +32,12 @@ class Event:
     # 0 = the legacy don't-care priority, so single-stream timelines are
     # byte-identical to their pre-QoS selves.
     priority: int = 0
+    # Modality of the stream that emitted the event
+    # (`StreamSpec.modality`, stamped by workloads/generators). A
+    # ModelPool runtime resolves the event's model slot from this tag;
+    # the single-model runtime ignores it. "cv" is the legacy default so
+    # hand-built timelines stay valid.
+    modality: str = "cv"
 
 
 def interarrivals(dist: str, n: int, mean_gap: float,

@@ -4,11 +4,15 @@ from repro.runtime.executor import (FakeQuantHook, FineTuneExecutor,
                                     ReplayBuffer, RoundHook, RoundReport,
                                     SimSiamHook)
 from repro.runtime.inference import InferenceServer
-from repro.runtime.ledger import BREAKDOWN_KEYS, CostLedger
+from repro.runtime.ledger import (BREAKDOWN_KEYS, DEFAULT_MODEL, MODEL_KEYS,
+                                  STREAM_KEYS, CostLedger)
+from repro.runtime.modelpool import ModelPool, ModelSlot
 from repro.runtime.scheduler import EventScheduler
 from repro.runtime.train_loop import TrainStepCache, evaluate
 
 __all__ = ["EdgeCostModel", "PodCostModel", "ContinualRuntime", "RunResult",
            "TrainStepCache", "evaluate", "EventScheduler", "InferenceServer",
            "FineTuneExecutor", "ReplayBuffer", "RoundHook", "RoundReport",
-           "SimSiamHook", "FakeQuantHook", "CostLedger", "BREAKDOWN_KEYS"]
+           "SimSiamHook", "FakeQuantHook", "CostLedger", "BREAKDOWN_KEYS",
+           "STREAM_KEYS", "MODEL_KEYS", "DEFAULT_MODEL", "ModelPool",
+           "ModelSlot"]

@@ -14,7 +14,15 @@ The runtime itself is deliberately thin. It wires four owned subsystems
   arrival-time params-visibility seam, opt-in micro-batched serving;
 - `FineTuneExecutor` (runtime/executor.py) — round execution, the replay
   buffer, and `RoundHook`s (SimSiam semi-supervised pass, fake-quant QAT);
-- `CostLedger` (runtime/ledger.py) — all time/energy/FLOPs accounting.
+- `CostLedger` (runtime/ledger.py) — all time/energy/FLOPs accounting;
+
+plus, optionally, a **`ModelPool`** (runtime/modelpool.py, DESIGN.md §9):
+one model slot per modality — its own params/optimizer/steps/replay/
+controller and per-slot cost calibration — multiplexed over the one
+shared device timeline under a device memory budget (cold slots pay a
+real load/save swap charge). Without a pool the runtime runs its single
+model under the reserved "default" slot, byte-identical to the pre-pool
+behaviour (the golden regression suite pins this).
 
 Controllers implement the `ControllerProtocol` documented in
 core/controller.py; the runtime drives them from scheduler callbacks and
@@ -51,7 +59,9 @@ from repro.runtime.executor import (FakeQuantHook, FineTuneExecutor,
                                     ReplayBuffer, RoundHook, SimSiamHook,
                                     fake_quant, quantized_model)
 from repro.runtime.inference import InferenceServer
-from repro.runtime.ledger import STREAM_KEYS, CostLedger
+from repro.runtime.ledger import (DEFAULT_MODEL, MODEL_KEYS, STREAM_KEYS,
+                                  CostLedger)
+from repro.runtime.modelpool import ModelPool, tree_mb
 from repro.runtime.scheduler import EventScheduler
 from repro.runtime.train_loop import (TrainStepCache, as_jnp, evaluate,
                                      make_optimizer_state)
@@ -77,8 +87,16 @@ class RunResult:
     # {time_s, energy_j, flops, rounds, preemptions, avg_inference_acc,
     #  inferences, latency_p50, latency_p95}
     per_stream: Dict[int, Dict[str, float]] = field(default_factory=dict)
+    # per-model-slot attribution (ModelPool; single-model runs report one
+    # "default" slot): slot -> {time_s, energy_j, flops, rounds, swaps,
+    # avg_inference_acc, inferences}
+    per_model: Dict[str, Dict[str, float]] = field(default_factory=dict)
     # QoS: total round splits absorbed by lower-priority streams' rounds
     preemptions: int = 0
+    # ModelPool: total cold-slot swap-ins charged to the run
+    swaps: int = 0
+    # detector mode: drift-confirmation probe passes fired
+    probes: int = 0
 
     def summary(self) -> str:
         return (f"acc={self.avg_inference_acc*100:.2f}% "
@@ -87,8 +105,22 @@ class RunResult:
                 f"tflops={self.compute_tflops:.2f}")
 
 
+@dataclass
+class _SlotState:
+    """Per-model-slot runtime state assembled by `run()`: the single-model
+    path has exactly one ("default"); a ModelPool run has one per slot."""
+    name: str
+    model: Any
+    bench: ContinualBenchmark
+    controller: Any
+    steps: TrainStepCache
+    executor: FineTuneExecutor
+    reference_params: Any = None
+
+
 class ContinualRuntime:
-    def __init__(self, model, benchmark: ContinualBenchmark, controller,
+    def __init__(self, model, benchmark: Optional[ContinualBenchmark],
+                 controller,
                  cost_model: EdgeCostModel = EdgeCostModel(),
                  opt_cfg=None, seed: int = 0,
                  boundaries: str = "oracle",       # 'oracle' | 'detector'
@@ -101,15 +133,34 @@ class ContinualRuntime:
                  inference_window: float = 0.0,
                  extra_hooks: Optional[List[RoundHook]] = None,
                  stream_benchmarks: Optional[Dict[int, ContinualBenchmark]] = None,
-                 controller_factory: Optional[Callable[[int], Any]] = None,
-                 preemptible: bool = False):
+                 controller_factory: Optional[Callable[[Any], Any]] = None,
+                 preemptible: bool = False,
+                 preempt_resume_cost_s: float = 0.0,
+                 model_pool: Optional[ModelPool] = None):
+        # ModelPool construction path: the pool's slots carry the models,
+        # benchmarks and (optionally) controllers; the positional
+        # model/benchmark/controller may be None and default to the first
+        # slot's. Slot controllers missing from the pool are built through
+        # the `controller_factory` seam, called with the *slot name*.
+        self.pool = model_pool
+        if model_pool is not None:
+            if quant_bits or unlabeled_fraction or extra_hooks:
+                raise ValueError(
+                    "RoundHooks (quant_bits / unlabeled_fraction / "
+                    "extra_hooks) wrap one model; they are not supported "
+                    "with model_pool yet")
+            first = next(iter(model_pool.slots.values()))
+            model = model if model is not None else first.model
+            benchmark = benchmark if benchmark is not None else first.benchmark
         self.model = model
         self.bench = benchmark
         self.controller = controller
         # multi-stream workloads: stream id -> its own benchmark (falls back
-        # to `benchmark`); streams > 0 get controllers from
-        # `controller_factory(stream)` when given, else share `controller`
-        # (one policy object observing every stream).
+        # to `benchmark`, or to the stream's slot benchmark under a pool);
+        # streams > 0 get controllers from `controller_factory(stream)` when
+        # given, else share `controller` (one policy object observing every
+        # stream). Under a pool the same factory seam builds *per-slot*
+        # controllers instead, called with the slot name.
         self.stream_benchmarks = dict(stream_benchmarks or {})
         self.controller_factory = controller_factory
         self.cost = cost_model
@@ -131,6 +182,9 @@ class ContinualRuntime:
         # Default False keeps the golden single-stream regression
         # bit-exact (rounds complete synchronously at trigger time).
         self.preemptible = preemptible
+        # QoS: modeled checkpoint-resume overhead paid on each round split
+        # (charged to the preempting stream; 0.0 = legacy free splits)
+        self.preempt_resume_cost_s = preempt_resume_cost_s
         # round hooks: model-wrapping ones bind first so every later
         # consumer (train steps, serving, SimSiam features) sees the
         # wrapped model.
@@ -142,23 +196,82 @@ class ContinualRuntime:
         self.hooks.extend(extra_hooks or [])
         for h in self.hooks:
             self.model = h.bind(self.model)
-        self.steps = TrainStepCache(model=self.model, opt_cfg=self.opt_cfg)
+        # single-model step cache lives on the runtime (reused across
+        # run() calls); pool slots build their own caches per run
+        self.steps = None if model_pool is not None else \
+            TrainStepCache(model=self.model, opt_cfg=self.opt_cfg)
+
+    # -------------------------------------------------------------------
+    def _build_slots(self, ledger: CostLedger,
+                     rng: np.random.Generator) -> Dict[str, _SlotState]:
+        """Assemble per-slot runtime state. The single-model path builds
+        exactly one "default" slot wired to the runtime's own
+        model/steps/cost and the *shared* rng — preserving the legacy RNG
+        consumption order bit-for-bit."""
+        slots: Dict[str, _SlotState] = {}
+        if self.pool is None:
+            replay = ReplayBuffer(
+                self.bench.scenarios[0].train_batches[:self.replay_batches])
+            executor = FineTuneExecutor(
+                self.steps, self.cost, ledger, replay, rng=rng,
+                hooks=self.hooks, calibrate_cost=self.calibrate_cost,
+                preempt_resume_cost_s=self.preempt_resume_cost_s)
+            slots[DEFAULT_MODEL] = _SlotState(
+                DEFAULT_MODEL, self.model, self.bench, self.controller,
+                self.steps, executor)
+            return slots
+        for i, slot in enumerate(self.pool.slots.values()):
+            ctrl = slot.controller
+            if ctrl is None and self.controller_factory is not None:
+                ctrl = self.controller_factory(slot.name)
+            if ctrl is None:
+                ctrl = self.controller
+            if ctrl is None:
+                raise ValueError(
+                    f"slot {slot.name!r} has no controller: set "
+                    f"ModelSlot.controller or pass controller_factory")
+            steps = TrainStepCache(model=slot.model, opt_cfg=self.opt_cfg)
+            replay = ReplayBuffer(
+                slot.benchmark.scenarios[0].train_batches[:self.replay_batches])
+            executor = FineTuneExecutor(
+                steps, slot.cost, ledger, replay,
+                rng=np.random.default_rng([self.seed, i]),
+                calibrate_cost=self.calibrate_cost,
+                model_name=slot.name,
+                preempt_resume_cost_s=self.preempt_resume_cost_s)
+            slots[slot.name] = _SlotState(slot.name, slot.model,
+                                          slot.benchmark, ctrl, steps,
+                                          executor)
+        return slots
 
     # -------------------------------------------------------------------
     def run(self, events: Optional[List[Event]] = None,
             inferences_total: int = 60, data_dist: str = "poisson",
             inf_dist: str = "poisson") -> RunResult:
-        bench, model = self.bench, self.model
+        bench = self.bench
         rng = np.random.default_rng(self.seed)
-        params = model.init(jax.random.PRNGKey(self.seed))
-        opt_state = make_optimizer_state(model, self.opt_cfg, params)
+        ledger = CostLedger()
+        slots = self._build_slots(ledger, rng)
+        primary_slot = next(iter(slots.values()))
+        primary_ctrl = self.controller if self.controller is not None \
+            else primary_slot.controller
 
-        # --- pretrain on scenario 0 (not cost-accounted; paper §V-A) ----
-        step0 = self.steps.get(self.controller.plan)
-        for _ in range(self.pretrain_epochs):
-            for b in bench.scenarios[0].train_batches:
-                params, opt_state, _ = step0(params, opt_state, as_jnp(b))
-        reference_params = params  # "initial model before fine-tuning"
+        # --- pretrain every slot on its scenario 0 (not cost-accounted;
+        # paper §V-A) and measure slot memory footprints -----------------
+        for st in slots.values():
+            params = st.model.init(jax.random.PRNGKey(self.seed))
+            opt_state = make_optimizer_state(st.model, self.opt_cfg, params)
+            step0 = st.steps.get(st.controller.plan)
+            for _ in range(self.pretrain_epochs):
+                for b in st.bench.scenarios[0].train_batches:
+                    params, opt_state, _ = step0(params, opt_state, as_jnp(b))
+            st.reference_params = params  # "initial model before fine-tuning"
+            st.executor.load(params, opt_state)
+        if self.pool is not None:
+            for name, st in slots.items():
+                self.pool.set_memory(name, tree_mb(st.executor.params,
+                                                   st.executor.opt_state))
+            self.pool.warm()
 
         if events is None:
             events = build_timeline(
@@ -175,24 +288,38 @@ class ContinualRuntime:
         # extra streams (multi-stream workloads) get their own controller
         # from the factory, or share the primary one. Streams *absent*
         # from the start-of-run event list (e.g. a probe Event pushed onto
-        # the live scheduler mid-drain — ROADMAP's detector-driven probes)
-        # fall back to the primary controller/benchmark via the accessors
-        # below instead of KeyError-ing the callbacks.
+        # the live scheduler mid-drain — detector-driven probes) fall back
+        # to the primary controller/benchmark via the accessors below
+        # instead of KeyError-ing the callbacks. Under a ModelPool a
+        # stream's controller is its *slot's* (streams sharing a model
+        # share the policy that owns its freeze plan).
         stream_ids = sorted({e.stream for e in events}) or [0]
+        stream_slot: Dict[int, str] = {}
+        if self.pool is not None:
+            for e in events:
+                stream_slot.setdefault(e.stream, e.modality)
+            for st_id, name in stream_slot.items():
+                self.pool.slot(name)  # raise early on an unknown modality
+
+        def slot_of(st: int) -> _SlotState:
+            return slots.get(stream_slot.get(st, primary_slot.name),
+                             primary_slot)
+
         controllers: Dict[int, Any] = {}
         for st in stream_ids:
-            if st == 0 or self.controller_factory is None:
-                controllers[st] = self.controller
+            if self.pool is not None:
+                controllers[st] = slot_of(st).controller
+            elif st == 0 or self.controller_factory is None:
+                controllers[st] = primary_ctrl
             else:
                 controllers[st] = self.controller_factory(st)
-        benches = {st: self.stream_benchmarks.get(st, bench)
-                   for st in stream_ids}
 
         def ctrl_for(st: int):
-            return controllers.get(st, self.controller)
+            return controllers.get(st, primary_ctrl)
 
         def bench_for(st: int) -> ContinualBenchmark:
-            return benches.get(st, bench)
+            b = self.stream_benchmarks.get(st)
+            return b if b is not None else slot_of(st).bench
 
         # QoS: a stream's priority rides on its events (StreamSpec.priority
         # -> Event.priority); a round reserves the device at its stream's
@@ -201,17 +328,16 @@ class ContinualRuntime:
         for e in events:
             stream_priority[e.stream] = max(stream_priority[e.stream],
                                             e.priority)
-        ledger = CostLedger()
-        replay = ReplayBuffer(bench.scenarios[0].train_batches[:self.replay_batches])
-        executor = FineTuneExecutor(self.steps, self.cost, ledger, replay,
-                                    rng=rng, hooks=self.hooks,
-                                    calibrate_cost=self.calibrate_cost)
-        executor.load(params, opt_state)
         scheduler = EventScheduler(events)
         # live handle: controller callbacks / tests may push events onto
         # the running timeline (mid-drain push is supported)
         self.scheduler = scheduler
         pending_change = {st: False for st in stream_ids}
+        # probes_pushed numbers probe Events; probes_fired counts the ones
+        # actually dispatched (a detection during the post-drain flush
+        # pushes onto an already-drained scheduler and never runs)
+        probes_pushed = [0]
+        probes_fired = [0]
         # per-stream policy latches, owned by the runtime — NOT stored on
         # the controller object: streams may share one controller (no
         # controller_factory), and the first stream's start_scenario must
@@ -229,69 +355,111 @@ class ContinualRuntime:
 
         def served(logits, stream=0) -> bool:
             # route the request's logits to its stream's controller; a True
-            # return (detected scenario change) is latched per stream.
+            # return (detected scenario change) is latched per stream — or,
+            # in detector mode, schedules a dedicated drift-confirmation
+            # probe on the live timeline instead (DESIGN.md: a detection
+            # from noisy request logits is confirmed by a forward pass
+            # over the stream's probe data before the policy reacts).
             hit = ctrl_for(stream).inference_served(logits)
             if hit:
-                pending_change[stream] = True
+                if self.boundaries == "detector":
+                    probes_pushed[0] += 1
+                    scheduler.push(Event(
+                        scheduler.now, "probe",
+                        scheduler.scenario_of(stream), probes_pushed[0] - 1,
+                        stream=stream,
+                        modality=stream_slot.get(stream, "cv")))
+                else:
+                    pending_change[stream] = True
             return hit
 
-        server = InferenceServer(model, batch_window=self.inference_window,
+        server = InferenceServer(primary_slot.model,
+                                 batch_window=self.inference_window,
                                  on_served=served)
-        server.publish(params, 0.0)
+        for name, st in slots.items():
+            server.register(name, st.model)
+            server.publish(st.executor.params, 0.0, slot=name)
         val_curve: List[float] = []
 
-        def complete(report) -> None:
+        def acquire(slot: _SlotState, now: float, stream: int) -> None:
+            # ModelPool residency: touching a cold slot swaps it in — a
+            # real ledger charge (t_swap/e_swap, attributed to the
+            # touching stream and the loaded slot) and real device
+            # occupancy, so whatever triggered the touch waits it out.
+            # Deliberate interaction with QoS: the swap occupancy becomes
+            # the scheduler's in-flight reservation, so a preemptible
+            # round with swap IO queued behind it stops being splittable
+            # (`can_preempt` goes False) — splitting it would have to
+            # slide the committed IO slot around, which the single-
+            # reservation timeline cannot account for (DESIGN.md §9).
+            if self.pool is None:
+                return
+            t_swap, e_swap, _ = self.pool.ensure_resident(slot.name)
+            if t_swap:
+                ledger.charge_swap(time_s=t_swap, energy_j=e_swap,
+                                   model=slot.name, stream=stream)
+                scheduler.occupy(now, t_swap, stream=stream)
+
+        def complete(slot: _SlotState, report) -> None:
             # a round's results reach the rest of the system when it
             # completes: publish to serving, validate, notify the
             # stream's controller, charge SimFreeze's CKA probes
             stream = report.stream
             ctrl = ctrl_for(stream)
-            server.publish(executor.params, report.end)
+            server.publish(slot.executor.params, report.end, slot=slot.name)
             # validation accuracy (labeled 5% split) -> LazyTune; the
             # split belongs to the scenario current at round *launch*
             val = bench_for(stream).scenarios[
                 launch_scenario.pop(stream,
                                     scheduler.scenario_of(stream))].val
-            val_acc, _ = evaluate(model, executor.params, as_jnp(val))
+            val_acc, _ = evaluate(slot.model, slot.executor.params,
+                                  as_jnp(val))
             val_curve.append(val_acc)
             cka_before = ctrl.simfreeze.state.cka_flops \
                 if hasattr(ctrl, "simfreeze") else 0.0
-            ctrl.round_finished(report.iters, val_acc, executor.params)
+            ctrl.round_finished(report.iters, val_acc, slot.executor.params)
             if hasattr(ctrl, "simfreeze"):
                 dcka = ctrl.simfreeze.state.cka_flops - cka_before
                 if dcka:
-                    tc, ec = executor.cost.compute_cost(dcka)
-                    ledger.charge_probe("cka", tc, ec, stream=stream)
+                    tc, ec = slot.executor.cost.compute_cost(dcka)
+                    ledger.charge_probe("cka", tc, ec, stream=stream,
+                                        model=slot.name)
             last_round_end[stream] = report.end
 
         def settle(now: float) -> None:
             # preemptible rounds complete lazily: once the timeline passes
             # a reservation's end, finalize it (train the remaining
-            # checkpointed batches, charge the exact-remainder segment)
-            report = executor.finalize_round(now)
-            if report is not None:
-                complete(report)
+            # checkpointed batches, charge the exact-remainder segment).
+            # At most one round is in flight across all slots (one device)
+            for st in slots.values():
+                report = st.executor.finalize_round(now)
+                if report is not None:
+                    complete(st, report)
 
         def finish_round(now: float, stream: int = 0) -> None:
+            slot = slot_of(stream)
+            acquire(slot, now, stream)
             launch_scenario[stream] = scheduler.scenario_of(stream)
-            report = executor.execute_round(
+            report = slot.executor.execute_round(
                 ctrl_for(stream).plan, now, scheduler, stream=stream,
                 priority=stream_priority.get(stream, 0),
                 preemptible=self.preemptible)
-            if report is None and executor.active_round is None:
+            if report is None and slot.executor.active_round is None:
                 launch_scenario.pop(stream, None)  # nothing was buffered
             elif report is not None:  # synchronous (non-preemptible) path
-                complete(report)
+                complete(slot, report)
 
         def on_scenario_change(previous: int, ev: Event) -> None:
             # keep a replay sample of the just-entered scenario
             sc = bench_for(ev.stream).scenarios[ev.scenario]
-            replay.add(sc.train_batches[ev.index % len(sc.train_batches)])
+            slot_of(ev.stream).executor.replay.add(
+                sc.train_batches[ev.index % len(sc.train_batches)])
 
         def on_data(ev: Event, boundary: bool) -> None:
             st = ev.stream
             settle(ev.time)
             ctrl = ctrl_for(st)
+            slot = slot_of(st)
             sc = bench_for(st).scenarios[ev.scenario]
             batch = sc.train_batches[ev.index % len(sc.train_batches)]
             # bound micro-batch deferral: a queued group whose window has
@@ -304,15 +472,15 @@ class ContinualRuntime:
             if (boundary and self.boundaries == "oracle") or change:
                 pending_change[st] = False
                 if ctrl.plan is not None and hasattr(ctrl, "scenario_changed"):
-                    ctrl.scenario_changed(executor.params, as_jnp(batch))
+                    ctrl.scenario_changed(slot.executor.params, as_jnp(batch))
             if getattr(ctrl, "needs_reference", True) and \
                     hasattr(ctrl, "start_scenario") and \
                     (boundary or (scheduler.scenario_of(st)
                                   and not scenario_started.get(st, False))):
-                ctrl.start_scenario(reference_params, as_jnp(batch))
+                ctrl.start_scenario(slot.reference_params, as_jnp(batch))
                 scenario_started[st] = True
-            executor.enqueue(batch, stream=st)
-            if ctrl.should_trigger(executor.pending_for(st),
+            slot.executor.enqueue(batch, stream=st)
+            if ctrl.should_trigger(slot.executor.pending_for(st),
                                    staleness=ev.time
                                    - last_round_end.get(st, 0.0)) and \
                     scheduler.idle_at(ev.time):
@@ -322,6 +490,7 @@ class ContinualRuntime:
             st = ev.stream
             settle(ev.time)
             b = bench_for(st)
+            slot = slot_of(st)
             cur = scheduler.scenario_of(st)
             sc = b.scenarios[min(ev.scenario, cur) or ev.scenario]
             test = b.scenarios[max(cur, 1)].test \
@@ -333,28 +502,66 @@ class ContinualRuntime:
             # idle device serves at once; a busy one makes the request
             # wait out the round's occupancy — unless the arrival outranks
             # a preemptible round, which it splits and is served at its
-            # arrival time (the round resumes; its end is unchanged).
-            if scheduler.idle_at(ev.time):
+            # arrival time (the round resumes; with a zero resume cost its
+            # end is unchanged). A request for a *cold* ModelPool slot
+            # first waits out the slot's swap-in (and never preempts — the
+            # swap IO would stall the split anyway).
+            swap_needed = self.pool is not None \
+                and not self.pool.is_resident(slot.name)
+            if scheduler.idle_at(ev.time) and not swap_needed:
                 latency = 0.0
-            elif scheduler.can_preempt(ev.time, ev.priority):
-                executor.preempt(ev.time, scheduler)
+            elif not swap_needed and scheduler.can_preempt(ev.time,
+                                                           ev.priority):
+                active = next(s.executor for s in slots.values()
+                              if s.executor.active_round is not None)
+                active.preempt(ev.time, scheduler, preempting_stream=st)
                 latency = 0.0
             else:
+                acquire(slot, ev.time, st)
                 latency = scheduler.busy_until - ev.time
             server.submit(ev.time, {k: v[idx] for k, v in test.items()},
-                          stream=st, latency=latency)
+                          stream=st, latency=latency, slot=slot.name)
+
+        def on_probe(ev: Event) -> None:
+            # detector-driven probe (ROADMAP): confirm a flagged drift
+            # with a dedicated forward pass over the stream's current
+            # validation split before the policy reacts. The pass is
+            # charged as probe compute (~1/3 of a measured train step:
+            # forward only) — and, like any other touch, a probe on a
+            # cold ModelPool slot first pays the swap-in; confirmation
+            # latches the per-stream change flag exactly as a direct
+            # detection used to.
+            st = ev.stream
+            settle(ev.time)
+            probes_fired[0] += 1
+            slot = slot_of(st)
+            acquire(slot, ev.time, st)
+            ctrl = ctrl_for(st)
+            b = bench_for(st)
+            sc = b.scenarios[min(max(scheduler.scenario_of(st), ev.scenario,
+                                     1), len(b.scenarios) - 1)]
+            _, logits = evaluate(slot.model, slot.executor.params,
+                                 as_jnp(sc.val))
+            flops = slot.steps.flops(ctrl.plan,
+                                     as_jnp(sc.train_batches[0])) / 3.0
+            tc, ec = slot.executor.cost.compute_cost(flops)
+            ledger.charge_probe("probe", tc, ec, stream=st, model=slot.name)
+            confirm = getattr(ctrl, "probe_served", None)
+            if confirm is None or confirm(logits):
+                pending_change[st] = True
 
         scheduler.run(on_data=on_data, on_inference=on_inference,
-                      on_scenario_change=on_scenario_change)
+                      on_scenario_change=on_scenario_change,
+                      on_probe=on_probe)
         settle(float("inf"))  # finalize a round still in flight at drain end
         server.flush()
         # trailing flush: any buffered data still fine-tunes (no data dropped)
-        for st in executor.pending_streams:
-            finish_round(scheduler.busy_until, st)
-            settle(float("inf"))
+        for slot in slots.values():
+            for st in slot.executor.pending_streams:
+                finish_round(scheduler.busy_until, st)
+                settle(float("inf"))
 
-        ctrl = self.controller
-        stats = ctrl.stats() if hasattr(ctrl, "stats") else {}
+        stats = primary_ctrl.stats() if hasattr(primary_ctrl, "stats") else {}
         per_stream: Dict[int, Dict[str, float]] = {}
         # include streams first seen mid-run (events pushed onto the live
         # scheduler carry streams the start-of-run list never saw)
@@ -369,12 +576,24 @@ class ContinualRuntime:
             cell["latency_p50"] = float(np.percentile(lats, 50)) if lats else 0.0
             cell["latency_p95"] = float(np.percentile(lats, 95)) if lats else 0.0
             per_stream[st] = cell
+        per_model: Dict[str, Dict[str, float]] = {}
+        for name in sorted(set(slots) | set(ledger.per_model)
+                           | set(server.accs_by_slot)):
+            cell = dict(ledger.per_model.get(
+                name, {k: 0.0 for k in MODEL_KEYS}))
+            accs = server.accs_by_slot.get(name, [])
+            cell["avg_inference_acc"] = float(np.mean(accs)) if accs else 0.0
+            cell["inferences"] = float(len(accs))
+            per_model[name] = cell
         return RunResult(
             avg_inference_acc=server.avg_acc,
             total_time_s=ledger.total_time_s,
             total_energy_j=ledger.total_energy_j,
             compute_tflops=ledger.compute_tflops, rounds=ledger.rounds,
-            recompiles=self.steps.recompiles, inference_accs=server.accs,
+            recompiles=sum(st.steps.recompiles for st in slots.values())
+            if self.pool is not None else self.steps.recompiles,
+            inference_accs=server.accs,
             breakdown=ledger.breakdown, controller_stats=stats,
             val_curve=val_curve, per_stream=per_stream,
-            preemptions=ledger.preemptions)
+            per_model=per_model, preemptions=ledger.preemptions,
+            swaps=ledger.swaps, probes=probes_fired[0])

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.runtime.costmodel import EdgeCostModel
-from repro.runtime.ledger import CostLedger
+from repro.runtime.ledger import DEFAULT_MODEL, CostLedger
 from repro.runtime.train_loop import TrainStepCache, as_jnp
 
 
@@ -211,7 +211,9 @@ class FineTuneExecutor:
                  ledger: CostLedger, replay: ReplayBuffer, *,
                  rng: np.random.Generator,
                  hooks: Sequence[RoundHook] = (),
-                 calibrate_cost: bool = True):
+                 calibrate_cost: bool = True,
+                 model_name: str = DEFAULT_MODEL,
+                 preempt_resume_cost_s: float = 0.0):
         self.steps = steps
         self.cost = cost
         self.ledger = ledger
@@ -219,6 +221,13 @@ class FineTuneExecutor:
         self.rng = rng
         self.hooks = list(hooks)
         self.calibrate_cost = calibrate_cost
+        # model-slot attribution key for every ledger charge this executor
+        # makes (ModelPool runs one executor per slot; single-model runs
+        # keep the "default" slot)
+        self.model_name = model_name
+        # modeled checkpoint-resume overhead paid on each preemption split
+        # (0.0 = the legacy free split; see `preempt`)
+        self.preempt_resume_cost_s = float(preempt_resume_cost_s)
         # pending batches, bucketed by arrival stream: a round drains one
         # stream's bucket (multi-stream workloads share the device and the
         # params, but trigger and account per stream)
@@ -312,7 +321,8 @@ class FineTuneExecutor:
                 self._train_batch(step, b)
             flops, t, e, parts = self._round_cost(plan, batches, recompile)
             self.ledger.charge_round(flops=flops, time_s=t, energy_j=e,
-                                     parts=parts, stream=stream)
+                                     parts=parts, stream=stream,
+                                     model=self.model_name)
             start, end = scheduler.occupy(now, t, stream=stream,
                                           priority=priority)
             return RoundReport(iters=len(batches), flops=flops, time_s=t,
@@ -354,7 +364,8 @@ class FineTuneExecutor:
             parts = {k: v * f for k, v in ar.parts.items()}
         self.ledger.charge_round_segment(flops=flops, time_s=time_s,
                                          energy_j=energy_j, parts=parts,
-                                         stream=ar.stream, final=final)
+                                         stream=ar.stream,
+                                         model=self.model_name, final=final)
         ar.charged["time_s"] += time_s
         ar.charged["energy_j"] += energy_j
         ar.charged["flops"] += flops
@@ -362,13 +373,20 @@ class FineTuneExecutor:
             ar.charged_parts[k] += v
         ar.segments += 1
 
-    def preempt(self, t: float, scheduler) -> None:
+    def preempt(self, t: float, scheduler, *,
+                preempting_stream: Optional[int] = None) -> None:
         """A higher-priority arrival at time `t` splits the in-flight
         round: train the batches the device completed by `t`, charge the
         elapsed segment to the round's stream, and immediately re-occupy
         the remainder (the arrival only claims the preemption *point* —
-        serving is instantaneous in this cost model, so the round's end
-        time is unchanged). Callers gate on `scheduler.can_preempt`."""
+        serving is instantaneous in this cost model). With the default
+        `preempt_resume_cost_s == 0` a split is free and the round's end
+        time is unchanged; a positive value models the checkpoint-resume
+        overhead of a real split — the device pays it (occupied,
+        non-preemptible) before the remainder resumes, the charge lands
+        on the *preempting* stream (it caused the split) under
+        `t_resume`/`e_resume`, and the round's end shifts by that much.
+        Callers gate on `scheduler.can_preempt`."""
         ar = self.active_round
         assert ar is not None, "no active round to preempt"
         if t == ar.seg_start:
@@ -382,10 +400,24 @@ class FineTuneExecutor:
         self.ledger.note_preemption(ar.stream)
         ar.preemptions += 1
         remaining = scheduler.preempt(t)
+        resume = self.preempt_resume_cost_s
+        if resume > 0.0:
+            # the resume overhead is a separate charge (the round's own
+            # cost stays conserved across however many splits it absorbs)
+            # billed to whoever forced the split
+            payer = ar.stream if preempting_stream is None \
+                else preempting_stream
+            self.ledger.charge_probe(
+                "resume", resume, resume * self.cost.overhead_power_w,
+                stream=payer, model=self.model_name)
+            scheduler.occupy(t, resume, stream=payer,
+                             priority=ar.reservation.priority)
         ar.reservation = scheduler.occupy(
             t, remaining, stream=ar.stream,
             priority=ar.reservation.priority, preemptible=True)
-        ar.seg_start = t
+        # segment bookkeeping resumes where the round's work does (after
+        # any resume overhead), so segment durations stay pure round time
+        ar.seg_start = ar.reservation.start
 
     def finalize_round(self, now: Optional[float] = None
                        ) -> Optional[RoundReport]:

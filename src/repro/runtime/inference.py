@@ -14,6 +14,14 @@ flush time; the composition root bounds that lag to one window via
 `expire`, so stateful controllers may see signal timing shift by at most
 `batch_window` timeline seconds relative to per-request serving.
 
+Multi-model serving (ModelPool, DESIGN.md §9): the server holds one
+params-visibility lane per model *slot* (`register`/`publish(slot=...)`),
+each with its own `visible_params`/`visible_at` pair and model, and
+records accuracies per slot (`accs_by_slot`) alongside the per-stream
+view. The single-model runtime only ever touches the ``"default"`` slot,
+created in the constructor — its request path is byte-identical to the
+pre-pool server.
+
 Visibility caveat (kept bug-compatible with the pre-decomposition
 monolith; DESIGN.md §5): `publish` sets `visible_params` and
 `latest_params` to the *same* object, so until a publisher starts
@@ -29,12 +37,23 @@ pins down.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
+from repro.runtime.ledger import DEFAULT_MODEL
 from repro.runtime.train_loop import as_jnp, evaluate
+
+
+@dataclass
+class _SlotLane:
+    """Per-model-slot serving state: the model that answers the slot's
+    requests and the params-visibility pair (DESIGN.md §5 seam)."""
+    model: Any
+    visible_params: Any = None
+    visible_at: float = 0.0
+    latest_params: Any = None
 
 
 @dataclass
@@ -43,6 +62,8 @@ class _Pending:
     request: Dict[str, np.ndarray]
     params: Any  # resolved at submit time (arrival-time visibility policy)
     stream: int = 0  # arrival stream (multi-stream workloads)
+    slot: str = DEFAULT_MODEL  # model slot that serves it (ModelPool)
+    model: Any = field(default=None, repr=False)
 
 
 class InferenceServer:
@@ -60,17 +81,15 @@ class InferenceServer:
 
     def __init__(self, model, *, batch_window: float = 0.0,
                  on_served: Optional[Callable[[np.ndarray, int], bool]] = None):
-        self.model = model
         self.batch_window = float(batch_window)
         self.on_served = on_served
-        # params visibility: `visible_params` serve requests from
-        # `visible_at` on; `latest_params` is the newest trained state.
-        self.visible_params = None
-        self.visible_at = 0.0
-        self.latest_params = None
-        # recorded outcomes (global, plus a per-stream view)
+        # model slots: the single-model path lives entirely in "default";
+        # a ModelPool runtime registers one extra lane per slot.
+        self._lanes: Dict[str, _SlotLane] = {DEFAULT_MODEL: _SlotLane(model)}
+        # recorded outcomes (global, plus per-stream and per-slot views)
         self.accs: List[float] = []
         self.accs_by_stream: Dict[int, List[float]] = {}
+        self.accs_by_slot: Dict[str, List[float]] = {}
         # recorded serving latency (request arrival -> modeled service
         # time, seconds) per arrival stream; purely observational — the
         # composition root computes it from device occupancy (QoS
@@ -81,29 +100,64 @@ class InferenceServer:
         self.change_detected = False
         self._queue: List[_Pending] = []
 
-    # ---- params lifecycle ------------------------------------------------
-    def publish(self, params, visible_at: float) -> None:
-        """A fine-tuning round finished training `params`; they become
-        visible once the round's device occupancy ends (`visible_at`).
-        Queued requests arrived earlier and must be served first, with the
-        params they resolved to at arrival."""
-        self.flush()
-        self.visible_params = params
-        self.latest_params = params
-        self.visible_at = visible_at
+    # ---- slot lifecycle --------------------------------------------------
+    def register(self, slot: str, model) -> None:
+        """Add a serving lane for model slot `slot` (ModelPool). Re-
+        registering an existing slot swaps its model but keeps its
+        published params (the pool owns params continuity)."""
+        lane = self._lanes.get(slot)
+        if lane is None:
+            self._lanes[slot] = _SlotLane(model)
+        else:
+            lane.model = model
 
-    def _resolve(self, t: float):
-        return self.visible_params if t >= self.visible_at else self.latest_params
+    @property
+    def model(self):
+        """The default slot's model (legacy single-model accessor)."""
+        return self._lanes[DEFAULT_MODEL].model
+
+    @property
+    def visible_params(self):
+        return self._lanes[DEFAULT_MODEL].visible_params
+
+    @property
+    def visible_at(self) -> float:
+        return self._lanes[DEFAULT_MODEL].visible_at
+
+    @property
+    def latest_params(self):
+        return self._lanes[DEFAULT_MODEL].latest_params
+
+    # ---- params lifecycle ------------------------------------------------
+    def publish(self, params, visible_at: float,
+                slot: str = DEFAULT_MODEL) -> None:
+        """A fine-tuning round finished training `params` for `slot`; they
+        become visible once the round's device occupancy ends
+        (`visible_at`). Queued requests arrived earlier and must be served
+        first, with the params they resolved to at arrival."""
+        self.flush()
+        lane = self._lanes[slot]
+        lane.visible_params = params
+        lane.latest_params = params
+        lane.visible_at = visible_at
+
+    def _resolve(self, t: float, slot: str = DEFAULT_MODEL):
+        lane = self._lanes[slot]
+        return lane.visible_params if t >= lane.visible_at \
+            else lane.latest_params
 
     # ---- request path ----------------------------------------------------
     def submit(self, t: float, request: Dict[str, np.ndarray],
-               stream: int = 0, latency: float = 0.0) -> None:
+               stream: int = 0, latency: float = 0.0,
+               slot: str = DEFAULT_MODEL) -> None:
         """Serve (or enqueue) one inference request arriving at time `t` on
-        arrival stream `stream`. The params are resolved *now* —
-        arrival-time visibility — so coalescing never changes which model
-        state answers a request. Requests from different streams may share
-        a coalesced group (one device, one forward pass); accuracy
-        recording and `on_served` routing stay per-request.
+        arrival stream `stream`, answered by model slot `slot`. The params
+        are resolved *now* — arrival-time visibility — so coalescing never
+        changes which model state answers a request. Requests from
+        different streams may share a coalesced group (one device, one
+        forward pass); accuracy recording and `on_served` routing stay
+        per-request. Requests for different *slots* never coalesce (their
+        params — and models — differ by construction).
 
         Coalescing window semantics (pinned by a boundary-value test in
         tests/test_scheduler.py): the window is **closed** — a request
@@ -116,14 +170,17 @@ class InferenceServer:
         modeled service time); it is recorded per stream and reported via
         `RunResult.per_stream` percentiles, never acted on here."""
         self.latencies_by_stream.setdefault(stream, []).append(float(latency))
-        params = self._resolve(t)
+        params = self._resolve(t, slot)
+        pending = _Pending(t, request, params, stream, slot,
+                           self._lanes[slot].model)
         if self.batch_window <= 0.0:
-            self._serve([_Pending(t, request, params, stream)])
+            self._serve([pending])
             return
         if self._queue and (t - self._queue[0].time > self.batch_window
-                            or self._queue[0].params is not params):
+                            or self._queue[0].params is not params
+                            or self._queue[0].slot != slot):
             self.flush()
-        self._queue.append(_Pending(t, request, params, stream))
+        self._queue.append(pending)
 
     def flush(self) -> None:
         if self._queue:
@@ -152,15 +209,15 @@ class InferenceServer:
         self.eval_calls += 1
         if len(group) == 1:
             p = group[0]
-            acc, logits = evaluate(self.model, p.params, as_jnp(p.request))
+            acc, logits = evaluate(p.model, p.params, as_jnp(p.request))
             self._record(p, acc, logits)
             return
         # one forward pass over the concatenated group, then per-request
         # slicing — identical math to per-request serving because every
-        # request in a group shares the same params.
+        # request in a group shares the same params (and hence model).
         batch = {k: np.concatenate([p.request[k] for p in group])
                  for k in group[0].request}
-        _, logits = evaluate(self.model, group[0].params, as_jnp(batch))
+        _, logits = evaluate(group[0].model, group[0].params, as_jnp(batch))
         offset = 0
         for p in group:
             n = len(p.request["labels"])
@@ -174,6 +231,7 @@ class InferenceServer:
     def _record(self, p: _Pending, acc: float, logits) -> None:
         self.accs.append(acc)
         self.accs_by_stream.setdefault(p.stream, []).append(acc)
+        self.accs_by_slot.setdefault(p.slot, []).append(acc)
         self.served += 1
         if self.on_served is not None and self.on_served(logits, p.stream):
             self.change_detected = True

@@ -2,11 +2,18 @@
 
 Every time/energy/FLOPs figure a run reports flows through one ledger
 instance: per-round charges (compute + fixed overheads, from
-``EdgeCostModel.round_cost``) and auxiliary probe charges (e.g. SimFreeze's
-CKA similarity computations). Centralizing the arithmetic keeps the
-breakdown keys consistent across the runtime, benchmarks and tests, and
-makes "where did the joules go" auditable instead of being smeared across
-the event loop (DESIGN.md §3).
+``EdgeCostModel.round_cost``), auxiliary probe charges (e.g. SimFreeze's
+CKA similarity computations) and ModelPool swap charges (loading/saving a
+model slot across the device memory budget). Centralizing the arithmetic
+keeps the breakdown keys consistent across the runtime, benchmarks and
+tests, and makes "where did the joules go" auditable instead of being
+smeared across the event loop (DESIGN.md §3).
+
+Attribution is two-dimensional: every charge lands in the global totals,
+in ``per_stream[stream]`` (which arrival stream caused it) and in
+``per_model[model]`` (which model slot executed it — DESIGN.md §9). Both
+attributions independently sum back to the totals; single-model runs put
+everything under the ``"default"`` slot so the invariant is universal.
 """
 from __future__ import annotations
 
@@ -16,6 +23,9 @@ from typing import Dict
 #: Breakdown keys every `RunResult.breakdown` carries. `t_`/`e_` prefix =
 #: seconds / joules; `compute`/`overhead` follow the paper's Fig. 3 split;
 #: `cka` is SimFreeze's similarity-probe cost (charged as pure compute).
+#: ModelPool swap charges (`t_swap`/`e_swap`) and preemption-resume
+#: charges (`t_resume`/`e_resume`) appear lazily, only when a run
+#: actually incurs them — keeping legacy breakdowns byte-identical.
 BREAKDOWN_KEYS = ("t_compute", "t_overhead", "e_compute", "e_overhead",
                   "t_cka", "e_cka")
 
@@ -29,6 +39,15 @@ BREAKDOWN_KEYS = ("t_compute", "t_overhead", "e_compute", "e_overhead",
 #: the sums-to-totals contract, which covers the first four keys).
 STREAM_KEYS = ("time_s", "energy_j", "flops", "rounds", "preemptions")
 
+#: Per-model-slot attribution keys (ModelPool, DESIGN.md §9). The cost
+#: keys mirror STREAM_KEYS and sum to the totals the same way; `swaps`
+#: counts how many times the slot was loaded back into device memory
+#: after an eviction (a counter, like `preemptions`).
+MODEL_KEYS = ("time_s", "energy_j", "flops", "rounds", "swaps")
+
+#: Model-slot key used when the runtime runs a single model (no pool).
+DEFAULT_MODEL = "default"
+
 
 @dataclass
 class CostLedger:
@@ -39,23 +58,31 @@ class CostLedger:
     breakdown: Dict[str, float] = field(
         default_factory=lambda: {k: 0.0 for k in BREAKDOWN_KEYS})
     per_stream: Dict[int, Dict[str, float]] = field(default_factory=dict)
+    per_model: Dict[str, Dict[str, float]] = field(default_factory=dict)
 
     def _stream(self, stream: int) -> Dict[str, float]:
         return self.per_stream.setdefault(
             stream, {k: 0.0 for k in STREAM_KEYS})
 
+    def _model(self, model: str) -> Dict[str, float]:
+        return self.per_model.setdefault(
+            model, {k: 0.0 for k in MODEL_KEYS})
+
     def charge_round(self, *, flops: float, time_s: float, energy_j: float,
-                     parts: Dict[str, float], stream: int = 0) -> None:
+                     parts: Dict[str, float], stream: int = 0,
+                     model: str = DEFAULT_MODEL) -> None:
         """One fine-tuning round: `parts` is EdgeCostModel's breakdown dict
         (t_compute/t_overhead/e_compute/e_overhead); `stream` is the
-        arrival stream whose buffered batches the round trained."""
+        arrival stream whose buffered batches the round trained; `model`
+        the slot that executed it."""
         self.charge_round_segment(flops=flops, time_s=time_s,
                                   energy_j=energy_j, parts=parts,
-                                  stream=stream, final=True)
+                                  stream=stream, model=model, final=True)
 
     def charge_round_segment(self, *, flops: float, time_s: float,
                              energy_j: float, parts: Dict[str, float],
-                             stream: int = 0, final: bool = True) -> None:
+                             stream: int = 0, model: str = DEFAULT_MODEL,
+                             final: bool = True) -> None:
         """One *segment* of a (possibly preempted) round. A preemptible
         round charges each occupancy segment as it completes; the caller
         splits the round's total cost across segments so they sum exactly
@@ -70,9 +97,14 @@ class CostLedger:
         per["time_s"] += time_s
         per["energy_j"] += energy_j
         per["flops"] += flops
+        pm = self._model(model)
+        pm["time_s"] += time_s
+        pm["energy_j"] += energy_j
+        pm["flops"] += flops
         if final:
             self.rounds += 1
             per["rounds"] += 1
+            pm["rounds"] += 1
 
     def note_preemption(self, stream: int = 0) -> None:
         """A higher-priority arrival split `stream`'s in-flight round."""
@@ -84,7 +116,7 @@ class CostLedger:
                        for v in self.per_stream.values()))
 
     def charge_probe(self, key: str, time_s: float, energy_j: float,
-                     stream: int = 0) -> None:
+                     stream: int = 0, model: str = DEFAULT_MODEL) -> None:
         """An auxiliary compute charge outside the round proper (e.g. `key`
         = 'cka'). Adds to the totals and to `t_<key>` / `e_<key>`."""
         time_s, energy_j = float(time_s), float(energy_j)
@@ -95,6 +127,23 @@ class CostLedger:
         per = self._stream(stream)
         per["time_s"] += time_s
         per["energy_j"] += energy_j
+        pm = self._model(model)
+        pm["time_s"] += time_s
+        pm["energy_j"] += energy_j
+
+    def charge_swap(self, *, time_s: float, energy_j: float, model: str,
+                    stream: int = 0) -> None:
+        """A ModelPool residency swap: `model` was loaded back into device
+        memory (evicted peers saved out first). Lands in the totals, the
+        `t_swap`/`e_swap` breakdown, both attributions, and bumps the
+        slot's `swaps` counter."""
+        self.charge_probe("swap", time_s, energy_j, stream=stream,
+                          model=model)
+        self._model(model)["swaps"] += 1
+
+    @property
+    def swaps(self) -> int:
+        return int(sum(v.get("swaps", 0) for v in self.per_model.values()))
 
     @property
     def compute_tflops(self) -> float:

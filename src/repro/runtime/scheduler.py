@@ -31,6 +31,7 @@ from repro.data.arrivals import KIND_ORDER, Event
 OnData = Callable[[Event, bool], None]          # (event, scenario_boundary)
 OnInference = Callable[[Event], None]
 OnScenarioChange = Callable[[int, Event], None]  # (previous_scenario, event)
+OnProbe = Callable[[Event], None]                # detector-driven probe
 
 
 @dataclass
@@ -157,9 +158,13 @@ class EventScheduler:
 
     # ---- dispatch --------------------------------------------------------
     def run(self, *, on_data: OnData, on_inference: OnInference,
-            on_scenario_change: Optional[OnScenarioChange] = None) -> None:
+            on_scenario_change: Optional[OnScenarioChange] = None,
+            on_probe: Optional[OnProbe] = None) -> None:
         """Drain the queue in time order, advancing `now` monotonically and
-        emitting one callback per event."""
+        emitting one callback per event. "probe" events (detector-driven
+        drift confirmation, typically pushed mid-drain) go to `on_probe`
+        and are dropped when no handler is wired — they carry no payload a
+        generic embedder must not lose."""
         while self._heap:
             _, ev = heapq.heappop(self._heap)
             self.now = max(self.now, ev.time)
@@ -175,5 +180,8 @@ class EventScheduler:
                 elif ev.stream not in self.stream_scenarios:
                     self.stream_scenarios[ev.stream] = ev.scenario
                 on_data(ev, boundary)
+            elif ev.kind == "probe":
+                if on_probe is not None:
+                    on_probe(ev)
             else:
                 on_inference(ev)

@@ -1,7 +1,9 @@
 """Compile a `WorkloadSpec` down to the `Event` timeline.
 
 The output is a plain, time-sorted ``List[Event]`` — exactly what
-`EventScheduler` replays — with each event tagged by its arrival stream.
+`EventScheduler` replays — with each event tagged by its arrival stream
+and its stream's model-slot `modality` (the binding a `ModelPool` runtime
+resolves to decide *which* model an event trains or serves).
 Generation is **bit-reproducible**: every stream draws from its own
 `np.random.Generator` seeded by ``(spec.seed, stream_index)``, so the
 compiled timeline is a pure function of the spec and independent of
@@ -152,14 +154,16 @@ def stream_events(spec: WorkloadSpec, stream: int,
         t = offset + sc * span + np.minimum(t, span - 1e-3)
         for i, ti in enumerate(t):
             events.append(Event(float(ti), "data", first_scenario + sc, i,
-                                stream=stream, priority=s.priority))
+                                stream=stream, priority=s.priority,
+                                modality=s.modality))
     # -- inference requests: over the whole horizon ------------------------
     t = _arrival_times(s.inf_dist, s.inferences, horizon, rng, s)
     t = offset + np.minimum(t, horizon - 1e-3)
     for i, ti in enumerate(t):
         sc = min(int((ti - offset) // span), spec.num_scenarios - 1)
         events.append(Event(float(ti), "inference", first_scenario + sc, i,
-                            stream=stream, priority=s.priority))
+                            stream=stream, priority=s.priority,
+                            modality=s.modality))
     return events
 
 

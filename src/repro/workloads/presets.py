@@ -7,11 +7,11 @@ covers the regimes the paper's single Poisson timeline cannot express:
 multi-stream contention, staggered drift, MMPP bursts, diurnal + duty-
 cycle capture, and a heterogeneous two-benchmark mix.
 
-Note on the 'mixed' preset: a true CV+NLP mix needs one model per
-modality; at this reproduction's scale all streams share one model, so the
-NLP stream is stood in by a second CV benchmark with NLP-trace-like bursty
-arrivals (documented substitution, DESIGN.md §7). The `modality` tag is
-kept on the spec so a future multi-model runtime can bind it faithfully.
+The 'mixed' preset is a faithful CV+NLP mix: its NLP stream binds
+(`modality="nlp"`, `benchmark="20news"`) to a real BERT model slot in a
+`ModelPool` runtime — both modalities fine-tune and serve on the one
+shared device under its memory budget (DESIGN.md §9). The trace arrival
+process mimics the bursty VTT query pattern of paper §V-D.
 """
 from __future__ import annotations
 
@@ -54,12 +54,13 @@ def presets(*, batches_per_scenario: int = 8, inferences: int = 24,
                          duty_cycle=DutyCycle(period=scenario_span / 2,
                                               on_fraction=0.6)),),
                      **geom),
-        # heterogeneous mix: steady CV stream + a bursty 'NLP-like' stream
-        # (second CV benchmark standing in — module docstring)
+        # heterogeneous modality mix: steady CV stream + a real NLP
+        # stream (BERT on the 20News-style token benchmark, bursty trace
+        # arrivals) — one model slot per modality, one shared device
         WorkloadSpec("mixed",
                      (cv(),
-                      cv(modality="nlp", benchmark="ni", data_dist="trace",
-                         inf_dist="trace",
+                      cv(modality="nlp", benchmark="20news",
+                         data_dist="trace", inf_dist="trace",
                          inferences=max(inferences // 2, 4),
                          phase=scenario_span / 7)),
                      **geom),

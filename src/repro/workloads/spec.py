@@ -56,11 +56,15 @@ class DutyCycle:
 
 @dataclass(frozen=True)
 class StreamSpec:
-    """One arrival source. `modality`/`benchmark` bind the stream to a
-    continual-learning data stream (repro.data.streams.REGISTRY) when a
-    spec is materialized by the benchmark harness; the arrival fields
-    shape *when* its batches and requests land."""
-    modality: str = "cv"              # 'cv' | 'nlp' (metadata for binding)
+    """One arrival source. `benchmark` binds the stream to a continual-
+    learning data stream (repro.data.streams.REGISTRY) when a spec is
+    materialized by the benchmark harness; the arrival fields shape *when*
+    its batches and requests land. `modality` names the stream's **model
+    slot**: `compile_workload` stamps it on every event the stream emits,
+    and a `ModelPool` runtime (DESIGN.md §9) resolves each event to the
+    slot of that name — so a 'cv' and an 'nlp' stream really train and
+    serve different models on the one shared device."""
+    modality: str = "cv"              # model-slot key ('cv' | 'nlp' | ...)
     benchmark: str = "nc"             # repro.data.streams.REGISTRY key
     data_dist: str = "poisson"        # one of ARRIVAL_DISTS
     inf_dist: str = "poisson"
@@ -105,6 +109,10 @@ class WorkloadSpec:
             raise ValueError(f"workload {self.name!r}: drift {self.drift!r} "
                              f"not in {DRIFT_SCHEDULES}")
         for i, s in enumerate(self.streams):
+            if not isinstance(s.modality, str) or not s.modality:
+                raise ValueError(
+                    f"workload {self.name!r} stream {i}: modality must be "
+                    f"a non-empty model-slot key (got {s.modality!r})")
             if not isinstance(s.priority, int) or s.priority < 0:
                 raise ValueError(
                     f"workload {self.name!r} stream {i}: priority must be "
@@ -146,6 +154,17 @@ class WorkloadSpec:
     @property
     def horizon(self) -> float:
         return self.num_scenarios * self.scenario_span
+
+    @property
+    def modalities(self) -> Tuple[str, ...]:
+        """Distinct model-slot keys, in first-stream order — the slots a
+        `ModelPool` must provide to run this workload. A single-entry
+        result means the workload runs on the plain single-model path."""
+        seen = []
+        for s in self.streams:
+            if s.modality not in seen:
+                seen.append(s.modality)
+        return tuple(seen)
 
     def stream_offset(self, stream: int) -> float:
         """Wall-clock offset of `stream`'s scenario boundaries."""

@@ -1,0 +1,262 @@
+"""ModelPool tests (DESIGN.md §9): residency/LRU/swap-cost mechanics at
+the pool level (no models needed), the per-model CostLedger attribution
+property, and the faithful two-modality `mixed` runtime — a real
+BERT/20news NLP slot next to a CV slot on one device, per-slot inference
+accounting consistent with the RunResult totals, and memory budgets small
+enough to force swap charges into the breakdown."""
+import numpy as np
+import pytest
+
+from repro.core import ETunerConfig, ETunerController
+from repro.runtime.continual import ContinualRuntime
+from repro.runtime.costmodel import EdgeCostModel
+from repro.runtime.ledger import CostLedger
+from repro.runtime.modelpool import ModelPool, ModelSlot
+from repro.workloads import compile_workload, presets
+
+
+# ---------------------------------------------------------------------------
+# pool unit: residency, LRU eviction, swap cost math
+
+
+def _slot(name, mb, **cost_kw):
+    return ModelSlot(name, model=None, benchmark=None, memory_mb=mb,
+                     cost=EdgeCostModel(**cost_kw))
+
+
+def test_pool_validation():
+    with pytest.raises(ValueError):
+        ModelPool([])
+    with pytest.raises(ValueError):
+        ModelPool([_slot("cv", 1.0), _slot("cv", 1.0)])
+    pool = ModelPool([_slot("cv", 1.0)])
+    with pytest.raises(KeyError):
+        pool.slot("nlp")
+
+
+def test_unlimited_budget_never_swaps():
+    pool = ModelPool([_slot("cv", 10.0), _slot("nlp", 20.0)],
+                     memory_budget_mb=0.0)
+    assert pool.warm() == ("cv", "nlp")
+    for name in ("nlp", "cv", "nlp"):
+        assert pool.ensure_resident(name) == (0.0, 0.0, [])
+
+
+def test_slot_too_big_for_budget_raises():
+    pool = ModelPool([_slot("big", 5.0)], memory_budget_mb=2.0)
+    with pytest.raises(ValueError):
+        pool.set_memory("big", 5.0)
+    with pytest.raises(ValueError):
+        pool.ensure_resident("big")
+
+
+def test_warm_fills_in_declaration_order():
+    pool = ModelPool([_slot("a", 1.0), _slot("b", 1.0), _slot("c", 1.0)],
+                     memory_budget_mb=2.0)
+    assert pool.warm() == ("a", "b")
+    assert not pool.is_resident("c")
+
+
+def test_lru_eviction_order_and_touch_refresh():
+    pool = ModelPool([_slot("a", 1.0), _slot("b", 1.0), _slot("c", 1.0)],
+                     memory_budget_mb=2.0)
+    pool.warm()
+    # touching 'a' makes 'b' the least recently used
+    pool.ensure_resident("a")
+    t, e, evicted = pool.ensure_resident("c")
+    assert evicted == ["b"] and t > 0 and e > 0
+    assert pool.resident == ("a", "c")
+    # and 'a' (still resident) is next to go when 'b' returns
+    _, _, evicted = pool.ensure_resident("b")
+    assert evicted == ["a"]
+
+
+def test_swap_cost_uses_per_slot_cost_models():
+    """Loading pays the incoming slot's t_load_s; each eviction pays the
+    evicted slot's t_save_s — at the respective overhead powers."""
+    a = _slot("a", 2.0, t_load_s=0.4, t_save_s=0.3, overhead_power_w=5.0)
+    b = _slot("b", 2.0, t_load_s=0.7, t_save_s=0.2, overhead_power_w=8.0)
+    pool = ModelPool([a, b], memory_budget_mb=2.0)
+    pool.warm()                      # only 'a' fits
+    t, e, evicted = pool.ensure_resident("b")
+    assert evicted == ["a"]
+    assert t == pytest.approx(0.7 + 0.3)
+    assert e == pytest.approx(0.7 * 8.0 + 0.3 * 5.0)
+    t, e, evicted = pool.ensure_resident("a")
+    assert evicted == ["b"]
+    assert t == pytest.approx(0.4 + 0.2)
+    assert e == pytest.approx(0.4 * 5.0 + 0.2 * 8.0)
+
+
+# ---------------------------------------------------------------------------
+# ledger: per-model attribution sums to totals (property, ISSUE acceptance)
+
+
+def test_ledger_per_model_and_per_stream_attributions_sum_to_totals():
+    """Whatever interleaving of round segments, probes and swaps a run
+    charges, the per-model and per-stream attributions each independently
+    reconstruct the ledger totals."""
+    rng = np.random.default_rng(7)
+    led = CostLedger()
+    models = ("cv", "nlp", "audio")
+    for _ in range(300):
+        model = models[rng.integers(len(models))]
+        stream = int(rng.integers(4))
+        kind = rng.integers(3)
+        t = float(rng.uniform(0.01, 2.0))
+        e = float(rng.uniform(0.1, 20.0))
+        if kind == 0:
+            f = float(rng.uniform(1e6, 1e9))
+            parts = {"t_compute": t * 0.6, "t_overhead": t * 0.4,
+                     "e_compute": e * 0.7, "e_overhead": e * 0.3}
+            led.charge_round_segment(flops=f, time_s=t, energy_j=e,
+                                     parts=parts, stream=stream,
+                                     model=model,
+                                     final=bool(rng.integers(2)))
+        elif kind == 1:
+            led.charge_probe("cka", t, e, stream=stream, model=model)
+        else:
+            led.charge_swap(time_s=t, energy_j=e, model=model,
+                            stream=stream)
+    for view in (led.per_model, led.per_stream):
+        assert sum(v["time_s"] for v in view.values()) == \
+            pytest.approx(led.total_time_s, rel=1e-12)
+        assert sum(v["energy_j"] for v in view.values()) == \
+            pytest.approx(led.total_energy_j, rel=1e-12)
+        assert sum(v["flops"] for v in view.values()) == \
+            pytest.approx(led.total_flops, rel=1e-12)
+    assert sum(v["rounds"] for v in led.per_model.values()) == led.rounds
+    assert led.swaps == sum(v["swaps"] for v in led.per_model.values())
+
+
+# ---------------------------------------------------------------------------
+# two-modality runtime: the faithful `mixed` preset
+
+
+def _immed(model):
+    return ETunerController(model, ETunerConfig(
+        lazytune=False, simfreeze=False, detect_scenario_changes=False))
+
+
+def _mixed_run(memory_budget_mb=0.0):
+    from benchmarks.workloads import _stream_benchmarks, build_pool
+
+    spec = presets(batches_per_scenario=3, inferences=8,
+                   num_scenarios=2)["mixed"]
+    benches = _stream_benchmarks(spec, 0, 8)
+    pool = build_pool("mobilenetv2", spec, benches,
+                      memory_budget_mb=memory_budget_mb)
+    rt = ContinualRuntime(
+        None, None, None, seed=0, pretrain_epochs=1, inference_batch=8,
+        stream_benchmarks=benches,
+        controller_factory=lambda slot: _immed(pool.slot(slot).model),
+        model_pool=pool)
+    return rt.run(events=compile_workload(spec)), pool
+
+
+@pytest.fixture(scope="module")
+def mixed_runs():
+    """(unbudgeted run, tight-budget run, tight pool)."""
+    free, _ = _mixed_run(0.0)
+    tight, pool = _mixed_run(2.5)  # fits one slot at a time -> must swap
+    return free, tight, pool
+
+
+def test_mixed_preset_runs_real_nlp_slot(mixed_runs):
+    """Acceptance: the mixed preset trains and serves a real BERT/20news
+    slot alongside the CV slot on one shared device."""
+    free, _, _ = mixed_runs
+    assert set(free.per_model) == {"cv", "nlp"}
+    for slot in ("cv", "nlp"):
+        assert free.per_model[slot]["rounds"] > 0
+        assert free.per_model[slot]["inferences"] > 0
+        assert free.per_model[slot]["flops"] > 0
+
+
+def test_per_model_attribution_sums_to_totals(mixed_runs):
+    """Acceptance: per-model CostLedger attribution sums to the totals —
+    with and without swapping."""
+    for res in mixed_runs[:2]:
+        for key, total in (("time_s", res.total_time_s),
+                           ("energy_j", res.total_energy_j),
+                           ("rounds", float(res.rounds))):
+            np.testing.assert_allclose(
+                sum(v[key] for v in res.per_model.values()), total,
+                rtol=1e-9)
+        np.testing.assert_allclose(
+            sum(v["flops"] for v in res.per_model.values()),
+            res.compute_tflops * 1e12, rtol=1e-9)
+
+
+def test_per_slot_inference_accounting_consistent(mixed_runs):
+    """ISSUE satellite: a two-modality run's per-model inference counts
+    and accuracies sum/average consistently with the RunResult totals
+    (and with the per-stream view of the same requests)."""
+    free, _, _ = mixed_runs
+    n = len(free.inference_accs)
+    for view in (free.per_model, free.per_stream):
+        assert sum(v["inferences"] for v in view.values()) == n
+        weighted = sum(v["avg_inference_acc"] * v["inferences"]
+                       for v in view.values()) / n
+        np.testing.assert_allclose(free.avg_inference_acc, weighted,
+                                   atol=1e-9)
+    # streams bind to slots: stream 0 is the cv slot's, stream 1 the nlp's
+    assert free.per_model["cv"]["inferences"] == \
+        free.per_stream[0]["inferences"]
+    assert free.per_model["nlp"]["inferences"] == \
+        free.per_stream[1]["inferences"]
+
+
+def test_memory_budget_triggers_swap_charges(mixed_runs):
+    """Acceptance: a memory budget smaller than both slots together
+    forces evictions; the swap overhead shows up in the t_swap/e_swap
+    breakdown, the per-model `swaps` counters, and the totals."""
+    free, tight, pool = mixed_runs
+    assert free.swaps == 0
+    assert "t_swap" not in free.breakdown
+    assert tight.swaps > 0
+    assert tight.breakdown["t_swap"] > 0
+    assert tight.breakdown["e_swap"] > 0
+    assert sum(v["swaps"] for v in tight.per_model.values()) == tight.swaps
+    # swapping costs real modeled time/energy on top of the same work
+    assert tight.total_time_s > free.total_time_s
+    assert tight.total_energy_j > free.total_energy_j
+    # and the budget was honored: never both slots resident
+    assert pool.memory_of("cv") + pool.memory_of("nlp") \
+        > pool.memory_budget_mb
+
+
+def test_cold_slot_inference_pays_swap_latency(mixed_runs):
+    """A request routed to an evicted slot waits out the swap-in: some
+    recorded serving latency must come from swaps even when the device
+    was otherwise idle (the free-budget run had zero-latency serving at
+    those instants)."""
+    free, tight, _ = mixed_runs
+    lat_free = sum(v["latency_p95"] for v in free.per_stream.values())
+    lat_tight = sum(v["latency_p95"] for v in tight.per_stream.values())
+    assert lat_tight > lat_free
+
+
+def test_pool_rejects_round_hooks():
+    pool = ModelPool([_slot("cv", 1.0)])
+    with pytest.raises(ValueError):
+        ContinualRuntime(None, None, None, model_pool=pool, quant_bits=8)
+
+
+def test_unknown_modality_fails_fast():
+    from benchmarks.workloads import _stream_benchmarks, build_pool
+    import dataclasses
+
+    spec = presets(batches_per_scenario=2, inferences=4,
+                   num_scenarios=2)["mixed"]
+    benches = _stream_benchmarks(spec, 0, 8)
+    pool = build_pool("mobilenetv2", spec, benches)
+    events = compile_workload(spec)
+    events = [dataclasses.replace(e, modality="audio") for e in events]
+    rt = ContinualRuntime(
+        None, None, None, seed=0, pretrain_epochs=1,
+        stream_benchmarks=benches,
+        controller_factory=lambda slot: _immed(pool.slot(slot).model),
+        model_pool=pool)
+    with pytest.raises(KeyError):
+        rt.run(events=events)

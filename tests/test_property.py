@@ -142,3 +142,51 @@ def test_int8_error_feedback_converges_in_mean():
         q, s, res = compression.int8_compress_tree({"g": g_true}, res)
         total += np.asarray(compression.int8_decompress_tree(q, s)["g"])
     np.testing.assert_allclose(total / 50, np.asarray(g_true), atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# CostLedger: both attribution views always reconstruct the totals
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2),      # charge kind
+                          st.integers(0, 2),      # model slot
+                          st.integers(0, 3),      # stream
+                          st.floats(1e-3, 5.0),   # time_s
+                          st.floats(1e-2, 50.0),  # energy_j
+                          st.booleans()),         # final segment
+                min_size=1, max_size=60))
+def test_ledger_attributions_always_sum_to_totals(ops):
+    """ISSUE acceptance (property): whatever interleaving of round
+    segments, probe charges and ModelPool swaps a run produces, the
+    per-model and per-stream attributions each independently sum back to
+    the ledger totals."""
+    from repro.runtime.ledger import CostLedger
+
+    led = CostLedger()
+    models = ("cv", "nlp", "audio")
+    for kind, m, stream, t, e, final in ops:
+        model = models[m]
+        if kind == 0:
+            parts = {"t_compute": t * 0.6, "t_overhead": t * 0.4,
+                     "e_compute": e * 0.7, "e_overhead": e * 0.3}
+            led.charge_round_segment(flops=t * 1e9, time_s=t, energy_j=e,
+                                     parts=parts, stream=stream,
+                                     model=model, final=final)
+        elif kind == 1:
+            led.charge_probe("cka", t, e, stream=stream, model=model)
+        else:
+            led.charge_swap(time_s=t, energy_j=e, model=model,
+                            stream=stream)
+    for view in (led.per_model, led.per_stream):
+        np.testing.assert_allclose(
+            sum(v["time_s"] for v in view.values()), led.total_time_s,
+            rtol=1e-9)
+        np.testing.assert_allclose(
+            sum(v["energy_j"] for v in view.values()), led.total_energy_j,
+            rtol=1e-9)
+        np.testing.assert_allclose(
+            sum(v["flops"] for v in view.values()), led.total_flops,
+            rtol=1e-9)
+    assert led.rounds == sum(v["rounds"] for v in led.per_model.values())
+    assert led.swaps == sum(v["swaps"] for v in led.per_model.values())

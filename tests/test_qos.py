@@ -35,20 +35,20 @@ class _FakeSteps:
         return 1e9
 
 
-def _mk_executor():
+def _mk_executor(**kw):
     ledger = CostLedger()
     ex = FineTuneExecutor(_FakeSteps(), EdgeCostModel(), ledger,
                           ReplayBuffer(), rng=np.random.default_rng(0),
-                          calibrate_cost=False)
+                          calibrate_cost=False, **kw)
     ex.load(0, None)
     return ex, ledger
 
 
-def _run_round(split_fracs):
+def _run_round(split_fracs, resume=0.0, preemptor=None):
     """One 5-batch round, preempted at each fraction of its duration (empty
     tuple = the synchronous unpreempted path). Returns (ledger, report,
     params)."""
-    ex, ledger = _mk_executor()
+    ex, ledger = _mk_executor(preempt_resume_cost_s=resume)
     for _ in range(5):
         ex.enqueue({"x": np.zeros(2, np.float32)}, stream=1)
     sched = EventScheduler()
@@ -61,7 +61,7 @@ def _run_round(split_fracs):
     for f in split_fracs:
         t = 10.0 + f * total
         assert sched.can_preempt(t, priority=9)
-        ex.preempt(t, sched)
+        ex.preempt(t, sched, preempting_stream=preemptor)
     report = ex.finalize_round()
     return ledger, report, ex.params
 
@@ -126,6 +126,40 @@ def test_preemption_checkpoints_batch_iterator():
     assert ex.params == 4 and ex.active_round is None
 
 
+@pytest.mark.parametrize("splits", [(0.5,), (0.2, 0.6)])
+def test_preempt_resume_cost_charged_to_preemptor(splits):
+    """Segment-conservation extension (ISSUE satellite): with
+    `preempt_resume_cost_s` set, each split still conserves the round's
+    own charges (stream 1 unchanged), but the modeled checkpoint-resume
+    fee lands on the *preempting* stream under t_resume/e_resume, and the
+    round's end shifts by one fee per split."""
+    resume = 0.05
+    base_ledger, base_report, base_params = _run_round(())
+    led, rep, params = _run_round(splits, resume=resume, preemptor=7)
+    n = len(splits)
+    assert params == base_params                  # all 5 batches trained
+    assert rep.end == pytest.approx(base_report.end + n * resume)
+    assert rep.preemptions == n
+    # the round's own cost is conserved: the fee is a separate charge
+    for k in ("time_s", "energy_j", "flops", "rounds"):
+        assert led.per_stream[1][k] == pytest.approx(
+            base_ledger.per_stream[1][k], rel=1e-12)
+    power = EdgeCostModel().overhead_power_w
+    assert led.per_stream[7]["time_s"] == pytest.approx(n * resume)
+    assert led.per_stream[7]["energy_j"] == pytest.approx(
+        n * resume * power)
+    assert led.breakdown["t_resume"] == pytest.approx(n * resume)
+    assert led.breakdown["e_resume"] == pytest.approx(n * resume * power)
+    assert led.total_time_s == pytest.approx(
+        base_ledger.total_time_s + n * resume)
+    assert led.total_energy_j == pytest.approx(
+        base_ledger.total_energy_j + n * resume * power)
+    # a zero knob stays byte-identical to the legacy free split
+    led0, rep0, _ = _run_round(splits)
+    assert rep0.end == pytest.approx(base_report.end)
+    assert "t_resume" not in led0.breakdown
+
+
 # ---------------------------------------------------------------------------
 # runtime-level: the qos preset with preemption off/on
 
@@ -141,7 +175,7 @@ def qos_runs():
                    num_scenarios=2)["qos"]
     events = compile_workload(spec)
 
-    def run(preemptible):
+    def run(preemptible, resume=0.0):
         model = build_model(get_reduced("mobilenetv2"))
         b0 = streams.nc_benchmark(num_scenarios=3, batches=4, batch_size=8,
                                   seed=0)
@@ -150,17 +184,18 @@ def qos_runs():
         rt = ContinualRuntime(model, b0, _immed(model), pretrain_epochs=1,
                               seed=0, stream_benchmarks={1: b1},
                               controller_factory=lambda st: _immed(model),
-                              preemptible=preemptible)
+                              preemptible=preemptible,
+                              preempt_resume_cost_s=resume)
         return rt.run(events=events)
 
-    return run(False), run(True)
+    return run(False), run(True), run(True, resume=2.0)
 
 
 def test_qos_preemption_cuts_high_priority_latency(qos_runs):
     """Acceptance criterion: the high-priority stream's p95 serving
     latency is strictly lower with preemption on, and preemptions are
     attributed to the bulk stream whose rounds were split."""
-    off, on = qos_runs
+    off, on = qos_runs[:2]
     assert off.preemptions == 0
     assert on.preemptions > 0
     assert on.per_stream[1]["preemptions"] == on.preemptions  # bulk stream
@@ -190,7 +225,7 @@ def test_max_staleness_starvation_guard():
 def test_qos_preemption_conserves_totals(qos_runs):
     """Splitting rounds must not change what the run costs: segment
     charges reconcile to the same totals as the unpreempted run."""
-    off, on = qos_runs
+    off, on = qos_runs[:2]
     assert on.rounds == off.rounds
     # val_curve parity additionally pins that a lazily-finalized round
     # validates against the scenario current at its *launch* (not
@@ -206,6 +241,121 @@ def test_qos_preemption_conserves_totals(qos_runs):
         for key in ("time_s", "energy_j", "flops", "rounds"):
             np.testing.assert_allclose(on.per_stream[st][key],
                                        off.per_stream[st][key], rtol=1e-9)
+
+
+def test_preempt_resume_cost_runtime_wiring(qos_runs):
+    """End-to-end knob: `ContinualRuntime(preempt_resume_cost_s=2.0)`
+    charges exactly one modeled resume fee per split, visible in the
+    t_resume/e_resume breakdown, with both attribution views still
+    reconstructing the totals."""
+    _, _, onr = qos_runs
+    assert onr.preemptions > 0
+    assert onr.breakdown["t_resume"] == pytest.approx(
+        onr.preemptions * 2.0)
+    assert onr.breakdown["e_resume"] == pytest.approx(
+        onr.preemptions * 2.0 * EdgeCostModel().overhead_power_w)
+    for view in (onr.per_stream, onr.per_model):
+        np.testing.assert_allclose(
+            sum(v["time_s"] for v in view.values()), onr.total_time_s,
+            rtol=1e-9)
+        np.testing.assert_allclose(
+            sum(v["energy_j"] for v in view.values()),
+            onr.total_energy_j, rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# detector-driven probes (ISSUE satellite; ROADMAP open item)
+
+
+def test_detector_probe_fires_and_resolves_on_right_stream():
+    """A detection in boundaries='detector' mode pushes a probe Event
+    onto the live scheduler; the probe's dedicated forward pass resolves
+    against the *detecting stream's* controller, whose confirmation
+    latches the scenario change for that stream's next data event."""
+    model = build_model(get_reduced("mobilenetv2"))
+    b0 = streams.nc_benchmark(num_scenarios=3, batches=3, batch_size=8,
+                              seed=0)
+    b1 = streams.ni_benchmark(num_scenarios=3, batches=3, batch_size=8,
+                              seed=13)
+
+    class Spy(ETunerController):
+        def __init__(self, model, fire=False):
+            super().__init__(model, ETunerConfig(
+                lazytune=False, simfreeze=False,
+                detect_scenario_changes=False))
+            self.fire = fire
+            self.probes = 0
+            self.changes = 0
+
+        def inference_served(self, logits):
+            hit = super().inference_served(logits)
+            if self.fire:
+                self.fire = False
+                return True
+            return hit
+
+        def probe_served(self, logits):
+            self.probes += 1
+            return True
+
+        def scenario_changed(self, params, batch):
+            self.changes += 1
+            super().scenario_changed(params, batch)
+
+    c0 = Spy(model)
+    c1 = Spy(model, fire=True)   # stream 1's controller flags a change
+    rt = ContinualRuntime(model, b0, c0, pretrain_epochs=1, seed=0,
+                          boundaries="detector",
+                          stream_benchmarks={1: b1},
+                          controller_factory=lambda st: c1)
+    events = [Event(1.0, "data", 1, 0, stream=0),
+              Event(2.0, "data", 1, 0, stream=1),
+              Event(3.0, "inference", 1, 0, stream=1),
+              Event(4.0, "data", 1, 1, stream=1),
+              Event(5.0, "data", 1, 1, stream=0)]
+    res = rt.run(events=events)
+    assert res.probes == 1
+    assert c1.probes == 1 and c0.probes == 0       # right controller
+    assert c1.changes == 1 and c0.changes == 0     # right stream latched
+    assert res.breakdown["t_probe"] > 0            # the pass is charged
+
+
+def test_probe_confirmation_can_reject():
+    """A probe whose forward pass does *not* confirm drift leaves the
+    stream's pending-change latch unset — no scenario_changed fires."""
+    model = build_model(get_reduced("mobilenetv2"))
+    bench = streams.nc_benchmark(num_scenarios=3, batches=3, batch_size=8,
+                                 seed=0)
+
+    class Reject(ETunerController):
+        def __init__(self, model):
+            super().__init__(model, ETunerConfig(
+                lazytune=False, simfreeze=False,
+                detect_scenario_changes=False))
+            self.fire = True
+            self.changes = 0
+
+        def inference_served(self, logits):
+            super().inference_served(logits)
+            if self.fire:
+                self.fire = False
+                return True
+            return False
+
+        def probe_served(self, logits):
+            return False
+
+        def scenario_changed(self, params, batch):
+            self.changes += 1
+
+    ctrl = Reject(model)
+    rt = ContinualRuntime(model, bench, ctrl, pretrain_epochs=1, seed=0,
+                          boundaries="detector")
+    res = rt.run(events=[Event(1.0, "data", 1, 0),
+                         Event(2.0, "inference", 1, 0),
+                         Event(3.0, "data", 1, 1)])
+    assert res.probes == 1
+    assert ctrl.changes == 0
 
 
 # ---------------------------------------------------------------------------

@@ -50,6 +50,25 @@ def test_scheduler_stable_for_equal_keys():
     assert seen == [0, 1, 2, 3, 4]
 
 
+def test_scheduler_dispatches_probe_events_to_on_probe():
+    """Probe events (detector-driven drift confirmation) route to the
+    dedicated callback, run *after* colliding data/inference events at
+    the same timestamp, and are dropped — never misrouted to
+    on_inference — when no handler is wired."""
+    sched = EventScheduler([Event(1.0, "probe", 1, 0, stream=2),
+                            Event(1.0, "data", 1, 0),
+                            Event(2.0, "inference", 1, 0)])
+    order = []
+    sched.run(on_data=lambda ev, b: order.append(("data", ev.time)),
+              on_inference=lambda ev: order.append(("inf", ev.time)),
+              on_probe=lambda ev: order.append(("probe", ev.time,
+                                                ev.stream)))
+    assert order == [("data", 1.0), ("probe", 1.0, 2), ("inf", 2.0)]
+    sched = EventScheduler([Event(1.0, "probe", 1, 0),
+                            Event(2.0, "inference", 1, 0)])
+    assert _drain(sched) == [("inf", 2.0)]   # no handler: dropped
+
+
 def test_scheduler_busy_until_serializes_rounds():
     sched = EventScheduler()
     start, end = sched.occupy(2.0, 3.0)
@@ -409,3 +428,29 @@ def test_server_on_served_latches_change_detection():
     assert hits == [1, 2]               # per-request logits, arrival order
     assert srv.poll_change() is True
     assert srv.poll_change() is False   # consumed
+
+
+def test_server_never_coalesces_across_model_slots():
+    """ModelPool serving (DESIGN.md §9): two slots whose lanes happen to
+    hold the *same* params object must still serve separately — each
+    request's logits come from its own slot's model, and accuracies land
+    under the right slot."""
+    cv, nlp = _StubModel(), _StubModel()
+    srv = InferenceServer(cv, batch_window=10.0)
+    srv.register("cv", cv)
+    srv.register("nlp", nlp)
+    srv.publish("good", 0.0, slot="cv")
+    srv.publish("good", 0.0, slot="nlp")   # identical params object
+    srv.submit(1.0, _req([0, 1]), slot="cv")
+    srv.submit(2.0, _req([2, 3]), slot="nlp")  # same window, other slot
+    srv.flush()
+    assert srv.eval_calls == 2             # split despite shared params
+    assert cv.calls == 1 and nlp.calls == 1
+    assert srv.accs_by_slot == {"cv": [1.0], "nlp": [1.0]}
+    # same slot + same params still coalesces as before
+    srv2 = InferenceServer(cv, batch_window=10.0)
+    srv2.publish("good", 0.0)
+    srv2.submit(1.0, _req([0]))
+    srv2.submit(2.0, _req([1]))
+    srv2.flush()
+    assert srv2.eval_calls == 1

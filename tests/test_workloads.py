@@ -138,6 +138,22 @@ def test_qos_preset_threads_priorities_onto_events():
     assert {e.priority for e in events} == set(prios)
 
 
+def test_modality_binds_streams_to_model_slots():
+    """`StreamSpec.modality` is no longer metadata: compile_workload
+    stamps it on every event the stream emits (the ModelPool slot
+    binding), `WorkloadSpec.modalities` lists the slots a pool must
+    provide, and the faithful mixed preset really names an NLP/20news
+    stream."""
+    spec = SPECS["mixed"]
+    assert spec.modalities == ("cv", "nlp")
+    assert spec.streams[1].benchmark == "20news"
+    for e in compile_workload(spec):
+        assert e.modality == spec.streams[e.stream].modality
+    assert SPECS["single-poisson"].modalities == ("cv",)
+    with pytest.raises(ValueError):
+        WorkloadSpec("bad-mod", (StreamSpec(modality=""),)).validate()
+
+
 def test_staggered_drift_offsets_streams():
     """two-stream is staggered: stream 1 crosses each scenario boundary
     half a span after stream 0."""
@@ -237,8 +253,10 @@ def _valid_doc():
 
     cell = {f: 1.0 for f in W.CELL_FIELDS}
     stream_cell = {f: 1.0 for f in W.STREAM_FIELDS}
+    model_cell = {f: 1.0 for f in W.MODEL_FIELDS}
     cells = [dict(cell, workload=w, method=m,
-                  per_stream={"0": dict(stream_cell)})
+                  per_stream={"0": dict(stream_cell)},
+                  per_model={"default": dict(model_cell)})
              for w in ("a", "b", "c") for m in W.METHODS]
     return W, {
         "schema_version": W.SCHEMA_VERSION, "suite": "workloads",
@@ -275,6 +293,14 @@ def test_bench_schema_validator_flags_violations():
                            for c in doc["cells"]])
     del bad["cells"][0]["per_stream"]["0"]["latency_p95"]
     assert any("latency_p95" in e for e in W.validate_bench(bad))
+    # v3: every cell must carry a non-empty per-model attribution
+    bad = dict(doc, cells=[dict(c) for c in doc["cells"]])
+    del bad["cells"][0]["per_model"]
+    assert any("per_model" in e for e in W.validate_bench(bad))
+    bad = dict(doc, cells=[dict(c, per_model={"default": dict(
+        c["per_model"]["default"])}) for c in doc["cells"]])
+    del bad["cells"][0]["per_model"]["default"]["swaps"]
+    assert any("'swaps'" in e for e in W.validate_bench(bad))
 
 
 # ---------------------------------------------------------------------------
@@ -282,11 +308,19 @@ def test_bench_schema_validator_flags_violations():
 
 
 def _diff_docs():
-    cell = {"workload": "w", "method": "immed", "preemptible": 0,
-            "acc": 0.5, "time_s": 10.0, "energy_j": 100.0, "tflops": 1.0,
-            "rounds": 5, "recompiles": 1, "preemptions": 0}
-    base = {"schema_version": 2, "cells": [dict(cell)]}
-    new = {"schema_version": 2, "cells": [dict(cell)]}
+    def cell():
+        return {"workload": "w", "method": "immed", "preemptible": 0,
+                "acc": 0.5, "time_s": 10.0, "energy_j": 100.0,
+                "tflops": 1.0, "rounds": 5, "recompiles": 1,
+                "preemptions": 0, "swaps": 0,
+                "per_stream": {"0": {"latency_p50": 0.0,
+                                     "latency_p95": 2.0}},
+                "per_model": {"default": {"time_s": 10.0,
+                                          "energy_j": 100.0,
+                                          "flops": 1e9,
+                                          "avg_inference_acc": 0.5}}}
+    base = {"schema_version": 3, "cells": [cell()]}
+    new = {"schema_version": 3, "cells": [cell()]}
     return base, new
 
 
@@ -353,6 +387,45 @@ def test_bench_diff_new_cell_and_preemptible_key():
     regressions, infos = BD.diff_cells(base, new)
     assert regressions == []
     assert any("new cell" in i and "+preempt" in i for i in infos)
+
+
+def test_bench_diff_gates_per_stream_latency():
+    """ISSUE satellite: serving-latency columns are gated directionally —
+    p95 up beyond threshold fails, improvements and sub-millisecond moves
+    on a ~0 baseline never do."""
+    import benchmarks.bench_diff as BD
+
+    base, new = _diff_docs()
+    new["cells"][0]["per_stream"]["0"]["latency_p95"] = 3.0   # +50%
+    regressions, _ = BD.diff_cells(base, new, threshold=0.05)
+    assert len(regressions) == 1 and "latency_p95" in regressions[0]
+    base, new = _diff_docs()
+    new["cells"][0]["per_stream"]["0"]["latency_p95"] = 1.0   # improvement
+    # p50 moves hugely in relative terms but only by half a millisecond
+    new["cells"][0]["per_stream"]["0"]["latency_p50"] = 5e-4
+    regressions, infos = BD.diff_cells(base, new, threshold=0.05)
+    assert regressions == []
+    assert any("latency_p95" in i and "improvement" in i for i in infos)
+
+
+def test_bench_diff_gates_per_model_columns():
+    """ISSUE satellite: per-model slot costs regress upward, slot
+    accuracy downward (wider acc threshold), and a vanished slot entry
+    fails the diff."""
+    import benchmarks.bench_diff as BD
+
+    base, new = _diff_docs()
+    new["cells"][0]["per_model"]["default"]["time_s"] = 12.0   # +20%
+    new["cells"][0]["per_model"]["default"]["avg_inference_acc"] = 0.3
+    regressions, _ = BD.diff_cells(base, new, threshold=0.05)
+    assert any("per_model[default]" in r and "time_s" in r
+               for r in regressions)
+    assert any("avg_inference_acc" in r for r in regressions)
+    base, new = _diff_docs()
+    new["cells"][0]["per_model"] = {}
+    regressions, _ = BD.diff_cells(base, new)
+    assert len(regressions) == 1 and "per_model[default] missing" \
+        in regressions[0]
 
 
 def test_bench_diff_cli_exit_codes(tmp_path):
