@@ -8,9 +8,11 @@ so a perf/accuracy regression can't land silently. The same directional
 gate covers the per-stream `latency_p50`/`latency_p95` serving-latency
 columns (upward = regression; sub-millisecond absolute moves are noise)
 and the v3 per-model-slot columns (slot costs up / slot accuracy down =
-regression). Baseline cells — and baseline per-stream/per-model entries —
-that vanish also fail (coverage must never shrink); brand-new cells are
-reported but don't fail.
+regression). v4 cells are additionally keyed by `trigger_policy`, so the
+priority-weighted-trigger qos cells are gated independently of their
+default-trigger siblings. Baseline cells — and baseline
+per-stream/per-model entries — that vanish also fail (coverage must
+never shrink); brand-new cells are reported but don't fail.
 
 Accuracy gets its own (wider) threshold: cell accuracies average a few
 dozen requests, so XLA-CPU codegen differences between the machine that
@@ -69,11 +71,20 @@ MODEL_METRIC_DIRECTIONS = {
 _ABS_FLOOR = {"latency_p50": 1e-3, "latency_p95": 1e-3}
 
 
-def cell_key(cell: Dict) -> Tuple[str, str, int]:
+def cell_key(cell: Dict) -> Tuple[str, str, int, str]:
     """Identity of a sweep cell across artifacts. `preemptible` is part
-    of the key: a prioritized preset runs once per QoS mode."""
+    of the key (a prioritized preset runs once per QoS mode), and so is
+    `trigger_policy` (BENCH v4: the same method may run under its default
+    trigger and the priority-weighted one — both are gated)."""
     return (cell.get("workload", "?"), cell.get("method", "?"),
-            int(cell.get("preemptible", 0)))
+            int(cell.get("preemptible", 0)),
+            cell.get("trigger_policy", "default"))
+
+
+def _cell_label(key: Tuple[str, str, int, str]) -> str:
+    return "{}/{}{}{}".format(
+        key[0], key[1], "+preempt" if key[2] else "",
+        "" if key[3] == "default" else f"+{key[3]}")
 
 
 def _rel_change(base: float, new: float) -> float:
@@ -132,8 +143,7 @@ def diff_cells(base_doc: Dict, new_doc: Dict, *, threshold: float = 0.05,
     regressions: List[str] = []
     infos: List[str] = []
     for key in sorted(base_cells):
-        label = "{}/{}{}".format(key[0], key[1],
-                                 "+preempt" if key[2] else "")
+        label = _cell_label(key)
         if key not in new_cells:
             regressions.append(f"{label}: cell missing from new artifact")
             continue
@@ -153,8 +163,7 @@ def diff_cells(base_doc: Dict, new_doc: Dict, *, threshold: float = 0.05,
                 infos.append(f"{label}: {metric} {b.get(metric)} -> "
                              f"{n.get(metric)}")
     for key in sorted(set(new_cells) - set(base_cells)):
-        infos.append("{}/{}{}: new cell (no baseline)".format(
-            key[0], key[1], "+preempt" if key[2] else ""))
+        infos.append(f"{_cell_label(key)}: new cell (no baseline)")
     return regressions, infos
 
 

@@ -1,6 +1,12 @@
 """Shared benchmark harness: run the 4 ETuner configurations and the SOTA
 baselines on a continual benchmark, returning paper-style rows.
 
+The four paper methods are expressed as declarative policy stacks
+(`method_policies` -> `repro.core.policies.PolicyStackSpec`); the SOTA
+baselines stay monolithic controller objects (they predate the policy
+decomposition and exercise the legacy-adapter path). Runtime construction
+goes through the `RuntimeConfig` front door (DESIGN.md §11).
+
 Every number is produced by the real runtime (jitted training, measured
 HLO FLOPs) + the calibrated EdgeCostModel; nothing is hard-coded."""
 from __future__ import annotations
@@ -14,38 +20,61 @@ import numpy as np
 from repro.baselines import (EgeriaController, EkyaController, RigLController,
                              SlimFitController, StaticController)
 from repro.configs import get_reduced
-from repro.core import (ETunerConfig, ETunerController, LazyTuneConfig,
-                        SimFreezeConfig)
+from repro.core.policies import PolicySpec, PolicyStackSpec
 from repro.data import streams
 from repro.models import build_model
-from repro.runtime.continual import ContinualRuntime
+from repro.runtime import (ContinualRuntime, HookSpec, RuntimeConfig,
+                           SlotConfig)
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+#: the four paper ablations (Immed. / LazyTune / SimFreeze / ETuner)
+PAPER_METHODS = ("immed", "lazytune", "simfreeze", "etuner")
 
 # Accuracy-preserving operating point at reduced scale (EXPERIMENTS.md
 # discusses the savings-vs-accuracy frontier; the paper's streams are ~10x
 # longer, which is what unlocks its -64% time at +1.75% accuracy).
-ET_KW = dict(lazytune_cfg=LazyTuneConfig(max_batches_needed=6),
-             simfreeze_cfg=SimFreezeConfig(freeze_interval=10, min_history=3,
-                                           cka_threshold=0.01))
+ET_LAZYTUNE = {"max_batches_needed": 6.0}
+ET_SIMFREEZE = {"freeze_interval": 10, "min_history": 3,
+                "cka_threshold": 0.01}
 
 
-def make_controller(model, method: str):
-    if method == "immed":
-        return ETunerController(model, ETunerConfig(
-            lazytune=False, simfreeze=False, detect_scenario_changes=False))
-    if method == "lazytune":
-        return ETunerController(model, ETunerConfig(
-            lazytune=True, simfreeze=False, detect_scenario_changes=False,
-            **ET_KW))
-    if method == "simfreeze":
-        return ETunerController(model, ETunerConfig(
-            lazytune=False, simfreeze=True, detect_scenario_changes=False,
-            **ET_KW))
-    if method == "etuner":
-        return ETunerController(model, ETunerConfig(
-            lazytune=True, simfreeze=True, detect_scenario_changes=False,
-            **ET_KW))
+def method_policies(method: str,
+                    trigger_policy: str = "default") -> PolicyStackSpec:
+    """The policy stack of one paper method. `trigger_policy` swaps the
+    LazyTune trigger for its priority-weighted variant
+    ("priority-weighted", BENCH schema v4): the accumulation target is
+    scaled by each stream's QoS priority, so it only makes sense for the
+    LazyTune-bearing methods."""
+    if method not in PAPER_METHODS:
+        raise KeyError(method)
+    lazy = method in ("lazytune", "etuner")
+    freeze = method in ("simfreeze", "etuner")
+    if trigger_policy == "default":
+        trigger = PolicySpec("lazytune", dict(ET_LAZYTUNE)) if lazy \
+            else PolicySpec("immediate")
+    elif trigger_policy == "priority-weighted":
+        if not lazy:
+            raise ValueError(
+                f"trigger_policy 'priority-weighted' scales LazyTune's "
+                f"accumulation target; method {method!r} has no LazyTune")
+        trigger = PolicySpec("priority-weighted", dict(ET_LAZYTUNE))
+    else:
+        raise ValueError(f"unknown trigger_policy {trigger_policy!r}; "
+                         f"known: ['default', 'priority-weighted']")
+    return PolicyStackSpec(
+        trigger=trigger,
+        freeze=PolicySpec("simfreeze", dict(ET_SIMFREEZE)) if freeze
+        else PolicySpec("none"),
+        drift=PolicySpec("none"))
+
+
+def make_controller(model, method: str, trigger_policy: str = "default"):
+    if method in PAPER_METHODS:
+        return method_policies(method, trigger_policy).build(model)
+    if trigger_policy != "default":
+        raise ValueError(f"trigger_policy={trigger_policy!r} only applies "
+                         f"to the paper methods {PAPER_METHODS}")
     if method == "egeria":
         return EgeriaController(model, with_lazytune=True, interval=4)
     if method == "slimfit":
@@ -66,6 +95,11 @@ def run_method(arch: str, bench_name: str, method: str, *, seeds=(0,),
                data_dist: str = "poisson", inf_dist: str = "poisson",
                inference_window: float = 0.0) -> Dict:
     accs, times, energies, tflops, rounds = [], [], [], [], []
+    hooks = []
+    if quant_bits:
+        hooks.append(HookSpec("fake-quant", {"bits": quant_bits}))
+    if unlabeled:
+        hooks.append(HookSpec("simsiam", {"fraction": unlabeled}))
     for seed in seeds:
         cfg = get_reduced(arch)
         model = build_model(cfg)
@@ -81,10 +115,13 @@ def run_method(arch: str, bench_name: str, method: str, *, seeds=(0,),
         ctrl = make_controller(model, method)
         if method == "rigl":
             model = ctrl.wrap_model()
-        rt = ContinualRuntime(model, bench, ctrl, pretrain_epochs=2,
-                              seed=seed, quant_bits=quant_bits,
-                              unlabeled_fraction=unlabeled,
-                              inference_window=inference_window)
+        rt = ContinualRuntime.from_config(
+            RuntimeConfig(
+                slots={"default": SlotConfig(arch=arch,
+                                             hooks=tuple(hooks))},
+                seed=seed, pretrain_epochs=2,
+                inference_window=inference_window),
+            model=model, benchmark=bench, controller=ctrl)
         res = rt.run(inferences_total=inferences, data_dist=data_dist,
                      inf_dist=inf_dist)
         # Ekya's trial-and-error profiling cost (extra rounds of compute)

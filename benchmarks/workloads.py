@@ -7,6 +7,10 @@ emits a schema'd, machine-readable ``BENCH_workloads.json`` at the repo
 root so the performance trajectory is tracked over time (CI runs the
 ``--quick`` sweep on every push and uploads the file as an artifact).
 
+Sessions are built through the declarative `RuntimeConfig` front door
+(`workload_config` -> `edgeol_session`, DESIGN.md §11); only the
+monolithic SOTA baselines inject live controller objects.
+
     PYTHONPATH=src python benchmarks/workloads.py --quick
     PYTHONPATH=src python benchmarks/workloads.py --validate BENCH_workloads.json
 
@@ -24,22 +28,24 @@ from typing import Dict, List, Optional, Sequence
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.common import make_controller
+from benchmarks.common import (PAPER_METHODS, make_controller,
+                               method_policies)
 from repro.configs import get_reduced
-from repro.data import streams
 from repro.models import build_model
-from repro.runtime.continual import ContinualRuntime
+from repro.runtime import (RuntimeConfig, SlotConfig, edgeol_session,
+                           materialize_stream_benchmarks)
 from repro.runtime.modelpool import ModelPool, ModelSlot
-from repro.workloads import WorkloadSpec, compile_workload, presets
+from repro.workloads import WorkloadSpec, presets
 
-#: v3 adds the ModelPool columns: per-cell `models` (slot count) and
-#: `swaps` (cold-slot swap-ins), and a `per_model` attribution dict —
-#: one entry per model slot (single-model cells report the "default"
-#: slot) whose cost keys sum to the cell totals like `per_stream` does.
-#: (v2 added QoS: `preemptible`/`preemptions` cells and per-stream
-#: `latency_p50`/`latency_p95` serving-latency columns.)
-SCHEMA_VERSION = 3
-METHODS = ("immed", "lazytune", "simfreeze", "etuner")
+#: v4 adds the PolicyStack column: every cell carries `trigger_policy`
+#: ("default" = the method's own trigger; "priority-weighted" =
+#: `PriorityWeightedTrigger`, LazyTune's accumulation target scaled by
+#: each stream's QoS priority) and prioritized presets sweep an extra
+#: etuner/priority-weighted cell per QoS mode. (v3 added the ModelPool
+#: columns — per-cell `models`/`swaps` + `per_model` attribution; v2
+#: added QoS — `preemptible`/`preemptions` + per-stream latency.)
+SCHEMA_VERSION = 4
+METHODS = PAPER_METHODS
 DEFAULT_OUT = os.path.abspath(
     os.path.join(os.path.dirname(__file__), "..", "BENCH_workloads.json"))
 
@@ -51,6 +57,9 @@ MODALITY_ARCH = {"nlp": "bert-base"}
 CELL_FIELDS = ("acc", "time_s", "energy_j", "tflops", "rounds",
                "recompiles", "events", "streams", "wall_s",
                "preemptible", "preemptions", "models", "swaps")
+
+#: String fields every cell must carry (schema contract, v4).
+CELL_STR_FIELDS = ("workload", "method", "trigger_policy")
 
 #: Numeric fields every per-stream attribution cell must carry.
 STREAM_FIELDS = ("time_s", "energy_j", "flops", "rounds", "preemptions",
@@ -68,17 +77,10 @@ MODEL_FIELDS = ("time_s", "energy_j", "flops", "rounds", "swaps",
 
 def _stream_benchmarks(spec: WorkloadSpec, seed: int,
                        batch_size: int) -> Dict[int, object]:
-    """Materialize one continual benchmark per stream (scenario 0 is
-    reserved for pretraining, so each needs num_scenarios + 1)."""
-    benches = {}
-    for i, ss in enumerate(spec.streams):
-        maker = streams.REGISTRY[ss.benchmark]
-        kw = dict(batches=max(ss.batches_per_scenario, 2),
-                  batch_size=batch_size, seed=seed + 13 * i)
-        if ss.benchmark != "s-cifar":
-            kw["num_scenarios"] = spec.num_scenarios + 1
-        benches[i] = maker(**kw)
-    return benches
+    """One continual benchmark per stream (kept as a thin alias of the
+    runtime-config materializer so tests and the sweep share one
+    binding)."""
+    return materialize_stream_benchmarks(spec, seed, batch_size)
 
 
 def build_pool(arch: str, spec: WorkloadSpec, benches: Dict[int, object],
@@ -88,17 +90,53 @@ def build_pool(arch: str, spec: WorkloadSpec, benches: Dict[int, object],
     pretrains/validates on the benchmark of its first bound stream."""
     slots = []
     for m in spec.modalities:
-        if m != "cv" and m not in MODALITY_ARCH:
-            raise ValueError(
-                f"no architecture mapped for modality {m!r}; extend "
-                f"benchmarks.workloads.MODALITY_ARCH (known: "
-                f"{['cv'] + sorted(MODALITY_ARCH)})")
-        slot_arch = arch if m == "cv" else MODALITY_ARCH[m]
         first = next(i for i, s in enumerate(spec.streams)
                      if s.modality == m)
-        slots.append(ModelSlot(m, build_model(get_reduced(slot_arch)),
-                               benches[first]))
+        slots.append(ModelSlot(m, build_model(get_reduced(_slot_arch(
+            arch, m))), benches[first]))
     return ModelPool(slots, memory_budget_mb=memory_budget_mb)
+
+
+def _slot_arch(arch: str, modality: str) -> str:
+    if modality == "cv":
+        return arch
+    if modality not in MODALITY_ARCH:
+        raise ValueError(
+            f"no architecture mapped for modality {modality!r}; extend "
+            f"benchmarks.workloads.MODALITY_ARCH (known: "
+            f"{['cv'] + sorted(MODALITY_ARCH)})")
+    return MODALITY_ARCH[modality]
+
+
+def workload_config(arch: str, workload, method: str, *, seed: int = 0,
+                    batch_size: int = 8, pretrain_epochs: int = 1,
+                    inference_batch: int = 8, preemptible: bool = False,
+                    memory_budget_mb: float = 0.0,
+                    trigger_policy: str = "default",
+                    workload_scale: Optional[Dict] = None) -> RuntimeConfig:
+    """The declarative session config of one sweep cell. `workload` is a
+    preset name or an already-scaled `WorkloadSpec`; paper methods get
+    their policy stacks per slot (baselines keep the default stack and
+    inject controllers at session build)."""
+    if isinstance(workload, WorkloadSpec):
+        spec = workload
+    else:
+        knobs = {k: v for k, v in (workload_scale or {}).items()
+                 if k != "batch_size"}
+        spec = presets(seed=seed, **knobs)[workload]
+    policies = method_policies(method, trigger_policy) \
+        if method in PAPER_METHODS else None
+    slots = {}
+    for m in spec.modalities:
+        slots[m] = SlotConfig(arch=_slot_arch(arch, m),
+                              **({"policies": policies} if policies else {}))
+    scale = dict(workload_scale or {})
+    scale["batch_size"] = batch_size
+    return RuntimeConfig(
+        slots=slots, workload=spec.name, workload_scale=scale,
+        seed=seed, pretrain_epochs=pretrain_epochs,
+        inference_batch=inference_batch, preemptible=preemptible,
+        memory_budget_mb=memory_budget_mb)
 
 
 def run_workload(arch: str, spec: WorkloadSpec, method: str, *,
@@ -106,41 +144,55 @@ def run_workload(arch: str, spec: WorkloadSpec, method: str, *,
                  pretrain_epochs: int = 1,
                  inference_batch: int = 8,
                  preemptible: bool = False,
-                 memory_budget_mb: float = 0.0) -> Dict:
+                 memory_budget_mb: float = 0.0,
+                 trigger_policy: str = "default",
+                 workload_scale: Optional[Dict] = None) -> Dict:
     """One (workload, controller) cell: full runtime run, paper metrics +
     per-stream and per-model attribution (incl. p50/p95 serving latency).
-    `preemptible` turns on QoS round preemption (high-priority arrivals
-    split in-flight rounds of lower-priority streams). A spec naming more
-    than one modality (the faithful `mixed` preset) runs on a `ModelPool`
-    — one model slot per modality sharing the device under
-    `memory_budget_mb` (0 = unlimited, no swap charges)."""
-    benches = _stream_benchmarks(spec, seed, batch_size)
-    events = compile_workload(spec)
+    `preemptible` turns on QoS round preemption; `trigger_policy`
+    ("default" | "priority-weighted") picks the paper methods' trigger
+    (BENCH v4). A spec naming more than one modality (the faithful
+    `mixed` preset) runs on a `ModelPool` — one model slot per modality
+    sharing the device under `memory_budget_mb` (0 = unlimited)."""
+    cfg = workload_config(arch, spec, method, seed=seed,
+                          batch_size=batch_size,
+                          pretrain_epochs=pretrain_epochs,
+                          inference_batch=inference_batch,
+                          preemptible=preemptible,
+                          memory_budget_mb=memory_budget_mb,
+                          trigger_policy=trigger_policy,
+                          workload_scale=workload_scale)
     t0 = time.time()
-    pool = None
-    if len(spec.modalities) > 1:
-        pool = build_pool(arch, spec, benches,
-                          memory_budget_mb=memory_budget_mb)
-        rt = ContinualRuntime(
-            None, None, None, seed=seed,
-            pretrain_epochs=pretrain_epochs,
-            inference_batch=inference_batch,
-            stream_benchmarks=benches,
-            controller_factory=lambda slot: make_controller(
-                pool.slot(slot).model, method),
-            preemptible=preemptible, model_pool=pool)
+    if method in PAPER_METHODS:
+        # fully declarative: benchmarks, pool, controllers and the event
+        # timeline all materialize from the config (the spec object is
+        # injected because the sweep pre-scales it)
+        rt = edgeol_session(cfg, workload_spec=spec)
     else:
-        model = build_model(get_reduced(arch))
-        rt = ContinualRuntime(
-            model, benches[0], make_controller(model, method), seed=seed,
-            pretrain_epochs=pretrain_epochs,
-            inference_batch=inference_batch,
-            stream_benchmarks={i: b for i, b in benches.items() if i},
-            controller_factory=lambda st: make_controller(model, method),
-            preemptible=preemptible)
-    res = rt.run(events=events)
+        # monolithic SOTA baselines: inject live controller objects
+        # through the factory seam (exercises the legacy adapter)
+        benches = _stream_benchmarks(spec, seed, batch_size)
+        if len(spec.modalities) > 1:
+            pool = build_pool(arch, spec, benches,
+                              memory_budget_mb=memory_budget_mb)
+            rt = edgeol_session(
+                cfg, workload_spec=spec, stream_benchmarks=benches,
+                model_pool=pool,
+                controller_factory=lambda slot: make_controller(
+                    pool.slot(slot).model, method, trigger_policy))
+        else:
+            model = build_model(get_reduced(arch))
+            rt = edgeol_session(
+                cfg, workload_spec=spec, stream_benchmarks=benches,
+                model=model,
+                controller=make_controller(model, method, trigger_policy),
+                controller_factory=lambda st: make_controller(
+                    model, method, trigger_policy))
+    res = rt.run()
+    events = rt.session_events or []
     return {
         "workload": spec.name, "method": method,
+        "trigger_policy": trigger_policy,
         "streams": len(spec.streams), "events": len(events),
         "models": len(spec.modalities),
         "acc": res.avg_inference_acc, "time_s": res.total_time_s,
@@ -153,7 +205,7 @@ def run_workload(arch: str, spec: WorkloadSpec, method: str, *,
         "per_model": dict(res.per_model),
         # multi-model cells record the pool manifest (slot footprints as
         # measured at run start + the budget the cell ran under)
-        **({"pool": pool.describe()} if pool is not None else {}),
+        **({"pool": rt.pool.describe()} if rt.pool is not None else {}),
     }
 
 
@@ -170,33 +222,48 @@ def sweep(*, quick: bool = True, arch: str = "mobilenetv2", seed: int = 0,
     specs = presets(seed=seed, **scale)
     names = list(workload_names) if workload_names else list(specs)
     cells: List[Dict] = []
+
+    def one(spec, method, preemptible, trigger_policy, base):
+        cell = run_workload(arch, spec, method, seed=seed,
+                            preemptible=preemptible,
+                            trigger_policy=trigger_policy,
+                            workload_scale=scale)
+        if base is None:
+            base = cell
+        cell["time_norm"] = cell["time_s"] / max(base["time_s"], 1e-9)
+        cell["energy_norm"] = (cell["energy_j"]
+                               / max(base["energy_j"], 1e-9))
+        cells.append(cell)
+        tag = ("/qos" if preemptible else "") + \
+            ("/pw" if trigger_policy == "priority-weighted" else "")
+        print(f"workloads,{spec.name}/{method}{tag},"
+              f"acc={cell['acc']:.4f} "
+              f"time={cell['time_s']:.1f}s "
+              f"energy={cell['energy_j']:.1f}J "
+              f"rounds={cell['rounds']} "
+              f"preempt={cell['preemptions']} "
+              f"models={cell['models']} swaps={cell['swaps']} "
+              f"wall={cell['wall_s']:.0f}s",
+              flush=True)
+        return base
+
     for name in names:
         spec = specs[name]
         # prioritized presets (qos) sweep both QoS modes so the artifact
         # records the preemption latency win next to its baseline
-        modes = ((False, True) if any(s.priority for s in spec.streams)
-                 else (False,))
+        prioritized = any(s.priority for s in spec.streams)
+        modes = (False, True) if prioritized else (False,)
         base = None
         for method in methods:
             for preemptible in modes:
-                cell = run_workload(arch, spec, method, seed=seed,
-                                    preemptible=preemptible)
-                if base is None:
-                    base = cell
-                cell["time_norm"] = cell["time_s"] / max(base["time_s"], 1e-9)
-                cell["energy_norm"] = (cell["energy_j"]
-                                       / max(base["energy_j"], 1e-9))
-                cells.append(cell)
-                tag = "/qos" if preemptible else ""
-                print(f"workloads,{name}/{method}{tag},"
-                      f"acc={cell['acc']:.4f} "
-                      f"time={cell['time_s']:.1f}s "
-                      f"energy={cell['energy_j']:.1f}J "
-                      f"rounds={cell['rounds']} "
-                      f"preempt={cell['preemptions']} "
-                      f"models={cell['models']} swaps={cell['swaps']} "
-                      f"wall={cell['wall_s']:.0f}s",
-                      flush=True)
+                base = one(spec, method, preemptible, "default", base)
+        # v4: prioritized presets add the PriorityWeightedTrigger cell —
+        # etuner with the accumulation target scaled by stream priority —
+        # in both QoS modes, gated by bench_diff like every other cell
+        if prioritized and "etuner" in methods:
+            for preemptible in modes:
+                base = one(spec, "etuner", preemptible,
+                           "priority-weighted", base)
     import jax
     return {
         "schema_version": SCHEMA_VERSION, "suite": "workloads",
@@ -235,6 +302,10 @@ def validate_bench(doc: Dict, *, min_workloads: int = 3,
             if not isinstance(v, (int, float)) or v != v or v < 0:
                 errors.append(f"cell {i}: field {f!r} missing or not a "
                               f"non-negative finite number (got {v!r})")
+        for f in CELL_STR_FIELDS:
+            if not isinstance(cell.get(f), str) or not cell.get(f):
+                errors.append(f"cell {i}: field {f!r} missing or not a "
+                              f"non-empty string (got {cell.get(f)!r})")
         per = cell.get("per_stream")
         if not isinstance(per, dict):
             errors.append(f"cell {i}: missing per_stream attribution")
@@ -260,7 +331,6 @@ def validate_bench(doc: Dict, *, min_workloads: int = 3,
                             f"or not a non-negative finite number "
                             f"(got {v!r})")
         if "workload" not in cell or "method" not in cell:
-            errors.append(f"cell {i}: missing workload/method labels")
             continue
         seen.setdefault(cell["workload"], set()).add(cell["method"])
     if len(seen) < min_workloads:
@@ -271,6 +341,12 @@ def validate_bench(doc: Dict, *, min_workloads: int = 3,
         if missing:
             errors.append(f"workload {wl!r}: missing controllers "
                           f"{sorted(missing)}")
+    # v4: a prioritized preset must carry its priority-weighted cell(s)
+    pw = [c for c in cells
+          if c.get("trigger_policy") == "priority-weighted"]
+    if any(wl == "qos" for wl in seen) and not pw:
+        errors.append("qos preset present but no priority-weighted "
+                      "trigger cell (v4)")
     return errors
 
 

@@ -1,7 +1,9 @@
 """End-to-end continual-learning driver (paper Table II / Figs. 8-9 style):
 compare Immed / LazyTune / SimFreeze / ETuner on a chosen model and
 benchmark, with per-method time/energy/accuracy and the controller's
-decision log.
+decision log. Each method is a declarative policy stack
+(`benchmarks.common.method_policies`) run through the `RuntimeConfig`
+session API (DESIGN.md §11).
 
     PYTHONPATH=src python examples/continual_cv.py --arch mobilenetv2 \
         --bench nc --scenarios 4 --batches 8 --inferences 30

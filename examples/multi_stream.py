@@ -1,20 +1,28 @@
 """Multi-stream workload driver: run one workload preset (multi-stream /
-bursty MMPP / diurnal+duty-cycle / mixed — see repro.workloads.presets)
-against a chosen controller and print the global, per-stream and
-per-model outcome (accuracy, modeled time/energy, rounds — the CostLedger
-attributes every charge both to the arrival stream whose batches the
-round trained and to the model slot that executed it).
+bursty MMPP / diurnal+duty-cycle / mixed / qos — see
+repro.workloads.presets) against a chosen controller and print the
+global, per-stream and per-model outcome (accuracy, modeled time/energy,
+rounds — the CostLedger attributes every charge both to the arrival
+stream whose batches the round trained and to the model slot that
+executed it).
 
-The `mixed` preset is a true mixed-modality run: its NLP stream binds to
-a real BERT/20news model slot in a ModelPool, sharing the device with
-the CV slot. `--memory-budget` caps device memory (MB): a budget smaller
-than the resident set forces cold-slot swap charges (t_swap/e_swap),
-visible in the per-model `swaps` column.
+Sessions are built through the declarative `RuntimeConfig` API
+(`benchmarks.workloads.workload_config` -> `edgeol_session`; DESIGN.md
+§11). The `mixed` preset is a true mixed-modality run: its NLP stream
+binds to a real BERT/20news model slot in a ModelPool, sharing the
+device with the CV slot; `--memory-budget` caps device memory (MB) so a
+budget smaller than the resident set forces cold-slot swap charges. The
+`qos` preset pairs a latency-critical stream with a bulk stream:
+`--preemptible` lets its arrivals split in-flight rounds, and
+`--trigger-policy priority-weighted` scales LazyTune's accumulation
+target by stream priority (BENCH v4).
 
-    PYTHONPATH=src python examples/multi_stream.py --workload two-stream \
+    PYTHONPATH=src python examples/multi_stream.py --preset two-stream \
         --method etuner --batches 6 --inferences 16 --scenarios 3
-    PYTHONPATH=src python examples/multi_stream.py --workload mixed \
+    PYTHONPATH=src python examples/multi_stream.py --preset mixed \
         --memory-budget 2.5
+    PYTHONPATH=src python examples/multi_stream.py --preset qos \
+        --preemptible --trigger-policy priority-weighted
 """
 import argparse
 import os
@@ -28,10 +36,17 @@ from repro.workloads import presets
 
 def main():
     names = sorted(presets())
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--workload", default="two-stream", choices=names)
+    ap = argparse.ArgumentParser(
+        description="Run one workload preset through the declarative "
+                    "EdgeOL session API and report per-stream/per-model "
+                    "attribution.")
+    ap.add_argument("--preset", "--workload", dest="preset",
+                    default="two-stream", choices=names,
+                    help="workload preset (--workload is a legacy alias)")
     ap.add_argument("--method", default="etuner",
-                    choices=list(METHODS) + ["egeria", "slimfit", "ekya"])
+                    choices=list(METHODS) + ["egeria", "slimfit", "ekya"],
+                    help="paper methods run as declarative policy stacks; "
+                         "the SOTA baselines inject monolithic controllers")
     ap.add_argument("--arch", default="mobilenetv2",
                     choices=["mobilenetv2", "resnet50", "deit-tiny"],
                     help="model for 'cv' streams (an 'nlp' stream always "
@@ -45,7 +60,12 @@ def main():
     ap.add_argument("--preemptible", action="store_true",
                     help="QoS: let higher-priority inference arrivals "
                          "split in-flight fine-tuning rounds (try with "
-                         "--workload qos)")
+                         "--preset qos)")
+    ap.add_argument("--trigger-policy", default="default",
+                    choices=["default", "priority-weighted"],
+                    help="priority-weighted scales LazyTune's accumulation "
+                         "target by StreamSpec.priority (paper methods "
+                         "with LazyTune only; try with --preset qos)")
     ap.add_argument("--memory-budget", type=float, default=0.0,
                     help="ModelPool device memory budget in MB (0 = "
                          "unlimited); only multi-modality workloads "
@@ -55,14 +75,20 @@ def main():
     spec = presets(batches_per_scenario=args.batches,
                    inferences=args.inferences,
                    num_scenarios=args.scenarios,
-                   seed=args.seed)[args.workload]
+                   seed=args.seed)[args.preset]
     print(f"workload {spec.name}: {len(spec.streams)} stream(s), "
           f"{len(spec.modalities)} model slot(s) {spec.modalities}, "
           f"{spec.num_scenarios} scenarios, drift={spec.drift}, "
-          f"preemptible={args.preemptible}")
+          f"preemptible={args.preemptible}, "
+          f"trigger={args.trigger_policy}")
     cell = run_workload(args.arch, spec, args.method, seed=args.seed,
                         preemptible=args.preemptible,
-                        memory_budget_mb=args.memory_budget)
+                        memory_budget_mb=args.memory_budget,
+                        trigger_policy=args.trigger_policy,
+                        workload_scale=dict(
+                            batches_per_scenario=args.batches,
+                            inferences=args.inferences,
+                            num_scenarios=args.scenarios))
     print(f"{args.method:10s} acc={cell['acc']*100:6.2f}% "
           f"time={cell['time_s']:7.1f}s energy={cell['energy_j']:7.1f}J "
           f"rounds={cell['rounds']} events={cell['events']} "

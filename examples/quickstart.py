@@ -1,32 +1,42 @@
 """Quickstart: ETuner vs immediate fine-tuning on a tiny continual-learning
-stream (CPU, ~1 minute).
+stream (CPU, ~1 minute), built through the declarative session API
+(DESIGN.md §11): a `RuntimeConfig` names the model slot, its benchmark
+and its policy stack (trigger / freeze / drift / publish), and
+`edgeol_session` materializes the runtime.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.configs import get_reduced
-from repro.core import (ETunerConfig, ETunerController, LazyTuneConfig,
-                        SimFreezeConfig)
-from repro.data import streams
-from repro.models import build_model
-from repro.runtime.continual import ContinualRuntime
+from repro.core.policies import PolicySpec, PolicyStackSpec
+from repro.runtime import RuntimeConfig, SlotConfig, edgeol_session
+
+BENCH = dict(num_classes=10, num_scenarios=4, batches=8, batch_size=16)
+
+STACKS = {
+    # immediate fine-tuning: every batch triggers, nothing freezes
+    "Immediate": PolicyStackSpec(trigger=PolicySpec("immediate"),
+                                 freeze=PolicySpec("none"),
+                                 drift=PolicySpec("none")),
+    # ETuner = LazyTune trigger + SimFreeze plan (paper Algorithm 1)
+    "ETuner": PolicyStackSpec(
+        trigger=PolicySpec("lazytune", {"max_batches_needed": 8.0}),
+        freeze=PolicySpec("simfreeze", {"freeze_interval": 6}),
+        drift=PolicySpec("none")),
+}
 
 
 def main():
-    model = build_model(get_reduced("mobilenetv2"))
-    bench = streams.nc_benchmark(num_classes=10, num_scenarios=4, batches=8,
-                                 batch_size=16)
-    for name, (lazy, freeze) in [("Immediate", (False, False)),
-                                 ("ETuner", (True, True))]:
-        ctrl = ETunerController(model, ETunerConfig(
-            lazytune=lazy, simfreeze=freeze, detect_scenario_changes=False,
-            lazytune_cfg=LazyTuneConfig(max_batches_needed=8),
-            simfreeze_cfg=SimFreezeConfig(freeze_interval=6)))
-        rt = ContinualRuntime(model, bench, ctrl, pretrain_epochs=2)
+    for name, stack in STACKS.items():
+        cfg = RuntimeConfig(
+            slots={"default": SlotConfig(arch="mobilenetv2", benchmark="nc",
+                                         benchmark_kw=BENCH,
+                                         policies=stack)},
+            pretrain_epochs=2)
+        rt = edgeol_session(cfg)
         res = rt.run(inferences_total=24)
         print(f"{name:10s} {res.summary()}")
         bd = {k: round(v, 2) for k, v in res.breakdown.items()}
         print(f"           breakdown: {bd}")
-        print(f"           controller: {ctrl.stats()}")
+        print(f"           controller: {rt.controller.stats()}")
 
 
 if __name__ == "__main__":

@@ -32,10 +32,10 @@ class _Base:
         return self._plan
 
     def should_trigger(self, batches_available: int,
-                       staleness: float = 0.0) -> bool:
-        # `staleness` (seconds since this stream's last round — see
-        # repro.core.ControllerProtocol) is accepted protocol-wide; the
-        # paper baselines don't weigh it.
+                       staleness: float = 0.0,
+                       priority: int = 0) -> bool:
+        # `staleness` / `priority` (see repro.core.ControllerProtocol) are
+        # accepted protocol-wide; the paper baselines don't weigh them.
         if self.with_lazytune:
             return self.lazytune.should_trigger(batches_available)
         return batches_available >= 1
@@ -70,7 +70,8 @@ class StaticController(_Base):
         self.interval = interval
 
     def should_trigger(self, batches_available: int,
-                       staleness: float = 0.0) -> bool:
+                       staleness: float = 0.0,
+                       priority: int = 0) -> bool:
         return batches_available >= self.interval
 
 
@@ -304,7 +305,8 @@ class EkyaController(_Base):
         self.profile_rounds = 0
 
     def should_trigger(self, batches_available: int,
-                       staleness: float = 0.0) -> bool:
+                       staleness: float = 0.0,
+                       priority: int = 0) -> bool:
         if self.with_lazytune:
             return self.lazytune.should_trigger(batches_available)
         return batches_available >= self.window_batches

@@ -6,7 +6,10 @@
 - simfreeze: intra-tuning CKA-guided freeze/unfreeze (Alg. 1 l.4-9, 22-26)
 - ood: energy-score scenario-change detection
 - freeze_plan: plan -> stop_gradient segments / grad masks / allreduce skips
-- controller: the combined event-driven ETuner policy
+- policies: the four policy protocols (trigger/freeze/drift/publish),
+  PolicyStack, declarative PolicySpec/PolicyStackSpec + legacy adapter
+- controller: ETunerController — the combined paper policy as a thin
+  PolicyStack composition
 - semi: SimSiam objective for unlabeled data (§IV-C)
 """
 from repro.core.cka import cka, layerwise_cka
@@ -17,6 +20,8 @@ from repro.core.freeze_plan import (FreezePlan, LayerFreezePlan, all_active,
                                     lm_segments)
 from repro.core.lazytune import LazyTune, LazyTuneConfig
 from repro.core.ood import EnergyOODConfig, EnergyOODDetector
+from repro.core.policies import (PolicySpec, PolicyStack, PolicyStackSpec,
+                                 adapt_controller, etuner_stack_spec)
 from repro.core.simfreeze import SimFreeze, SimFreezeConfig
 
 __all__ = [
@@ -25,4 +30,6 @@ __all__ = [
     "AccuracyCurve", "fit_accuracy_curve", "FreezePlan", "LayerFreezePlan",
     "all_active", "lm_segments", "LazyTune", "LazyTuneConfig",
     "EnergyOODConfig", "EnergyOODDetector", "SimFreeze", "SimFreezeConfig",
+    "PolicyStack", "PolicySpec", "PolicyStackSpec", "etuner_stack_spec",
+    "adapt_controller",
 ]

@@ -1,6 +1,9 @@
-"""ETunerController — composes LazyTune (inter-tuning), SimFreeze
-(intra-tuning) and the energy-score scenario detector into one event-driven
-policy object consumed by runtime/continual.py (Algorithm 1 of the paper).
+"""ETunerController — the paper's combined policy (Algorithm 1), now a
+thin `PolicyStack` composition (repro.core.policies, DESIGN.md §11):
+LazyTune (inter-tuning) is a `TriggerPolicy`, SimFreeze (intra-tuning) a
+`FreezePolicy`, and the energy-score scenario detector a `DriftPolicy`.
+The composition's behaviour is pinned bit-exact to the pre-stack
+monolith by the golden regression suite.
 
 Ablation switches make the controller cover all four paper configurations:
   Immed.    = ETunerController(lazytune=False, simfreeze=False)
@@ -13,12 +16,14 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Optional, Protocol, runtime_checkable
 
-import numpy as np
-
-from repro.core.freeze_plan import LayerFreezePlan, all_active
-from repro.core.lazytune import LazyTune, LazyTuneConfig
-from repro.core.ood import EnergyOODConfig, EnergyOODDetector
-from repro.core.simfreeze import SimFreeze, SimFreezeConfig
+from repro.core.lazytune import LazyTuneConfig
+from repro.core.ood import EnergyOODConfig
+from repro.core.policies.drift import EnergyDriftPolicy, NoDriftPolicy
+from repro.core.policies.freeze import NoFreezePolicy, SimFreezePolicy
+from repro.core.policies.stack import PolicyStack
+from repro.core.policies.trigger import (ImmediateTrigger, LazyTuneTrigger,
+                                         StalenessGuard)
+from repro.core.simfreeze import SimFreezeConfig
 
 
 @runtime_checkable
@@ -31,13 +36,16 @@ class ControllerProtocol(Protocol):
 
     - `plan` (property): the current freeze plan — a hashable static jit
       argument; a changed plan implies a recompile charge.
-    - `should_trigger(batches_available, staleness=0.0)`: called on every
-      buffered data batch; return True to launch a fine-tuning round now
-      (the runtime additionally requires the device to be idle).
-      `staleness` is the wall-clock seconds since *this stream's* last
-      round completed (run start counts as fresh) — a QoS-aware policy
-      can use it to keep low-priority streams from starving while a
-      latency-critical stream's arrivals keep winning the device.
+    - `should_trigger(batches_available, staleness=0.0, priority=0)`:
+      called on every buffered data batch; return True to launch a
+      fine-tuning round now (the runtime additionally requires the
+      device to be idle). `staleness` is the wall-clock seconds since
+      *this stream's* last round completed (run start counts as fresh);
+      `priority` is the stream's QoS priority (`StreamSpec.priority`) —
+      a priority-aware policy (e.g. `PriorityWeightedTrigger`) can weigh
+      both against LazyTune's accumulation target. Controllers written
+      against the older two- or one-argument contracts keep working: the
+      runtime adapts them via `repro.core.policies.adapt_controller`.
     - `round_finished(iters, val_acc, params)`: after each round, with the
       number of iterations run, validation accuracy, and the new params.
     - `inference_served(logits)`: after each served request, with that
@@ -49,13 +57,17 @@ class ControllerProtocol(Protocol):
       once per scenario to controllers that track reference-model
       similarity; gate with a `needs_reference` attribute.
     - `stats()` (optional): a dict folded into `RunResult.controller_stats`.
+    - `publish_policy` (optional): a `repro.core.policies.PublishPolicy`
+      deciding when a round's params reach serving (default: the
+      bug-compat immediate publish, DESIGN.md §5).
     """
 
     @property
     def plan(self) -> Any: ...
 
     def should_trigger(self, batches_available: int,
-                       staleness: float = 0.0) -> bool: ...
+                       staleness: float = 0.0,
+                       priority: int = 0) -> bool: ...
 
     def round_finished(self, iters: int, val_acc: float, params) -> None: ...
 
@@ -78,89 +90,24 @@ class ETunerConfig:
     max_staleness: Optional[float] = None
 
 
-class ETunerController:
-    def __init__(self, model, config: ETunerConfig = ETunerConfig()):
+class ETunerController(PolicyStack):
+    def __init__(self, model, config: Optional[ETunerConfig] = None):
+        # default must be constructed per instance: a shared module-level
+        # default ETunerConfig() is mutable (e.g. cfg.max_staleness), so
+        # one controller's tweak would leak into every other
+        # default-constructed controller (regression-tested)
+        config = ETunerConfig() if config is None else config
         self.cfg = config
         self.model = model
-        self.lazytune = LazyTune(config.lazytune_cfg)
-        scan_mode = getattr(model.cfg, "is_lm", False) and model.cfg.scan_layers
-        self.simfreeze = SimFreeze(model.num_freeze_units, model.features,
-                                   config.simfreeze_cfg, scan_mode=scan_mode)
-        self.detector = EnergyOODDetector(config.ood_cfg)
-        self._plan = self._empty_plan()
-        self.plan_changes = 0
-
-    def _empty_plan(self):
-        if self.simfreeze.scan_mode:
-            return all_active(self.model.num_freeze_units)
-        return LayerFreezePlan(layers=(False,) * self.model.num_freeze_units)
-
-    # ---- plan (a hashable static jit arg; a change implies a recompile) ----
-    @property
-    def plan(self):
-        return self._plan
-
-    def _refresh_plan(self) -> None:
-        new = self.simfreeze.plan() if self.cfg.simfreeze else self._empty_plan()
-        if new != self._plan:
-            self.plan_changes += 1
-        self._plan = new
-
-    # ---- events -------------------------------------------------------------
-    def start_scenario(self, reference_params, probe_batch) -> None:
-        if self.cfg.simfreeze:
-            self.simfreeze.start_scenario(reference_params, probe_batch)
-
-    def should_trigger(self, batches_available: int,
-                       staleness: float = 0.0) -> bool:
-        if self.cfg.max_staleness is not None and batches_available \
-                and staleness >= self.cfg.max_staleness:
-            return True  # starvation guard (QoS; DESIGN.md §8)
-        if not self.cfg.lazytune:
-            return batches_available >= 1  # immediate fine-tuning
-        return self.lazytune.should_trigger(batches_available)
-
-    def round_finished(self, iters: int, val_acc: float, params) -> None:
-        if self.cfg.lazytune:
-            self.lazytune.round_finished(iters, val_acc)
-        if self.cfg.simfreeze and self.simfreeze.probe_batch is not None:
-            if self.simfreeze.maybe_freeze(params, iters):
-                self._refresh_plan()
-
-    def inference_served(self, logits: np.ndarray) -> bool:
-        """Returns True when a scenario change was detected."""
-        if self.cfg.lazytune:
-            self.lazytune.inference_arrived()
-        if self.cfg.detect_scenario_changes:
-            return self.detector.observe(logits)
-        return False
-
-    def probe_served(self, logits: np.ndarray) -> bool:
-        """Dedicated drift-confirmation pass (detector-driven probes): the
-        runtime pushes a probe Event when `inference_served` flags a
-        change, runs one forward pass over the stream's validation split,
-        and only latches the change if this returns True. Side-effect-free
-        — LazyTune's inference-arrival decay counts real requests only."""
-        if not self.cfg.detect_scenario_changes:
-            return True
-        return self.detector.confirm(logits)
-
-    def scenario_changed(self, params, new_probe_batch) -> None:
-        """External or detected scenario boundary (Alg. 1 l.19-26)."""
-        if self.cfg.lazytune:
-            self.lazytune.scenario_changed()
-        if self.cfg.simfreeze and self.simfreeze.reference_params is not None:
-            if self.simfreeze.scenario_changed(params, new_probe_batch):
-                self._refresh_plan()
-
-    # ---- reporting ------------------------------------------------------------
-    def stats(self) -> dict:
-        return {
-            "rounds_triggered": self.lazytune.state.rounds_triggered,
-            "batches_needed": self.lazytune.state.batches_needed,
-            "frozen_fraction": self.simfreeze.frozen_fraction(),
-            "freezes": self.simfreeze.state.freezes,
-            "unfreezes": self.simfreeze.state.unfreezes,
-            "plan_changes": self.plan_changes,
-            "ood_detections": self.detector.detections,
-        }
+        if config.lazytune:
+            trigger = LazyTuneTrigger(config.lazytune_cfg)
+        else:
+            trigger = ImmediateTrigger(
+                config.lazytune_cfg.initial_batches_needed)
+        if config.max_staleness is not None:
+            trigger = StalenessGuard(trigger, config.max_staleness)
+        freeze = SimFreezePolicy(model, config.simfreeze_cfg) \
+            if config.simfreeze else NoFreezePolicy(model)
+        drift = EnergyDriftPolicy(config.ood_cfg) \
+            if config.detect_scenario_changes else NoDriftPolicy()
+        super().__init__(model, trigger=trigger, freeze=freeze, drift=drift)

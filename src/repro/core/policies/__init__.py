@@ -1,0 +1,43 @@
+"""Composable scheduling policies (DESIGN.md §11).
+
+EdgeOL's Algorithm 1 makes four orthogonal decisions — when to fine-tune
+(`TriggerPolicy`), what to train (`FreezePolicy`), when the scenario
+changed (`DriftPolicy`) and when to publish trained params
+(`PublishPolicy`). This package gives each its own protocol and
+implementations, a `PolicyStack` that composes one of each back into a
+full `repro.core.ControllerProtocol` controller, declarative
+`PolicySpec`/`PolicyStackSpec` descriptions (the per-slot policy entries
+of `repro.runtime.config.RuntimeConfig`), and the legacy adapter that
+keeps pre-stack monolithic controllers working.
+"""
+from repro.core.policies.base import (DriftPolicy, FreezePolicy,
+                                      PublishPolicy, TriggerPolicy)
+from repro.core.policies.drift import EnergyDriftPolicy, NoDriftPolicy
+from repro.core.policies.freeze import (NoFreezePolicy, SimFreezePolicy,
+                                        empty_plan)
+from repro.core.policies.publish import ImmediatePublish, RoundEndPublish
+from repro.core.policies.spec import (DRIFT_POLICIES, FREEZE_POLICIES,
+                                      PUBLISH_POLICIES, TRIGGER_POLICIES,
+                                      PolicySpec, PolicyStackSpec,
+                                      build_drift, build_freeze,
+                                      build_publish, build_trigger,
+                                      etuner_stack_spec)
+from repro.core.policies.stack import (LegacyControllerAdapter, PolicyStack,
+                                       adapt_controller)
+from repro.core.policies.trigger import (ImmediateTrigger, LazyTuneTrigger,
+                                         PriorityWeightedTrigger,
+                                         StalenessGuard)
+
+__all__ = [
+    "TriggerPolicy", "FreezePolicy", "DriftPolicy", "PublishPolicy",
+    "ImmediateTrigger", "LazyTuneTrigger", "StalenessGuard",
+    "PriorityWeightedTrigger",
+    "NoFreezePolicy", "SimFreezePolicy", "empty_plan",
+    "NoDriftPolicy", "EnergyDriftPolicy",
+    "ImmediatePublish", "RoundEndPublish",
+    "PolicyStack", "LegacyControllerAdapter", "adapt_controller",
+    "PolicySpec", "PolicyStackSpec", "etuner_stack_spec",
+    "build_trigger", "build_freeze", "build_drift", "build_publish",
+    "TRIGGER_POLICIES", "FREEZE_POLICIES", "DRIFT_POLICIES",
+    "PUBLISH_POLICIES",
+]

@@ -1,4 +1,7 @@
-from repro.runtime.continual import ContinualRuntime, RunResult
+from repro.runtime.config import (HookSpec, RuntimeConfig, SlotConfig,
+                                  build_hook, materialize_stream_benchmarks)
+from repro.runtime.continual import (ContinualRuntime, RunResult,
+                                     edgeol_session)
 from repro.runtime.costmodel import EdgeCostModel, PodCostModel
 from repro.runtime.executor import (FakeQuantHook, FineTuneExecutor,
                                     ReplayBuffer, RoundHook, RoundReport,
@@ -15,4 +18,5 @@ __all__ = ["EdgeCostModel", "PodCostModel", "ContinualRuntime", "RunResult",
            "FineTuneExecutor", "ReplayBuffer", "RoundHook", "RoundReport",
            "SimSiamHook", "FakeQuantHook", "CostLedger", "BREAKDOWN_KEYS",
            "STREAM_KEYS", "MODEL_KEYS", "DEFAULT_MODEL", "ModelPool",
-           "ModelSlot"]
+           "ModelSlot", "RuntimeConfig", "SlotConfig", "HookSpec",
+           "edgeol_session", "build_hook", "materialize_stream_benchmarks"]

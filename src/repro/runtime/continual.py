@@ -26,7 +26,17 @@ behaviour (the golden regression suite pins this).
 
 Controllers implement the `ControllerProtocol` documented in
 core/controller.py; the runtime drives them from scheduler callbacks and
-never reaches into their internals.
+never reaches into their internals. Monolithic controllers predating the
+policy decomposition are adapted transparently
+(`repro.core.policies.adapt_controller`), and a controller's optional
+`publish_policy` decides when a round's params reach serving.
+
+Construction (DESIGN.md §11): the front door is the declarative
+`RuntimeConfig` — `ContinualRuntime.from_config(cfg, ...)` or
+`edgeol_session(cfg)` — with live objects (a custom benchmark, a
+pre-built controller/pool, a cost model) injected alongside the config.
+The legacy ~18-kwarg constructor still works but is deprecated: it
+delegates to the same resolution path and emits a `DeprecationWarning`.
 
 Faithfulness notes:
 - the model is pre-trained on scenario 0 ("originally well-trained in the
@@ -45,19 +55,22 @@ Faithfulness notes:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import numpy as np
 
+from repro.core.policies import adapt_controller
 from repro.data.arrivals import Event, build_timeline
 from repro.data.streams import ContinualBenchmark
 from repro.optim import AdamWConfig
+from repro.runtime.config import (HookSpec, RuntimeConfig, SlotConfig,
+                                  resolve_session)
 from repro.runtime.costmodel import EdgeCostModel
-from repro.runtime.executor import (FakeQuantHook, FineTuneExecutor,
-                                    ReplayBuffer, RoundHook, SimSiamHook,
-                                    fake_quant, quantized_model)
+from repro.runtime.executor import (FineTuneExecutor, ReplayBuffer,
+                                    RoundHook, fake_quant, quantized_model)
 from repro.runtime.inference import InferenceServer
 from repro.runtime.ledger import (DEFAULT_MODEL, MODEL_KEYS, STREAM_KEYS,
                                   CostLedger)
@@ -121,7 +134,7 @@ class _SlotState:
 class ContinualRuntime:
     def __init__(self, model, benchmark: Optional[ContinualBenchmark],
                  controller,
-                 cost_model: EdgeCostModel = EdgeCostModel(),
+                 cost_model: Optional[EdgeCostModel] = None,
                  opt_cfg=None, seed: int = 0,
                  boundaries: str = "oracle",       # 'oracle' | 'detector'
                  replay_batches: int = 2,
@@ -137,18 +150,73 @@ class ContinualRuntime:
                  preemptible: bool = False,
                  preempt_resume_cost_s: float = 0.0,
                  model_pool: Optional[ModelPool] = None):
+        """Deprecated legacy kwarg constructor. It builds the equivalent
+        `RuntimeConfig` (quant_bits/unlabeled_fraction become per-slot
+        `HookSpec`s) and delegates to the same resolution path as
+        `from_config`, replaying bit-exact — the golden regression pins
+        this — while steering callers to the declarative API."""
+        warnings.warn(
+            "ContinualRuntime legacy kwarg construction is deprecated; "
+            "build a RuntimeConfig and use "
+            "ContinualRuntime.from_config(cfg, ...) or edgeol_session(cfg) "
+            "(DESIGN.md §11)", DeprecationWarning, stacklevel=2)
+        hook_specs = []
+        if quant_bits:
+            hook_specs.append(HookSpec("fake-quant", {"bits": quant_bits}))
+        if unlabeled_fraction:
+            hook_specs.append(HookSpec("simsiam",
+                                       {"fraction": unlabeled_fraction}))
+        cfg = RuntimeConfig(
+            slots={"default": SlotConfig(hooks=tuple(hook_specs))},
+            seed=seed, boundaries=boundaries,
+            replay_batches=replay_batches, pretrain_epochs=pretrain_epochs,
+            inference_batch=inference_batch, calibrate_cost=calibrate_cost,
+            inference_window=inference_window, preemptible=preemptible,
+            preempt_resume_cost_s=preempt_resume_cost_s)
+        self._init(**resolve_session(
+            cfg, model=model, benchmark=benchmark, controller=controller,
+            controller_factory=controller_factory,
+            stream_benchmarks=stream_benchmarks, model_pool=model_pool,
+            cost_model=cost_model, opt_cfg=opt_cfg,
+            extra_hooks=extra_hooks))
+
+    @classmethod
+    def from_config(cls, cfg: RuntimeConfig, *, model=None, benchmark=None,
+                    controller=None, controller_factory=None,
+                    stream_benchmarks=None, model_pool=None,
+                    cost_model=None, opt_cfg=None, extra_hooks=None,
+                    workload_spec=None) -> "ContinualRuntime":
+        """The declarative front door (DESIGN.md §11): materialize a
+        session from a validated `RuntimeConfig`. Anything the config
+        cannot express serializably — a custom benchmark object, a
+        pre-built controller/factory/pool, a cost model, live RoundHooks,
+        an already-scaled `WorkloadSpec` — is injected as a keyword and
+        wins over what the config would build. When the config names a
+        workload preset, the per-stream benchmarks and the compiled event
+        timeline are materialized too and `run()` replays them by
+        default."""
+        rt = cls.__new__(cls)
+        rt._init(**resolve_session(
+            cfg, model=model, benchmark=benchmark, controller=controller,
+            controller_factory=controller_factory,
+            stream_benchmarks=stream_benchmarks, model_pool=model_pool,
+            cost_model=cost_model, opt_cfg=opt_cfg,
+            extra_hooks=extra_hooks, workload_spec=workload_spec))
+        return rt
+
+    def _init(self, *, model, benchmark, controller, cost_model, opt_cfg,
+              seed, boundaries, replay_batches, pretrain_epochs,
+              inference_batch, calibrate_cost, inference_window, hooks,
+              slot_hooks, stream_benchmarks, controller_factory,
+              preemptible, preempt_resume_cost_s, model_pool,
+              session_events=None):
         # ModelPool construction path: the pool's slots carry the models,
-        # benchmarks and (optionally) controllers; the positional
-        # model/benchmark/controller may be None and default to the first
-        # slot's. Slot controllers missing from the pool are built through
-        # the `controller_factory` seam, called with the *slot name*.
+        # benchmarks and (optionally) controllers; model/benchmark/
+        # controller may be None and default to the first slot's. Slot
+        # controllers missing from the pool are built through the
+        # `controller_factory` seam, called with the *slot name*.
         self.pool = model_pool
         if model_pool is not None:
-            if quant_bits or unlabeled_fraction or extra_hooks:
-                raise ValueError(
-                    "RoundHooks (quant_bits / unlabeled_fraction / "
-                    "extra_hooks) wrap one model; they are not supported "
-                    "with model_pool yet")
             first = next(iter(model_pool.slots.values()))
             model = model if model is not None else first.model
             benchmark = benchmark if benchmark is not None else first.benchmark
@@ -163,15 +231,13 @@ class ContinualRuntime:
         # controllers instead, called with the slot name.
         self.stream_benchmarks = dict(stream_benchmarks or {})
         self.controller_factory = controller_factory
-        self.cost = cost_model
+        self.cost = cost_model if cost_model is not None else EdgeCostModel()
         self.opt_cfg = opt_cfg or AdamWConfig(lr=1e-3)
         self.seed = seed
         self.boundaries = boundaries
         self.replay_batches = replay_batches
         self.pretrain_epochs = pretrain_epochs
         self.inference_batch = inference_batch
-        self.quant_bits = quant_bits
-        self.unlabeled_fraction = unlabeled_fraction
         self.calibrate_cost = calibrate_cost
         self.inference_window = inference_window
         # QoS: when True, fine-tuning rounds run as preemptible
@@ -187,19 +253,27 @@ class ContinualRuntime:
         self.preempt_resume_cost_s = preempt_resume_cost_s
         # round hooks: model-wrapping ones bind first so every later
         # consumer (train steps, serving, SimSiam features) sees the
-        # wrapped model.
-        self.hooks: List[RoundHook] = []
-        if quant_bits:
-            self.hooks.append(FakeQuantHook(quant_bits))
-        if unlabeled_fraction:
-            self.hooks.append(SimSiamHook(unlabeled_fraction))
-        self.hooks.extend(extra_hooks or [])
+        # wrapped model. `hooks` wrap the single model; `slot_hooks` bind
+        # per pool slot (a quantized CV slot next to an fp32 NLP slot) and
+        # wrap that slot's model in _build_slots.
+        self.hooks: List[RoundHook] = list(hooks or [])
+        self.slot_hooks: Dict[str, List[RoundHook]] = {
+            k: list(v) for k, v in (slot_hooks or {}).items()}
         for h in self.hooks:
             self.model = h.bind(self.model)
+        # a config-built session may carry its workload's compiled event
+        # timeline; run() replays it when no explicit events are passed
+        self._session_events: Optional[List[Event]] = session_events
         # single-model step cache lives on the runtime (reused across
         # run() calls); pool slots build their own caches per run
         self.steps = None if model_pool is not None else \
             TrainStepCache(model=self.model, opt_cfg=self.opt_cfg)
+
+    @property
+    def session_events(self) -> Optional[List[Event]]:
+        """The workload timeline a config-built session will replay when
+        `run()` is called without explicit events (None otherwise)."""
+        return self._session_events
 
     # -------------------------------------------------------------------
     def _build_slots(self, ledger: CostLedger,
@@ -221,6 +295,14 @@ class ContinualRuntime:
                 self.steps, executor)
             return slots
         for i, slot in enumerate(self.pool.slots.values()):
+            # per-slot RoundHooks (RuntimeConfig SlotConfig.hooks): wrap
+            # this slot's model only — its train steps, serving lane and
+            # pretraining all see the wrapped model, other slots stay
+            # untouched (a quantized CV slot next to an fp32 NLP slot)
+            hooks = self.slot_hooks.get(slot.name, [])
+            model = slot.model
+            for h in hooks:
+                model = h.bind(model)
             ctrl = slot.controller
             if ctrl is None and self.controller_factory is not None:
                 ctrl = self.controller_factory(slot.name)
@@ -230,24 +312,43 @@ class ContinualRuntime:
                 raise ValueError(
                     f"slot {slot.name!r} has no controller: set "
                     f"ModelSlot.controller or pass controller_factory")
-            steps = TrainStepCache(model=slot.model, opt_cfg=self.opt_cfg)
+            steps = TrainStepCache(model=model, opt_cfg=self.opt_cfg)
             replay = ReplayBuffer(
                 slot.benchmark.scenarios[0].train_batches[:self.replay_batches])
             executor = FineTuneExecutor(
                 steps, slot.cost, ledger, replay,
                 rng=np.random.default_rng([self.seed, i]),
-                calibrate_cost=self.calibrate_cost,
+                hooks=hooks, calibrate_cost=self.calibrate_cost,
                 model_name=slot.name,
                 preempt_resume_cost_s=self.preempt_resume_cost_s)
-            slots[slot.name] = _SlotState(slot.name, slot.model,
+            slots[slot.name] = _SlotState(slot.name, model,
                                           slot.benchmark, ctrl, steps,
                                           executor)
         return slots
 
     # -------------------------------------------------------------------
     def run(self, events: Optional[List[Event]] = None,
-            inferences_total: int = 60, data_dist: str = "poisson",
-            inf_dist: str = "poisson") -> RunResult:
+            inferences_total: Optional[int] = None,
+            data_dist: Optional[str] = None,
+            inf_dist: Optional[str] = None) -> RunResult:
+        """Drive the full continual-learning session. The timeline comes
+        from, in precedence order: explicit `events`, the config-built
+        session's compiled workload (`session_events`), or a legacy
+        timeline generated from `inferences_total`/`data_dist`/`inf_dist`
+        (defaults 60/"poisson"/"poisson") — the generation knobs apply
+        only to that last case."""
+        timeline_kw = {k: v for k, v in (("inferences_total",
+                                          inferences_total),
+                                         ("data_dist", data_dist),
+                                         ("inf_dist", inf_dist))
+                       if v is not None}
+        if timeline_kw and (events is not None
+                            or self._session_events is not None):
+            warnings.warn(
+                f"run(): {sorted(timeline_kw)} only shape the generated "
+                f"legacy timeline and are ignored when events are "
+                f"supplied (explicit or from the session's workload "
+                f"config)", UserWarning, stacklevel=2)
         bench = self.bench
         rng = np.random.default_rng(self.seed)
         ledger = CostLedger()
@@ -273,12 +374,17 @@ class ContinualRuntime:
                                                    st.executor.opt_state))
             self.pool.warm()
 
+        if events is None and self._session_events is not None:
+            # config-built session: replay the workload's compiled timeline
+            events = list(self._session_events)
         if events is None:
             events = build_timeline(
                 num_scenarios=bench.num_scenarios - 1,
                 batches_per_scenario=len(bench.scenarios[1].train_batches),
-                inferences_total=inferences_total, seed=self.seed,
-                data_dist=data_dist, inf_dist=inf_dist)
+                inferences_total=timeline_kw.get("inferences_total", 60),
+                seed=self.seed,
+                data_dist=timeline_kw.get("data_dist", "poisson"),
+                inf_dist=timeline_kw.get("inf_dist", "poisson"))
             # shift scenario ids by 1 (scenario 0 = pretraining)
             events = [dataclasses.replace(e, scenario=e.scenario + 1)
                       for e in events]
@@ -313,6 +419,12 @@ class ContinualRuntime:
                 controllers[st] = primary_ctrl
             else:
                 controllers[st] = self.controller_factory(st)
+        # monolithic controllers predating the staleness/priority keywords
+        # keep working: wrap them so the drive loop can always pass the
+        # full signal set (same objects underneath — state is shared)
+        controllers = {st: adapt_controller(c)
+                       for st, c in controllers.items()}
+        primary_ctrl = adapt_controller(primary_ctrl)
 
         def ctrl_for(st: int):
             return controllers.get(st, primary_ctrl)
@@ -406,7 +518,17 @@ class ContinualRuntime:
             # stream's controller, charge SimFreeze's CKA probes
             stream = report.stream
             ctrl = ctrl_for(stream)
-            server.publish(slot.executor.params, report.end, slot=slot.name)
+            # the stream's publish policy decides when the new params
+            # reach serving (default: bug-compat immediate, DESIGN.md §5;
+            # round-end keeps pre-round params for mid-round arrivals)
+            pub = getattr(ctrl, "publish_policy", None)
+            if pub is None:
+                server.publish(slot.executor.params, report.end,
+                               slot=slot.name)
+            else:
+                server.publish(slot.executor.params,
+                               pub.visible_at(report.end), slot=slot.name,
+                               delayed=pub.delayed)
             # validation accuracy (labeled 5% split) -> LazyTune; the
             # split belongs to the scenario current at round *launch*
             val = bench_for(stream).scenarios[
@@ -482,7 +604,8 @@ class ContinualRuntime:
             slot.executor.enqueue(batch, stream=st)
             if ctrl.should_trigger(slot.executor.pending_for(st),
                                    staleness=ev.time
-                                   - last_round_end.get(st, 0.0)) and \
+                                   - last_round_end.get(st, 0.0),
+                                   priority=stream_priority.get(st, 0)) and \
                     scheduler.idle_at(ev.time):
                 finish_round(ev.time, st)
 
@@ -597,3 +720,15 @@ class ContinualRuntime:
             val_curve=val_curve, per_stream=per_stream,
             per_model=per_model, preemptions=ledger.preemptions,
             swaps=ledger.swaps, probes=probes_fired[0])
+
+
+def edgeol_session(cfg: RuntimeConfig, **inject) -> ContinualRuntime:
+    """Declarative session front door (DESIGN.md §11): build a ready
+    `ContinualRuntime` from a `RuntimeConfig`. Keyword injections are the
+    same as `ContinualRuntime.from_config` (live objects win over what
+    the config would build). When the config names a workload preset,
+    `session.run()` replays its compiled event timeline::
+
+        res = edgeol_session(RuntimeConfig(workload="mixed", ...)).run()
+    """
+    return ContinualRuntime.from_config(cfg, **inject)

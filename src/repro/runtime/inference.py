@@ -23,12 +23,13 @@ created in the constructor — its request path is byte-identical to the
 pre-pool server.
 
 Visibility caveat (kept bug-compatible with the pre-decomposition
-monolith; DESIGN.md §5): `publish` sets `visible_params` and
-`latest_params` to the *same* object, so until a publisher starts
-retaining the pre-round params, requests landing mid-round are served by
-the round's freshly trained params. The seam (`_resolve`, the per-group
-params-identity split) exists so a future async-tuning PR can publish
-genuinely delayed params without touching the request path.
+monolith; DESIGN.md §5): by default `publish` sets `visible_params` and
+`latest_params` to the *same* object, so requests landing mid-round are
+served by the round's freshly trained params. `publish(delayed=True)` —
+driven by a `RoundEndPublish` policy (repro.core.policies) — retains the
+pre-round params as `latest`, so mid-round arrivals genuinely resolve the
+outdated model; the request path (`_resolve`, the per-group
+params-identity split) is unchanged either way.
 
 `batch_window=0` (the default) reproduces the legacy per-request path
 exactly — bit-for-bit, including the shared RNG consumption order — which
@@ -130,15 +131,26 @@ class InferenceServer:
 
     # ---- params lifecycle ------------------------------------------------
     def publish(self, params, visible_at: float,
-                slot: str = DEFAULT_MODEL) -> None:
+                slot: str = DEFAULT_MODEL, *, delayed: bool = False) -> None:
         """A fine-tuning round finished training `params` for `slot`; they
         become visible once the round's device occupancy ends
         (`visible_at`). Queued requests arrived earlier and must be served
-        first, with the params they resolved to at arrival."""
+        first, with the params they resolved to at arrival.
+
+        ``delayed=False`` (default) keeps the bug-compat §5 seam: `latest`
+        and `visible` are the same object, so requests arriving *before*
+        `visible_at` still resolve the new params. ``delayed=True``
+        (`RoundEndPublish` and future async publish policies) retains the
+        previously visible params as `latest`, so mid-round arrivals
+        genuinely serve the pre-round model — the paper §III-A "outdated
+        model" effect."""
         self.flush()
         lane = self._lanes[slot]
+        if delayed and lane.visible_params is not None:
+            lane.latest_params = lane.visible_params
+        else:
+            lane.latest_params = params
         lane.visible_params = params
-        lane.latest_params = params
         lane.visible_at = visible_at
 
     def _resolve(self, t: float, slot: str = DEFAULT_MODEL):

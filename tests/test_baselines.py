@@ -9,7 +9,14 @@ from repro.baselines import (EgeriaController, EkyaController, RigLController,
 from repro.configs import get_reduced
 from repro.data import streams
 from repro.models import build_model
+from repro.runtime import RuntimeConfig
 from repro.runtime.continual import ContinualRuntime
+
+
+def _rt(model, bench, ctrl):
+    return ContinualRuntime.from_config(RuntimeConfig(pretrain_epochs=1),
+                                        model=model, benchmark=bench,
+                                        controller=ctrl)
 
 
 @pytest.fixture(scope="module")
@@ -23,10 +30,10 @@ def setup():
 def test_static_controller_interval(setup):
     model, bench = setup
     ctrl = StaticController(model, interval=4)
-    rt = ContinualRuntime(model, bench, ctrl, pretrain_epochs=1)
+    rt = _rt(model, bench, ctrl)
     res = rt.run(inferences_total=10)
     ctrl_immed = StaticController(model, interval=1)
-    rt2 = ContinualRuntime(model, bench, ctrl_immed, pretrain_epochs=1)
+    rt2 = _rt(model, bench, ctrl_immed)
     res2 = rt2.run(inferences_total=10)
     assert res.rounds < res2.rounds
     assert res.total_energy_j < res2.total_energy_j
@@ -35,7 +42,7 @@ def test_static_controller_interval(setup):
 def test_egeria_freezes_front_to_back(setup):
     model, bench = setup
     ctrl = EgeriaController(model, with_lazytune=False, interval=2)
-    rt = ContinualRuntime(model, bench, ctrl, pretrain_epochs=1)
+    rt = _rt(model, bench, ctrl)
     rt.run(inferences_total=8)
     flags = list(ctrl.plan.layers)
     # frozen set (if any) must be a prefix — Egeria's defining rigidity
@@ -49,7 +56,7 @@ def test_slimfit_freezes_by_update_magnitude(setup):
     model, bench = setup
     ctrl = SlimFitController(model, with_lazytune=False, interval=2,
                              threshold=0.5)  # generous: freezes something
-    rt = ContinualRuntime(model, bench, ctrl, pretrain_epochs=1)
+    rt = _rt(model, bench, ctrl)
     rt.run(inferences_total=8)
     assert sum(ctrl.plan.layers) >= 1
     assert sum(ctrl.plan.layers) <= int(0.9 * ctrl.n_units)  # budget capped
@@ -59,7 +66,7 @@ def test_rigl_masks_and_flops_scale(setup):
     model, bench = setup
     ctrl = RigLController(model, with_lazytune=False, sparsity=0.5)
     wrapped = ctrl.wrap_model()
-    rt = ContinualRuntime(wrapped, bench, ctrl, pretrain_epochs=1)
+    rt = _rt(wrapped, bench, ctrl)
     rt.run(inferences_total=8)
     assert ctrl.masks is not None
     dens = [float(np.mean(np.asarray(m))) for m in jax.tree.leaves(ctrl.masks)
@@ -71,6 +78,6 @@ def test_rigl_masks_and_flops_scale(setup):
 def test_ekya_profiles_and_schedules(setup):
     model, bench = setup
     ctrl = EkyaController(model, with_lazytune=False, window_batches=4)
-    rt = ContinualRuntime(model, bench, ctrl, pretrain_epochs=1)
+    rt = _rt(model, bench, ctrl)
     rt.run(inferences_total=8)
     assert ctrl.profile_rounds >= 1

@@ -1,0 +1,152 @@
+"""RuntimeConfig tests (DESIGN.md §11): dict/JSON round-trip identity
+across every workload preset, strict validation with actionable
+messages, and the declarative session front door (`edgeol_session`)."""
+import json
+
+import pytest
+
+from benchmarks.workloads import workload_config
+from repro.core.policies import PolicySpec, PolicyStackSpec
+from repro.runtime import (HookSpec, RuntimeConfig, SlotConfig, build_hook,
+                           edgeol_session)
+from repro.workloads import presets
+
+
+# ---------------------------------------------------------------------------
+# round-trip identity
+
+
+@pytest.mark.parametrize("name", sorted(presets()))
+def test_config_round_trips_across_presets(name):
+    """ISSUE satellite: `RuntimeConfig.from_dict(cfg.to_dict())` is the
+    identity for every workload preset's sweep config — through real
+    JSON, so the artifact a manifest records reconstructs the session."""
+    cfg = workload_config("mobilenetv2", name, "etuner",
+                          workload_scale=dict(batches_per_scenario=4,
+                                              inferences=10,
+                                              num_scenarios=2))
+    rebuilt = RuntimeConfig.from_dict(json.loads(json.dumps(cfg.to_dict())))
+    assert rebuilt == cfg
+
+
+def test_config_round_trips_with_hooks_and_qos():
+    cfg = RuntimeConfig(
+        slots={
+            "cv": SlotConfig(arch="mobilenetv2", benchmark="nc",
+                             benchmark_kw={"num_scenarios": 3},
+                             hooks=(HookSpec("fake-quant", {"bits": 8}),
+                                    HookSpec("simsiam", {"fraction": 0.5})),
+                             policies=PolicyStackSpec(
+                                 trigger=PolicySpec("priority-weighted",
+                                                    {"priority_weight": 1.0,
+                                                     "max_staleness": 40.0}),
+                                 publish=PolicySpec("round-end")),
+                             memory_mb=4.5),
+            "nlp": SlotConfig(arch="bert-base", benchmark="20news"),
+        },
+        workload="mixed", workload_scale={"batch_size": 4},
+        seed=3, boundaries="detector", replay_batches=1, pretrain_epochs=2,
+        inference_batch=4, calibrate_cost=False, inference_window=1.5,
+        preemptible=True, preempt_resume_cost_s=0.25, memory_budget_mb=6.0)
+    assert RuntimeConfig.from_dict(
+        json.loads(json.dumps(cfg.to_dict()))) == cfg
+
+
+# ---------------------------------------------------------------------------
+# validation: unknown keys / names raise with the alternatives listed
+
+
+def test_unknown_top_level_key_actionable():
+    with pytest.raises(ValueError, match=r"unknown key.*'bogus'.*valid"):
+        RuntimeConfig.from_dict({"bogus": 1})
+
+
+def test_unknown_slot_key_actionable():
+    with pytest.raises(ValueError, match=r"slot config: unknown key"):
+        RuntimeConfig.from_dict({"slots": {"default": {"archh": "x"}}})
+
+
+def test_bad_policy_name_actionable():
+    with pytest.raises(ValueError,
+                       match=r"known trigger policies.*lazytune"):
+        RuntimeConfig.from_dict(
+            {"slots": {"default": {"policies": {
+                "trigger": {"name": "lazy-tune"}}}}})
+    with pytest.raises(ValueError, match=r"known hooks"):
+        RuntimeConfig(slots={"default": SlotConfig(
+            hooks=(HookSpec("quantize", {"bits": 8}),))}).validate()
+    with pytest.raises(ValueError, match=r"bits"):
+        build_hook(HookSpec("fake-quant", {"bitz": 8}))
+
+
+def test_bad_scalars_raise():
+    with pytest.raises(ValueError, match="boundaries"):
+        RuntimeConfig(boundaries="psychic").validate()
+    with pytest.raises(ValueError, match="workload_scale"):
+        RuntimeConfig(workload="qos",
+                      workload_scale={"scenariosss": 2}).validate()
+    with pytest.raises(ValueError, match="without a workload"):
+        RuntimeConfig(workload_scale={"inferences": 4}).validate()
+    with pytest.raises(ValueError, match="inference_batch"):
+        RuntimeConfig(inference_batch=0).validate()
+
+
+def test_unknown_workload_preset_actionable():
+    with pytest.raises(ValueError, match=r"known presets.*single-poisson"):
+        edgeol_session(RuntimeConfig(workload="nope"))
+
+
+def test_workload_missing_slot_config_actionable():
+    with pytest.raises(ValueError, match=r"missing \['nlp'\]"):
+        edgeol_session(RuntimeConfig(
+            workload="mixed",
+            workload_scale=dict(batches_per_scenario=2, inferences=4,
+                                num_scenarios=2),
+            slots={"cv": SlotConfig()}))
+
+
+def test_multiple_slots_need_workload_or_pool():
+    with pytest.raises(ValueError, match="multi-modality workload"):
+        edgeol_session(RuntimeConfig(slots={"a": SlotConfig(),
+                                            "b": SlotConfig()}))
+
+
+def test_baseline_method_rejects_trigger_policy():
+    """The priority-weighted trigger is a paper-method policy stack; a
+    monolithic baseline must fail fast rather than run mislabeled."""
+    from benchmarks.workloads import run_workload
+
+    spec = presets(batches_per_scenario=2, inferences=4,
+                   num_scenarios=2)["qos"]
+    with pytest.raises(ValueError, match="trigger_policy"):
+        run_workload("mobilenetv2", spec, "egeria",
+                     trigger_policy="priority-weighted")
+
+
+def test_injected_pool_keeps_no_controller_error():
+    """Controllers are synthesized from slot policies only for a pool the
+    config itself built; an injected pool whose slot names happen to
+    match the default SlotConfig must still hit the explicit 'no
+    controller' error instead of silently running a full ETuner stack."""
+    from repro.runtime.costmodel import EdgeCostModel
+    from repro.runtime.modelpool import ModelPool, ModelSlot
+
+    pool = ModelPool([ModelSlot("default", model=None, benchmark=None,
+                                memory_mb=1.0, cost=EdgeCostModel())])
+    rt = edgeol_session(RuntimeConfig(), model_pool=pool)
+    with pytest.raises(ValueError, match="no controller"):
+        rt.run(events=[])
+
+
+def test_session_run_warns_on_ignored_timeline_args():
+    """run()'s legacy timeline-generation knobs do nothing when the
+    session replays a workload config — that conflict warns instead of
+    silently dropping the arguments."""
+    cfg = RuntimeConfig(
+        workload="single-poisson",
+        workload_scale=dict(batches_per_scenario=2, inferences=4,
+                            num_scenarios=2),
+        slots={"cv": SlotConfig()}, pretrain_epochs=1)
+    rt = edgeol_session(cfg)
+    with pytest.warns(UserWarning, match="ignored"):
+        rt.run(inferences_total=99)

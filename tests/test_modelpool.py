@@ -8,8 +8,10 @@ import numpy as np
 import pytest
 
 from repro.core import ETunerConfig, ETunerController
+from repro.runtime import HookSpec, RuntimeConfig, SlotConfig, edgeol_session
 from repro.runtime.continual import ContinualRuntime
 from repro.runtime.costmodel import EdgeCostModel
+from repro.runtime.executor import FakeQuantHook
 from repro.runtime.ledger import CostLedger
 from repro.runtime.modelpool import ModelPool, ModelSlot
 from repro.workloads import compile_workload, presets
@@ -146,8 +148,8 @@ def _mixed_run(memory_budget_mb=0.0):
     benches = _stream_benchmarks(spec, 0, 8)
     pool = build_pool("mobilenetv2", spec, benches,
                       memory_budget_mb=memory_budget_mb)
-    rt = ContinualRuntime(
-        None, None, None, seed=0, pretrain_epochs=1, inference_batch=8,
+    rt = ContinualRuntime.from_config(
+        RuntimeConfig(seed=0, pretrain_epochs=1, inference_batch=8),
         stream_benchmarks=benches,
         controller_factory=lambda slot: _immed(pool.slot(slot).model),
         model_pool=pool)
@@ -238,9 +240,64 @@ def test_cold_slot_inference_pays_swap_latency(mixed_runs):
 
 
 def test_pool_rejects_round_hooks():
+    """Global hooks (the legacy quant_bits kwarg, extra_hooks injection)
+    wrap *one* model and stay rejected with a pool; per-slot binding goes
+    through SlotConfig.hooks instead (test_quantized_slot_beside_fp32)."""
     pool = ModelPool([_slot("cv", 1.0)])
-    with pytest.raises(ValueError):
+    with pytest.warns(DeprecationWarning), pytest.raises(ValueError):
         ContinualRuntime(None, None, None, model_pool=pool, quant_bits=8)
+    with pytest.raises(ValueError, match="per slot"):
+        ContinualRuntime.from_config(RuntimeConfig(), model_pool=pool,
+                                     extra_hooks=[FakeQuantHook(8)])
+    # hooks configured for a slot the pool does not have fail fast too
+    with pytest.raises(ValueError, match="per slot"):
+        ContinualRuntime.from_config(
+            RuntimeConfig(slots={"audio": SlotConfig(
+                hooks=(HookSpec("fake-quant", {"bits": 8}),))}),
+            model_pool=pool)
+
+
+def test_quantized_slot_beside_fp32_slot():
+    """ISSUE satellite (RoundHooks under a pool): per-slot `hooks` in
+    RuntimeConfig bind fake-quant QAT to the CV slot of the `mixed`
+    preset while the NLP slot stays fp32 — instead of the pre-config
+    runtime's blanket ValueError. Both slots train and serve; only the
+    CV executor carries the hook, and the quantized CV slot's numbers
+    diverge from the fp32 run's while NLP's stay identical."""
+    from benchmarks.common import method_policies
+
+    def run(cv_hooks):
+        cfg = RuntimeConfig(
+            workload="mixed",
+            workload_scale=dict(batches_per_scenario=3, inferences=8,
+                                num_scenarios=2),
+            slots={"cv": SlotConfig(arch="mobilenetv2",
+                                    policies=method_policies("immed"),
+                                    hooks=cv_hooks),
+                   "nlp": SlotConfig(arch="bert-base",
+                                     policies=method_policies("immed"))},
+            pretrain_epochs=1, inference_batch=8, seed=0)
+        rt = edgeol_session(cfg)
+        return rt, rt.run()
+
+    rt_q, quant = run((HookSpec("fake-quant", {"bits": 8}),))
+    assert [type(h).__name__ for h in rt_q.slot_hooks["cv"]] \
+        == ["FakeQuantHook"]
+    assert "nlp" not in rt_q.slot_hooks
+    assert set(quant.per_model) == {"cv", "nlp"}
+    for slot in ("cv", "nlp"):
+        assert quant.per_model[slot]["rounds"] > 0
+        assert quant.per_model[slot]["inferences"] > 0
+    rt_f, fp32 = run(())
+    assert rt_f.slot_hooks == {}
+    # quantization perturbs the CV slot's training/serving, not NLP's
+    assert quant.per_model["nlp"]["inferences"] == \
+        fp32.per_model["nlp"]["inferences"]
+    np.testing.assert_allclose(quant.per_model["nlp"]["avg_inference_acc"],
+                               fp32.per_model["nlp"]["avg_inference_acc"],
+                               atol=1e-9)
+    assert quant.per_model["cv"]["inferences"] == \
+        fp32.per_model["cv"]["inferences"]
 
 
 def test_unknown_modality_fails_fast():
@@ -253,8 +310,8 @@ def test_unknown_modality_fails_fast():
     pool = build_pool("mobilenetv2", spec, benches)
     events = compile_workload(spec)
     events = [dataclasses.replace(e, modality="audio") for e in events]
-    rt = ContinualRuntime(
-        None, None, None, seed=0, pretrain_epochs=1,
+    rt = ContinualRuntime.from_config(
+        RuntimeConfig(seed=0, pretrain_epochs=1),
         stream_benchmarks=benches,
         controller_factory=lambda slot: _immed(pool.slot(slot).model),
         model_pool=pool)

@@ -1,0 +1,326 @@
+"""PolicyStack tests (DESIGN.md §11): the four policy axes compose into
+the controller protocol, the priority-weighted trigger uses QoS priority
+and staleness jointly, legacy monolithic controllers keep working through
+the adapter, publish policies drive the params-visibility seam, and the
+shared-mutable-default `ETunerConfig` bug stays fixed."""
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import ETunerConfig, ETunerController
+from repro.core.lazytune import LazyTuneConfig
+from repro.core.policies import (ImmediatePublish, ImmediateTrigger,
+                                 LazyTuneTrigger, LegacyControllerAdapter,
+                                 NoFreezePolicy, PolicySpec, PolicyStack,
+                                 PolicyStackSpec, PriorityWeightedTrigger,
+                                 RoundEndPublish, StalenessGuard,
+                                 adapt_controller)
+from repro.data.arrivals import Event
+from repro.models import build_model
+from repro.runtime import RuntimeConfig
+from repro.runtime.continual import ContinualRuntime
+from repro.runtime.inference import InferenceServer
+
+
+@pytest.fixture(scope="module")
+def model():
+    return build_model(get_reduced("mobilenetv2"))
+
+
+# ---------------------------------------------------------------------------
+# satellite: shared-mutable-default ETunerConfig
+
+
+def test_default_etuner_config_not_shared(model):
+    """Regression (ISSUE satellite): `ETunerController(model)` used to
+    default to one module-level ETunerConfig instance shared — and
+    mutable — across every controller built with defaults; each default
+    construction now gets a fresh config."""
+    a = ETunerController(model)
+    b = ETunerController(model)
+    assert a.cfg is not b.cfg
+    a.cfg.max_staleness = 5.0
+    assert b.cfg.max_staleness is None
+    assert ETunerController(model).cfg.max_staleness is None
+
+
+# ---------------------------------------------------------------------------
+# trigger policies
+
+
+def test_staleness_guard_wraps_any_trigger():
+    inner = LazyTuneTrigger(LazyTuneConfig())
+    inner.lazytune.state.batches_needed = 4.0
+    guard = StalenessGuard(inner, max_staleness=30.0)
+    assert not guard.should_trigger(1, staleness=29.9)
+    assert guard.should_trigger(1, staleness=30.0)
+    assert not guard.should_trigger(0, staleness=99.0)  # empty buffer
+    assert guard.should_trigger(4, staleness=0.0)       # inner still rules
+    assert guard.lazytune is inner.lazytune             # transparent
+    with pytest.raises(ValueError):
+        StalenessGuard(inner, max_staleness=0.0)
+
+
+def test_priority_weighted_scales_accumulation_target():
+    """ISSUE tentpole: the accumulation target is jointly scaled by
+    `StreamSpec.priority` — a priority-2 stream (weight 0.5 -> boost 2x)
+    defers until twice the batches (keeping the shared device free for
+    its latency-critical requests), a priority-0 stream behaves exactly
+    like plain LazyTune."""
+    trig = PriorityWeightedTrigger(LazyTuneConfig(), priority_weight=0.5)
+    trig.lazytune.state.batches_needed = 4.0
+    assert not trig.should_trigger(2, priority=0)
+    assert not trig.should_trigger(3, priority=0)
+    assert trig.should_trigger(4, priority=0)
+    assert not trig.should_trigger(4, priority=2)  # 4 * (1 + 0.5*2) = 8
+    assert not trig.should_trigger(7, priority=2)
+    assert trig.should_trigger(8, priority=2)
+    # rounds_delayed bookkeeping mirrors LazyTune's
+    assert trig.lazytune.state.rounds_delayed == 4
+    with pytest.raises(ValueError):
+        PriorityWeightedTrigger(priority_weight=-1.0)
+
+
+def test_priority_weighted_zero_weight_matches_lazytune():
+    ref = LazyTuneTrigger(LazyTuneConfig())
+    pw = PriorityWeightedTrigger(LazyTuneConfig(), priority_weight=0.0)
+    for trig in (ref, pw):
+        trig.lazytune.state.batches_needed = 3.0
+    for n, p in [(1, 0), (2, 5), (3, 9), (4, 0)]:
+        assert ref.should_trigger(n) == pw.should_trigger(n, priority=p)
+    assert ref.lazytune.state.rounds_delayed == pw.lazytune.state.rounds_delayed
+
+
+def test_priority_weighted_staleness_bounds_deferral():
+    """ROADMAP: `max_staleness` and priority are used *jointly* — the
+    spec builder wraps the priority-weighted trigger in the unscaled
+    StalenessGuard, which caps how long priority may defer a round, so
+    priority buys serving latency only up to the freshness contract."""
+    from repro.core.policies import build_trigger
+
+    trig = build_trigger(PolicySpec("priority-weighted",
+                                    {"priority_weight": 0.5,
+                                     "max_staleness": 30.0}))
+    assert isinstance(trig, StalenessGuard)
+    assert isinstance(trig.inner, PriorityWeightedTrigger)
+    trig.lazytune.state.batches_needed = 10.0
+    assert not trig.should_trigger(1, staleness=29.9, priority=2)
+    assert trig.should_trigger(1, staleness=30.0, priority=2)
+    assert trig.should_trigger(1, staleness=30.0, priority=0)
+    assert not trig.should_trigger(0, staleness=99.0, priority=2)
+
+
+def test_etuner_stack_spec_rejects_dead_lazytune_params():
+    """`etuner_stack_spec(lazytune=False)` threads the initial target
+    through to the immediate trigger's reported stats (ETunerConfig
+    parity) and refuses params that would otherwise be dropped
+    silently."""
+    from repro.core.policies import etuner_stack_spec
+
+    spec = etuner_stack_spec(
+        lazytune=False, simfreeze=False, detect_scenario_changes=False,
+        lazytune_params={"initial_batches_needed": 4.0})
+    assert spec.trigger.params == {"batches_needed": 4.0}
+    with pytest.raises(ValueError, match="have no effect"):
+        etuner_stack_spec(lazytune=False,
+                          lazytune_params={"max_batches_needed": 6.0})
+
+
+def test_runtime_feeds_priority_to_trigger(model):
+    """End-to-end: the runtime passes each stream's QoS priority into
+    `should_trigger`, so a priority-aware stack sees it."""
+    from repro.data import streams
+
+    seen = []
+
+    class Spy(PolicyStack):
+        def should_trigger(self, n, staleness=0.0, priority=0):
+            seen.append(priority)
+            return False
+
+    bench = streams.nc_benchmark(num_classes=10, num_scenarios=3, batches=3,
+                                 batch_size=8, seed=0)
+    stack = Spy(model)
+    rt = ContinualRuntime.from_config(
+        RuntimeConfig(pretrain_epochs=1, seed=0),
+        model=model, benchmark=bench, controller=stack,
+        controller_factory=lambda st: stack)
+    rt.run(events=[Event(1.0, "data", 1, 0, stream=0, priority=0),
+                   Event(2.0, "data", 1, 0, stream=1, priority=3)])
+    assert seen == [0, 3]
+
+
+# ---------------------------------------------------------------------------
+# legacy adapter
+
+
+class _OldController:
+    """Pre-QoS monolith: should_trigger(batches) only, no staleness, no
+    priority, no publish_policy."""
+
+    def __init__(self, model):
+        self._plan = ETunerController(model).plan
+        self.calls = []
+
+    @property
+    def plan(self):
+        return self._plan
+
+    def should_trigger(self, batches_available):
+        self.calls.append(batches_available)
+        return batches_available >= 1
+
+    def round_finished(self, iters, val_acc, params):
+        pass
+
+    def inference_served(self, logits):
+        return False
+
+    def scenario_changed(self, params, probe):
+        pass
+
+
+def test_adapt_controller_wraps_only_legacy_signatures(model):
+    new = ETunerController(model)
+    assert adapt_controller(new) is new
+    old = _OldController(model)
+    adapted = adapt_controller(old)
+    assert isinstance(adapted, LegacyControllerAdapter)
+    # full-signal call reaches the one-arg monolith
+    assert adapted.should_trigger(2, staleness=9.0, priority=5)
+    assert old.calls == [2]
+    assert adapted.plan is old.plan  # everything else forwards
+
+
+def test_legacy_controller_drives_runtime(model):
+    """A monolithic pre-stack controller still runs a full session
+    through `controller_factory` (ISSUE tentpole: legacy adapter)."""
+    from repro.data import streams
+
+    bench = streams.nc_benchmark(num_classes=10, num_scenarios=3, batches=3,
+                                 batch_size=8, seed=0)
+    ctrl = _OldController(model)
+    rt = ContinualRuntime.from_config(
+        RuntimeConfig(pretrain_epochs=1, seed=0),
+        model=model, benchmark=bench, controller=ctrl)
+    res = rt.run(inferences_total=4)
+    assert res.rounds > 0 and ctrl.calls
+
+
+# ---------------------------------------------------------------------------
+# publish policies
+
+
+class _IdModel:
+    """predict() returns logits identifying the params object."""
+
+    def predict(self, params, batch):
+        return np.full((len(batch["labels"]), 2), float(params))
+
+
+def test_immediate_publish_keeps_bug_compat_seam():
+    srv = InferenceServer(_IdModel())
+    srv.publish(0.0, 0.0)
+    srv.publish(1.0, 10.0)            # round ends at t=10, default publish
+    assert srv._resolve(5.0) == 1.0   # mid-round arrival sees new params
+    assert srv._resolve(10.0) == 1.0
+
+
+def test_round_end_publish_serves_pre_round_params_mid_round():
+    """`RoundEndPublish` (delayed=True) retains the pre-round params for
+    arrivals before the round's occupancy end — the genuinely-delayed
+    §5 seam."""
+    srv = InferenceServer(_IdModel())
+    srv.publish(0.0, 0.0)
+    srv.publish(1.0, 10.0, delayed=True)
+    assert srv._resolve(5.0) == 0.0   # outdated model (paper §III-A)
+    assert srv._resolve(10.0) == 1.0  # visible from the round's end
+    srv.publish(2.0, 20.0, delayed=True)
+    assert srv._resolve(15.0) == 1.0
+
+
+def test_runtime_honors_publish_policy(model, monkeypatch):
+    """The composition root publishes through the stream controller's
+    `publish_policy`: RoundEndPublish flips the server's delayed flag,
+    the default ImmediatePublish does not."""
+    from repro.data import streams
+
+    calls = []
+    orig = InferenceServer.publish
+
+    def spy(self, params, visible_at, slot="default", *, delayed=False):
+        calls.append(delayed)
+        return orig(self, params, visible_at, slot=slot, delayed=delayed)
+
+    monkeypatch.setattr(InferenceServer, "publish", spy)
+    bench = streams.nc_benchmark(num_classes=10, num_scenarios=3, batches=3,
+                                 batch_size=8, seed=0)
+
+    def run(publish):
+        calls.clear()
+        stack = PolicyStack(model, publish=publish)
+        rt = ContinualRuntime.from_config(
+            RuntimeConfig(pretrain_epochs=1, seed=0),
+            model=model, benchmark=bench, controller=stack)
+        rt.run(events=[Event(1.0, "data", 1, 0),
+                       Event(2.0, "inference", 1, 0)])
+        # first publish is the t=0 bootstrap (never delayed), the rest
+        # are round publishes
+        return calls[0], set(calls[1:])
+
+    boot, rounds = run(RoundEndPublish())
+    assert boot is False and rounds == {True}
+    boot, rounds = run(ImmediatePublish())
+    assert boot is False and rounds == {False}
+
+
+# ---------------------------------------------------------------------------
+# stack composition and compat surface
+
+
+def test_stack_spec_builds_equivalent_controller(model):
+    spec = PolicyStackSpec(
+        trigger=PolicySpec("lazytune", {"max_batches_needed": 6.0,
+                                        "max_staleness": 30.0}),
+        freeze=PolicySpec("simfreeze", {"freeze_interval": 6}),
+        drift=PolicySpec("energy"))
+    stack = spec.build(model)
+    assert isinstance(stack.trigger, StalenessGuard)
+    assert isinstance(stack.trigger.inner, LazyTuneTrigger)
+    assert stack.lazytune.cfg.max_batches_needed == 6.0
+    assert stack.simfreeze.cfg.freeze_interval == 6
+    assert stack.detector is not None
+    ctrl = ETunerController(model, ETunerConfig(
+        lazytune_cfg=LazyTuneConfig(max_batches_needed=6.0),
+        max_staleness=30.0))
+    assert sorted(stack.stats()) == sorted(ctrl.stats())
+
+
+def test_stack_compat_surface_mirrors_monolith(model):
+    immed = PolicyStack(model)
+    assert isinstance(immed.trigger, ImmediateTrigger)
+    assert isinstance(immed.freeze, NoFreezePolicy)
+    assert not hasattr(immed, "lazytune")
+    assert not hasattr(immed, "simfreeze")
+    assert not hasattr(immed, "detector")
+    # stats keys stay exactly the monolith's across all ablations
+    expected = {"rounds_triggered", "batches_needed", "frozen_fraction",
+                "freezes", "unfreezes", "plan_changes", "ood_detections"}
+    for lazy in (False, True):
+        for freeze in (False, True):
+            ctrl = ETunerController(model, ETunerConfig(
+                lazytune=lazy, simfreeze=freeze,
+                detect_scenario_changes=False))
+            assert set(ctrl.stats()) == expected
+    with pytest.raises(ValueError):
+        PolicyStack()  # needs a freeze policy or a model
+
+
+def test_unknown_policy_names_are_actionable(model):
+    with pytest.raises(ValueError, match="known trigger policies"):
+        PolicyStackSpec(trigger=PolicySpec("bogus")).build(model)
+    with pytest.raises(ValueError, match="valid"):
+        PolicyStackSpec(trigger=PolicySpec(
+            "lazytune", {"nope": 1})).build(model)
+    with pytest.raises(ValueError, match="known freeze policies"):
+        PolicyStackSpec(freeze=PolicySpec("bogus")).validate()

@@ -11,6 +11,7 @@ from repro.core import ETunerConfig, ETunerController
 from repro.data import streams
 from repro.data.arrivals import Event
 from repro.models import build_model
+from repro.runtime import RuntimeConfig
 from repro.runtime.continual import ContinualRuntime
 from repro.runtime.costmodel import EdgeCostModel
 from repro.runtime.executor import FineTuneExecutor, ReplayBuffer
@@ -181,11 +182,13 @@ def qos_runs():
                                   seed=0)
         b1 = streams.ni_benchmark(num_scenarios=3, batches=8, batch_size=8,
                                   seed=13)
-        rt = ContinualRuntime(model, b0, _immed(model), pretrain_epochs=1,
-                              seed=0, stream_benchmarks={1: b1},
-                              controller_factory=lambda st: _immed(model),
-                              preemptible=preemptible,
-                              preempt_resume_cost_s=resume)
+        rt = ContinualRuntime.from_config(
+            RuntimeConfig(pretrain_epochs=1, seed=0,
+                          preemptible=preemptible,
+                          preempt_resume_cost_s=resume),
+            model=model, benchmark=b0, controller=_immed(model),
+            stream_benchmarks={1: b1},
+            controller_factory=lambda st: _immed(model))
         return rt.run(events=events)
 
     return run(False), run(True), run(True, resume=2.0)
@@ -304,10 +307,10 @@ def test_detector_probe_fires_and_resolves_on_right_stream():
 
     c0 = Spy(model)
     c1 = Spy(model, fire=True)   # stream 1's controller flags a change
-    rt = ContinualRuntime(model, b0, c0, pretrain_epochs=1, seed=0,
-                          boundaries="detector",
-                          stream_benchmarks={1: b1},
-                          controller_factory=lambda st: c1)
+    rt = ContinualRuntime.from_config(
+        RuntimeConfig(pretrain_epochs=1, seed=0, boundaries="detector"),
+        model=model, benchmark=b0, controller=c0,
+        stream_benchmarks={1: b1}, controller_factory=lambda st: c1)
     events = [Event(1.0, "data", 1, 0, stream=0),
               Event(2.0, "data", 1, 0, stream=1),
               Event(3.0, "inference", 1, 0, stream=1),
@@ -349,8 +352,9 @@ def test_probe_confirmation_can_reject():
             self.changes += 1
 
     ctrl = Reject(model)
-    rt = ContinualRuntime(model, bench, ctrl, pretrain_epochs=1, seed=0,
-                          boundaries="detector")
+    rt = ContinualRuntime.from_config(
+        RuntimeConfig(pretrain_epochs=1, seed=0, boundaries="detector"),
+        model=model, benchmark=bench, controller=ctrl)
     res = rt.run(events=[Event(1.0, "data", 1, 0),
                          Event(2.0, "inference", 1, 0),
                          Event(3.0, "data", 1, 1)])
@@ -368,8 +372,9 @@ def _tiny_runtime(ctrl_cls=ETunerController, **kw):
                                  batch_size=8, seed=0)
     ctrl = ctrl_cls(model, ETunerConfig(
         lazytune=False, simfreeze=False, detect_scenario_changes=False))
-    return ContinualRuntime(model, bench, ctrl, pretrain_epochs=1, seed=0,
-                            **kw), ctrl
+    return ContinualRuntime.from_config(
+        RuntimeConfig(pretrain_epochs=1, seed=0, **kw),
+        model=model, benchmark=bench, controller=ctrl), ctrl
 
 
 def test_unseen_stream_pushed_mid_run_does_not_crash():

@@ -16,7 +16,14 @@ from repro.core import (ETunerConfig, ETunerController, LazyTuneConfig,
                         SimFreezeConfig)
 from repro.data import streams
 from repro.models import build_model
+from repro.runtime import RuntimeConfig
 from repro.runtime.continual import ContinualRuntime
+
+
+def _rt(model, bench, ctrl, **cfg_kw):
+    return ContinualRuntime.from_config(RuntimeConfig(**cfg_kw),
+                                        model=model, benchmark=bench,
+                                        controller=ctrl)
 
 
 @pytest.fixture(scope="module")
@@ -38,7 +45,7 @@ def _run(model, bench, lazytune, simfreeze, seed=0, **kw):
         simfreeze_cfg=SimFreezeConfig(freeze_interval=10, min_history=3,
                                       cka_threshold=0.01))
     ctrl = ETunerController(model, ecfg)
-    rt = ContinualRuntime(model, bench, ctrl, pretrain_epochs=2, seed=seed, **kw)
+    rt = _rt(model, bench, ctrl, pretrain_epochs=2, seed=seed, **kw)
     return rt.run(inferences_total=40)
 
 
@@ -91,7 +98,7 @@ def test_scenario_change_resets(model, bench):
                         detect_scenario_changes=False,
                         simfreeze_cfg=SimFreezeConfig(freeze_interval=4))
     ctrl = ETunerController(model, ecfg)
-    rt = ContinualRuntime(model, bench, ctrl, pretrain_epochs=1)
+    rt = _rt(model, bench, ctrl, pretrain_epochs=1)
     rt.run(inferences_total=16)
     assert ctrl.simfreeze.state.freezes >= 1
     assert ctrl.plan_changes >= 1
@@ -101,8 +108,7 @@ def test_detector_boundaries_mode_runs(model, bench):
     ecfg = ETunerConfig(lazytune=True, simfreeze=False,
                         detect_scenario_changes=True)
     ctrl = ETunerController(model, ecfg)
-    rt = ContinualRuntime(model, bench, ctrl, pretrain_epochs=1,
-                          boundaries="detector")
+    rt = _rt(model, bench, ctrl, pretrain_epochs=1, boundaries="detector")
     res = rt.run(inferences_total=24)
     assert res.rounds > 0
 

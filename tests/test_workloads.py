@@ -213,9 +213,12 @@ def two_stream_result():
                               seed=0)
     b1 = streams.ni_benchmark(num_scenarios=3, batches=3, batch_size=8,
                               seed=13)
-    rt = ContinualRuntime(model, b0, make(), pretrain_epochs=1, seed=0,
-                          stream_benchmarks={1: b1},
-                          controller_factory=make)
+    from repro.runtime import RuntimeConfig
+
+    rt = ContinualRuntime.from_config(
+        RuntimeConfig(pretrain_epochs=1, seed=0),
+        model=model, benchmark=b0, controller=make(),
+        stream_benchmarks={1: b1}, controller_factory=make)
     return rt.run(events=compile_workload(spec))
 
 
@@ -254,7 +257,7 @@ def _valid_doc():
     cell = {f: 1.0 for f in W.CELL_FIELDS}
     stream_cell = {f: 1.0 for f in W.STREAM_FIELDS}
     model_cell = {f: 1.0 for f in W.MODEL_FIELDS}
-    cells = [dict(cell, workload=w, method=m,
+    cells = [dict(cell, workload=w, method=m, trigger_policy="default",
                   per_stream={"0": dict(stream_cell)},
                   per_model={"default": dict(model_cell)})
              for w in ("a", "b", "c") for m in W.METHODS]
@@ -301,6 +304,14 @@ def test_bench_schema_validator_flags_violations():
         c["per_model"]["default"])}) for c in doc["cells"]])
     del bad["cells"][0]["per_model"]["default"]["swaps"]
     assert any("'swaps'" in e for e in W.validate_bench(bad))
+    # v4: every cell names its trigger policy, and a qos preset without
+    # its priority-weighted cell is a coverage regression
+    bad = dict(doc, cells=[dict(c) for c in doc["cells"]])
+    del bad["cells"][0]["trigger_policy"]
+    assert any("trigger_policy" in e for e in W.validate_bench(bad))
+    bad = dict(doc, cells=[dict(c, workload="qos") for c in doc["cells"]])
+    assert any("priority-weighted" in e for e in W.validate_bench(
+        bad, min_workloads=1))
 
 
 # ---------------------------------------------------------------------------
