@@ -10,9 +10,13 @@ columns (upward = regression; sub-millisecond absolute moves are noise)
 and the v3 per-model-slot columns (slot costs up / slot accuracy down =
 regression). v4 cells are additionally keyed by `trigger_policy`, so the
 priority-weighted-trigger qos cells are gated independently of their
-default-trigger siblings. Baseline cells — and baseline
-per-stream/per-model entries — that vanish also fail (coverage must
-never shrink); brand-new cells are reported but don't fail.
+default-trigger siblings. v5 adds two soft directional gates for the
+compiled hot path: `wall_s` fails beyond 1.5x the baseline cell (0.5s
+absolute floor — wall time is host-measured and noisy) and `recompiles`
+fails when a cell grows more than 2 extra XLA programs (compile-ledger
+churn). Baseline cells — and baseline per-stream/per-model entries —
+that vanish also fail (coverage must never shrink); brand-new cells are
+reported but don't fail.
 
 Accuracy gets its own (wider) threshold: cell accuracies average a few
 dozen requests, so XLA-CPU codegen differences between the machine that
@@ -39,16 +43,27 @@ from typing import Dict, List, Tuple
 
 #: metric -> direction that counts as a regression ('down' = lower is a
 #: regression, 'up' = higher is). Modeled costs regress upward; accuracy
-#: regresses downward. `rounds`/`recompiles` are scheduling outcomes, not
-#: costs — drifts there show up in time/energy anyway, so they are
-#: reported but never fail the diff.
+#: regresses downward. `rounds` is a scheduling outcome, not a cost —
+#: drifts there show up in time/energy anyway, so it is reported but
+#: never fails the diff. v5 promotes two host-side columns to soft
+#: directional gates: `wall_s` (the compiled hot path's headline win —
+#: wide 50% threshold + 0.5s absolute floor, because wall time on a
+#: shared CI runner is noisy) and `recompiles` (the compile-ledger churn
+#: guard — a cell quietly re-paying XLA compiles per round fails even
+#: when modeled costs are flat; ±2 programs is machine noise).
 METRIC_DIRECTIONS = {
     "acc": "down",
     "time_s": "up",
     "energy_j": "up",
     "tflops": "up",
+    "wall_s": "up",
+    "recompiles": "up",
 }
-INFO_METRICS = ("rounds", "recompiles", "preemptions", "swaps")
+INFO_METRICS = ("rounds", "preemptions", "swaps")
+
+#: per-metric relative-threshold overrides (`--threshold` covers the
+#: rest): wall_s fails only beyond 1.5x the baseline cell.
+_METRIC_THRESHOLDS = {"wall_s": 0.5}
 
 #: per-stream attribution metrics gated with the same directional rule:
 #: serving latency regresses upward. Latencies are often exactly 0 (idle
@@ -68,7 +83,8 @@ MODEL_METRIC_DIRECTIONS = {
     "avg_inference_acc": "down",
 }
 
-_ABS_FLOOR = {"latency_p50": 1e-3, "latency_p95": 1e-3}
+_ABS_FLOOR = {"latency_p50": 1e-3, "latency_p95": 1e-3,
+              "wall_s": 0.5, "recompiles": 2}
 
 
 def cell_key(cell: Dict) -> Tuple[str, str, int, str]:
@@ -151,7 +167,8 @@ def diff_cells(base_doc: Dict, new_doc: Dict, *, threshold: float = 0.05,
         for metric, bad_dir in METRIC_DIRECTIONS.items():
             if metric not in b or metric not in n:
                 continue
-            thr = acc_threshold if metric == "acc" else threshold
+            thr = acc_threshold if metric == "acc" \
+                else _METRIC_THRESHOLDS.get(metric, threshold)
             _gate_metric(label, metric, float(b[metric]), float(n[metric]),
                          thr, bad_dir, regressions, infos)
         _diff_sub(label, "per_stream", b, n, STREAM_METRIC_DIRECTIONS,

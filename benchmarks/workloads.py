@@ -37,14 +37,13 @@ from repro.runtime import (RuntimeConfig, SlotConfig, edgeol_session,
 from repro.runtime.modelpool import ModelPool, ModelSlot
 from repro.workloads import WorkloadSpec, presets
 
-#: v4 adds the PolicyStack column: every cell carries `trigger_policy`
-#: ("default" = the method's own trigger; "priority-weighted" =
-#: `PriorityWeightedTrigger`, LazyTune's accumulation target scaled by
-#: each stream's QoS priority) and prioritized presets sweep an extra
-#: etuner/priority-weighted cell per QoS mode. (v3 added the ModelPool
-#: columns — per-cell `models`/`swaps` + `per_model` attribution; v2
-#: added QoS — `preemptible`/`preemptions` + per-stream latency.)
-SCHEMA_VERSION = 4
+#: v5: cells run on the compiled hot path by default (segment-batched
+#: event loop, donated scan steps, jitted serving; DESIGN.md §12) and
+#: carry a `compiled` flag; `wall_s` + `recompiles` become directionally
+#: gated in bench_diff. (v4 added the PolicyStack `trigger_policy`
+#: column + priority-weighted qos cells; v3 the ModelPool columns; v2
+#: QoS — `preemptible`/`preemptions` + per-stream latency.)
+SCHEMA_VERSION = 5
 METHODS = PAPER_METHODS
 DEFAULT_OUT = os.path.abspath(
     os.path.join(os.path.dirname(__file__), "..", "BENCH_workloads.json"))
@@ -56,7 +55,8 @@ MODALITY_ARCH = {"nlp": "bert-base"}
 #: Numeric fields every cell must carry (schema contract with CI).
 CELL_FIELDS = ("acc", "time_s", "energy_j", "tflops", "rounds",
                "recompiles", "events", "streams", "wall_s",
-               "preemptible", "preemptions", "models", "swaps")
+               "preemptible", "preemptions", "models", "swaps",
+               "compiled")
 
 #: String fields every cell must carry (schema contract, v4).
 CELL_STR_FIELDS = ("workload", "method", "trigger_policy")
@@ -113,11 +113,14 @@ def workload_config(arch: str, workload, method: str, *, seed: int = 0,
                     inference_batch: int = 8, preemptible: bool = False,
                     memory_budget_mb: float = 0.0,
                     trigger_policy: str = "default",
-                    workload_scale: Optional[Dict] = None) -> RuntimeConfig:
+                    workload_scale: Optional[Dict] = None,
+                    compiled: bool = True,
+                    use_pallas: bool = False) -> RuntimeConfig:
     """The declarative session config of one sweep cell. `workload` is a
     preset name or an already-scaled `WorkloadSpec`; paper methods get
     their policy stacks per slot (baselines keep the default stack and
-    inject controllers at session build)."""
+    inject controllers at session build). Cells run on the compiled hot
+    path (DESIGN.md §12) unless `compiled=False`."""
     if isinstance(workload, WorkloadSpec):
         spec = workload
     else:
@@ -136,7 +139,8 @@ def workload_config(arch: str, workload, method: str, *, seed: int = 0,
         slots=slots, workload=spec.name, workload_scale=scale,
         seed=seed, pretrain_epochs=pretrain_epochs,
         inference_batch=inference_batch, preemptible=preemptible,
-        memory_budget_mb=memory_budget_mb)
+        memory_budget_mb=memory_budget_mb,
+        compiled=compiled, use_pallas=use_pallas)
 
 
 def run_workload(arch: str, spec: WorkloadSpec, method: str, *,
@@ -146,7 +150,9 @@ def run_workload(arch: str, spec: WorkloadSpec, method: str, *,
                  preemptible: bool = False,
                  memory_budget_mb: float = 0.0,
                  trigger_policy: str = "default",
-                 workload_scale: Optional[Dict] = None) -> Dict:
+                 workload_scale: Optional[Dict] = None,
+                 compiled: bool = True,
+                 use_pallas: bool = False) -> Dict:
     """One (workload, controller) cell: full runtime run, paper metrics +
     per-stream and per-model attribution (incl. p50/p95 serving latency).
     `preemptible` turns on QoS round preemption; `trigger_policy`
@@ -161,7 +167,8 @@ def run_workload(arch: str, spec: WorkloadSpec, method: str, *,
                           preemptible=preemptible,
                           memory_budget_mb=memory_budget_mb,
                           trigger_policy=trigger_policy,
-                          workload_scale=workload_scale)
+                          workload_scale=workload_scale,
+                          compiled=compiled, use_pallas=use_pallas)
     t0 = time.time()
     if method in PAPER_METHODS:
         # fully declarative: benchmarks, pool, controllers and the event
@@ -199,7 +206,7 @@ def run_workload(arch: str, spec: WorkloadSpec, method: str, *,
         "energy_j": res.total_energy_j, "tflops": res.compute_tflops,
         "rounds": res.rounds, "recompiles": res.recompiles,
         "preemptible": int(preemptible), "preemptions": res.preemptions,
-        "swaps": res.swaps,
+        "swaps": res.swaps, "compiled": int(compiled),
         "wall_s": round(time.time() - t0, 2),
         "per_stream": {str(k): v for k, v in res.per_stream.items()},
         "per_model": dict(res.per_model),
@@ -366,6 +373,9 @@ def main() -> int:
     ap.add_argument("--validate", metavar="PATH",
                     help="validate an existing BENCH file and exit")
     args = ap.parse_args()
+
+    from repro.launch.platform import bootstrap
+    bootstrap()
 
     if args.validate:
         with open(args.validate) as f:

@@ -17,12 +17,23 @@ budget smaller than the resident set forces cold-slot swap charges. The
 `--trigger-policy priority-weighted` scales LazyTune's accumulation
 target by stream priority (BENCH v4).
 
+Runs execute on the compiled hot path by default (DESIGN.md §12):
+homogeneous event segments dispatch as one fused `lax.scan` / vmapped
+program with donated (params, opt_state) buffers, and the process
+bootstraps the platform + persistent XLA compile cache so repeat
+invocations skip compilation. `--no-compiled` selects the pure-Python
+per-event fallback (bit-identical results, just slower); `--use-pallas`
+additionally routes attention forwards and the CKA drift probe through
+the Pallas kernels (interpret mode on CPU).
+
     PYTHONPATH=src python examples/multi_stream.py --preset two-stream \
         --method etuner --batches 6 --inferences 16 --scenarios 3
     PYTHONPATH=src python examples/multi_stream.py --preset mixed \
         --memory-budget 2.5
     PYTHONPATH=src python examples/multi_stream.py --preset qos \
         --preemptible --trigger-policy priority-weighted
+    PYTHONPATH=src python examples/multi_stream.py --arch deit-tiny \
+        --use-pallas
 """
 import argparse
 import os
@@ -70,7 +81,18 @@ def main():
                     help="ModelPool device memory budget in MB (0 = "
                          "unlimited); only multi-modality workloads "
                          "(mixed) swap — try 2.5 to force it")
+    ap.add_argument("--no-compiled", dest="compiled", action="store_false",
+                    help="use the pure-Python per-event fallback instead "
+                         "of the segment-batched compiled hot path "
+                         "(bit-identical results; DESIGN.md §12)")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="route attention forwards and the CKA drift "
+                         "probe through the Pallas kernels (interpret "
+                         "mode on CPU)")
     args = ap.parse_args()
+
+    from repro.launch.platform import bootstrap
+    bootstrap()
 
     spec = presets(batches_per_scenario=args.batches,
                    inferences=args.inferences,
@@ -85,6 +107,8 @@ def main():
                         preemptible=args.preemptible,
                         memory_budget_mb=args.memory_budget,
                         trigger_policy=args.trigger_policy,
+                        compiled=args.compiled,
+                        use_pallas=args.use_pallas,
                         workload_scale=dict(
                             batches_per_scenario=args.batches,
                             inferences=args.inferences,

@@ -106,6 +106,10 @@ class ModelConfig:
     shard_head_dim: bool = False # fallback to head_dim sharding when heads < tp
     # sub-quadratic? (controls long_500k applicability)
     subquadratic: bool = False
+    # route attention forwards through the Pallas flash kernel (interpret
+    # mode on CPU); consumed by the paper's ViT/BERT models — forward
+    # only, the loss path keeps XLA (the kernel has no custom VJP)
+    use_pallas: bool = False
 
     def replace(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)

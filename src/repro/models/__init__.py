@@ -1,9 +1,17 @@
 """Model zoo. ``build_model(cfg)`` returns a uniform ``Model`` record used
-by the runtime, the ETuner controller, and the dry-run launcher."""
+by the runtime, the ETuner controller, and the dry-run launcher.
+
+``build_model`` is memoized by config value: a ``Model`` is a frozen
+record of pure closures over ``cfg``, so two calls with equal configs
+are interchangeable. Sharing the instance means every downstream
+program cache keyed by function identity (train steps, jitted
+predict/features, serving vmaps — see runtime/train_loop.py) is shared
+across sessions in one process, which is what keeps a benchmark sweep
+from re-paying XLA compiles per cell."""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 from repro.configs.base import ModelConfig
 
@@ -21,7 +29,17 @@ class Model:
     predict: Optional[Callable] = None  # classifiers: (params, batch) -> logits
 
 
+_MODELS: Dict[ModelConfig, Model] = {}
+
+
 def build_model(cfg: ModelConfig) -> Model:
+    model = _MODELS.get(cfg)
+    if model is None:
+        model = _MODELS[cfg] = _build_model(cfg)
+    return model
+
+
+def _build_model(cfg: ModelConfig) -> Model:
     if cfg.is_lm:
         from repro.models import transformer as T
 

@@ -35,7 +35,8 @@ def init_bert(rng, cfg: ModelConfig):
     return params
 
 
-def _forward(params, cfg: ModelConfig, tokens, plan, collect=False):
+def _forward(params, cfg: ModelConfig, tokens, plan, collect=False,
+             use_pallas=False):
     B, S = tokens.shape
     flags = plan.layers if plan is not None else (False,) * (len(params["blocks"]) + 2)
     emb = maybe_stop(params["embed"], flags[0])
@@ -48,7 +49,8 @@ def _forward(params, cfg: ModelConfig, tokens, plan, collect=False):
     for bi, blk in enumerate(params["blocks"]):
         frozen = flags[1 + bi]
         blk = maybe_stop(blk, frozen)
-        x = _ln(x + simple_mha(blk["attn"], x, cfg.num_heads), blk["ln1"])
+        x = _ln(x + simple_mha(blk["attn"], x, cfg.num_heads,
+                               use_pallas=use_pallas), blk["ln1"])
         h = jax.nn.gelu(x @ blk["ffn"]["w1"] + blk["ffn"]["b1"])
         x = _ln(x + (h @ blk["ffn"]["w2"] + blk["ffn"]["b2"]), blk["ln2"])
         if frozen and prefix_frozen:
@@ -73,10 +75,12 @@ def build(cfg: ModelConfig):
         return l, {"loss": l, "acc": acc, "logits": logits}
 
     def predict(params, batch):
-        return _forward(params, cfg, batch["tokens"], None)[0]
+        return _forward(params, cfg, batch["tokens"], None,
+                        use_pallas=cfg.use_pallas)[0]
 
     def features(params, batch):
-        return _forward(params, cfg, batch["tokens"], None, collect=True)[1]
+        return _forward(params, cfg, batch["tokens"], None, collect=True,
+                        use_pallas=cfg.use_pallas)[1]
 
     return Model(cfg=cfg, init=lambda rng: init_bert(rng, cfg), loss=loss,
                  features=features, num_freeze_units=cfg.num_layers + 2,

@@ -11,13 +11,25 @@ from repro.core.freeze_plan import maybe_stop
 from repro.models import common
 
 
-def simple_mha(p, x, num_heads, causal=False):
-    """Bidirectional MHA used by ViT/BERT. x: [B,S,D]."""
+def simple_mha(p, x, num_heads, causal=False, use_pallas=False):
+    """Bidirectional MHA used by ViT/BERT. x: [B,S,D].
+
+    `use_pallas` routes the attention core through the Pallas flash
+    kernel (interpret mode on CPU; DESIGN.md §12). Forward-only: the
+    kernel has no custom VJP, so loss paths always pass False. Both our
+    sequence lengths (ViT S=65 reduced, BERT S<=512) sit within one
+    kernel block, so the kernel's padding path never engages.
+    """
     B, S, D = x.shape
     hd = D // num_heads
     q = (x @ p["wq"] + p["bq"]).reshape(B, S, num_heads, hd)
     k = (x @ p["wk"] + p["bk"]).reshape(B, S, num_heads, hd)
     v = (x @ p["wv"] + p["bv"]).reshape(B, S, num_heads, hd)
+    if use_pallas:
+        from repro.kernels.attention import ops as att_ops
+
+        o = att_ops.flash_attention(q, k, v, causal=causal).reshape(B, S, D)
+        return o @ p["wo"] + p["bo"]
     s = jnp.einsum("bqhk,bshk->bhqs", q, k) / jnp.sqrt(jnp.float32(hd))
     if causal:
         mask = jnp.tril(jnp.ones((S, S), bool))
@@ -79,7 +91,8 @@ def init_vit(rng, cfg: ModelConfig):
     return params
 
 
-def _forward(params, cfg: ModelConfig, images, plan, collect=False):
+def _forward(params, cfg: ModelConfig, images, plan, collect=False,
+             use_pallas=False):
     patch = patch_size(cfg)
     x = jax.lax.conv_general_dilated(
         images, params["patch"]["w"], (patch, patch), "VALID",
@@ -101,7 +114,8 @@ def _forward(params, cfg: ModelConfig, images, plan, collect=False):
     for bi, blk in enumerate(params["blocks"]):
         frozen = flags[1 + bi]
         blk = maybe_stop(blk, frozen)
-        x = x + simple_mha(blk["attn"], _ln(x, blk["ln1"]), cfg.num_heads)
+        x = x + simple_mha(blk["attn"], _ln(x, blk["ln1"]), cfg.num_heads,
+                           use_pallas=use_pallas)
         h = _ln(x, blk["ln2"])
         h = jax.nn.gelu(h @ blk["ffn"]["w1"] + blk["ffn"]["b1"])
         x = x + (h @ blk["ffn"]["w2"] + blk["ffn"]["b2"])
@@ -127,10 +141,12 @@ def build(cfg: ModelConfig):
         return l, {"loss": l, "acc": acc, "logits": logits}
 
     def predict(params, batch):
-        return _forward(params, cfg, batch["images"], None)[0]
+        return _forward(params, cfg, batch["images"], None,
+                        use_pallas=cfg.use_pallas)[0]
 
     def features(params, batch):
-        return _forward(params, cfg, batch["images"], None, collect=True)[1]
+        return _forward(params, cfg, batch["images"], None, collect=True,
+                        use_pallas=cfg.use_pallas)[1]
 
     return Model(cfg=cfg, init=lambda rng: init_vit(rng, cfg), loss=loss,
                  features=features, num_freeze_units=cfg.num_layers + 2,

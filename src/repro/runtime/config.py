@@ -161,6 +161,13 @@ class RuntimeConfig:
     preemptible: bool = False
     preempt_resume_cost_s: float = 0.0
     memory_budget_mb: float = 0.0
+    # compiled hot path (DESIGN.md §12): fused scan training, deferred
+    # vmapped serving, segment-sliced event loop. Off by default — the
+    # golden regression pins the eager path bit-for-bit.
+    compiled: bool = False
+    # route attention forwards and the SimFreeze CKA probe through the
+    # Pallas kernels (interpret mode on CPU, so CI runs them)
+    use_pallas: bool = False
 
     # ---- validation ------------------------------------------------------
     def validate(self) -> "RuntimeConfig":
@@ -209,6 +216,8 @@ class RuntimeConfig:
             "preemptible": self.preemptible,
             "preempt_resume_cost_s": self.preempt_resume_cost_s,
             "memory_budget_mb": self.memory_budget_mb,
+            "compiled": self.compiled,
+            "use_pallas": self.use_pallas,
         }
         if self.workload is not None:
             out["workload"] = self.workload
@@ -223,7 +232,8 @@ class RuntimeConfig:
         valid = {"slots", "workload", "workload_scale", "seed", "boundaries",
                  "replay_batches", "pretrain_epochs", "inference_batch",
                  "calibrate_cost", "inference_window", "preemptible",
-                 "preempt_resume_cost_s", "memory_budget_mb"}
+                 "preempt_resume_cost_s", "memory_budget_mb", "compiled",
+                 "use_pallas"}
         unknown = set(d) - valid
         if unknown:
             raise ValueError(f"runtime config: unknown key(s) "
@@ -270,11 +280,35 @@ def _build_benchmark(slot_cfg: SlotConfig, seed: int):
     return streams.REGISTRY[name](**kw)
 
 
-def _build_model(arch: str):
+def _build_model(arch: str, *, use_pallas: bool = False,
+                 compiled: bool = False):
     from repro.configs import get_reduced
     from repro.models import build_model
 
-    return build_model(get_reduced(arch))
+    mcfg = get_reduced(arch)
+    if use_pallas:
+        mcfg = mcfg.replace(use_pallas=True)
+    model = build_model(mcfg)
+    if compiled:
+        from repro.runtime.train_loop import compiled_model
+
+        model = compiled_model(model)
+    return model
+
+
+def _slot_policies(cfg: RuntimeConfig, sc: SlotConfig) -> PolicyStackSpec:
+    """The slot's policy stack, with the SimFreeze drift probe routed
+    through the Pallas CKA kernel when the session asks for it (an
+    explicit `use_kernel` in the spec always wins)."""
+    import dataclasses
+
+    if not cfg.use_pallas or sc.policies.freeze.name != "simfreeze" \
+            or "use_kernel" in sc.policies.freeze.params:
+        return sc.policies
+    freeze = dataclasses.replace(
+        sc.policies.freeze,
+        params={**sc.policies.freeze.params, "use_kernel": True})
+    return dataclasses.replace(sc.policies, freeze=freeze)
 
 
 def _pool_from_config(cfg: RuntimeConfig, spec, benches):
@@ -289,8 +323,10 @@ def _pool_from_config(cfg: RuntimeConfig, spec, benches):
         sc = cfg.slots[m]
         first = next(i for i, s in enumerate(spec.streams)
                      if s.modality == m)
-        slots.append(ModelSlot(m, _build_model(sc.arch), benches[first],
-                               memory_mb=sc.memory_mb))
+        slots.append(ModelSlot(
+            m, _build_model(sc.arch, use_pallas=cfg.use_pallas,
+                            compiled=cfg.compiled),
+            benches[first], memory_mb=sc.memory_mb))
     return ModelPool(slots, memory_budget_mb=cfg.memory_budget_mb)
 
 
@@ -367,10 +403,11 @@ def resolve_session(cfg: RuntimeConfig, *, model=None, benchmark=None,
         # for)
         if controller_factory is None and config_built_pool:
             pool = model_pool
-            slot_cfgs = cfg.slots
+            stacks = {n: _slot_policies(cfg, sc)
+                      for n, sc in cfg.slots.items()}
 
-            def controller_factory(key, _pool=pool, _slots=slot_cfgs):
-                return _slots[key].policies.build(_pool.slot(key).model)
+            def controller_factory(key, _pool=pool, _stacks=stacks):
+                return _stacks[key].build(_pool.slot(key).model)
     else:
         single = cfg.slots[next(iter(cfg.slots))] if len(cfg.slots) == 1 \
             else None
@@ -380,17 +417,25 @@ def resolve_session(cfg: RuntimeConfig, *, model=None, benchmark=None,
                 "injected model_pool (got "
                 f"{sorted(cfg.slots)} and neither)")
         if model is None:
-            model = _build_model(single.arch)
+            model = _build_model(single.arch, use_pallas=cfg.use_pallas,
+                                 compiled=cfg.compiled)
+        elif cfg.compiled:
+            # injected model: still jit its serving/probe forwards (the
+            # controller below is built on the wrapped model, so
+            # SimFreeze's feature probes dispatch through jit too)
+            from repro.runtime.train_loop import compiled_model
+
+            model = compiled_model(model)
         if benchmark is None:
             if stream_benchmarks is not None and 0 in stream_benchmarks:
                 benchmark = stream_benchmarks[0]
             else:
                 benchmark = _build_benchmark(single, cfg.seed)
         if controller is None:
-            controller = single.policies.build(model)
+            controller = _slot_policies(cfg, single).build(model)
         if controller_factory is None and spec is not None:
             mdl = model
-            policies = single.policies
+            policies = _slot_policies(cfg, single)
 
             def controller_factory(key, _m=mdl, _p=policies):
                 return _p.build(_m)
@@ -413,4 +458,5 @@ def resolve_session(cfg: RuntimeConfig, *, model=None, benchmark=None,
         controller_factory=controller_factory,
         preemptible=cfg.preemptible,
         preempt_resume_cost_s=cfg.preempt_resume_cost_s,
-        model_pool=model_pool, session_events=session_events)
+        model_pool=model_pool, compiled=cfg.compiled,
+        use_pallas=cfg.use_pallas, session_events=session_events)

@@ -60,6 +60,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.policies import adapt_controller
@@ -77,7 +78,7 @@ from repro.runtime.ledger import (DEFAULT_MODEL, MODEL_KEYS, STREAM_KEYS,
 from repro.runtime.modelpool import ModelPool, tree_mb
 from repro.runtime.scheduler import EventScheduler
 from repro.runtime.train_loop import (TrainStepCache, as_jnp, evaluate,
-                                     make_optimizer_state)
+                                     make_optimizer_state, same_shape_runs)
 
 # legacy aliases (pre-decomposition import sites)
 _fake_quant = fake_quant
@@ -209,7 +210,7 @@ class ContinualRuntime:
               inference_batch, calibrate_cost, inference_window, hooks,
               slot_hooks, stream_benchmarks, controller_factory,
               preemptible, preempt_resume_cost_s, model_pool,
-              session_events=None):
+              compiled=False, use_pallas=False, session_events=None):
         # ModelPool construction path: the pool's slots carry the models,
         # benchmarks and (optionally) controllers; model/benchmark/
         # controller may be None and default to the first slot's. Slot
@@ -251,6 +252,17 @@ class ContinualRuntime:
         # QoS: modeled checkpoint-resume overhead paid on each round split
         # (charged to the preempting stream; 0.0 = legacy free splits)
         self.preempt_resume_cost_s = preempt_resume_cost_s
+        # compiled hot path (DESIGN.md §12): all training goes through the
+        # donated fused-scan step, serving through deferred vmapped
+        # dispatch, and the event loop through segment slicing. Default
+        # False keeps the golden regression on the legacy eager path.
+        # `segment` (overridable before run(); the equivalence property
+        # test forces it off) additionally fuses whole same-shape runs —
+        # per-event compiled execution is the same scan program at trip
+        # count 1, so toggling it never moves a bit.
+        self.compiled = bool(compiled)
+        self.use_pallas = bool(use_pallas)
+        self.segment = True
         # round hooks: model-wrapping ones bind first so every later
         # consumer (train steps, serving, SimSiam features) sees the
         # wrapped model. `hooks` wrap the single model; `slot_hooks` bind
@@ -289,7 +301,8 @@ class ContinualRuntime:
             executor = FineTuneExecutor(
                 self.steps, self.cost, ledger, replay, rng=rng,
                 hooks=self.hooks, calibrate_cost=self.calibrate_cost,
-                preempt_resume_cost_s=self.preempt_resume_cost_s)
+                preempt_resume_cost_s=self.preempt_resume_cost_s,
+                compiled=self.compiled, fuse=self.segment)
             slots[DEFAULT_MODEL] = _SlotState(
                 DEFAULT_MODEL, self.model, self.bench, self.controller,
                 self.steps, executor)
@@ -320,7 +333,8 @@ class ContinualRuntime:
                 rng=np.random.default_rng([self.seed, i]),
                 hooks=hooks, calibrate_cost=self.calibrate_cost,
                 model_name=slot.name,
-                preempt_resume_cost_s=self.preempt_resume_cost_s)
+                preempt_resume_cost_s=self.preempt_resume_cost_s,
+                compiled=self.compiled, fuse=self.segment)
             slots[slot.name] = _SlotState(slot.name, model,
                                           slot.benchmark, ctrl, steps,
                                           executor)
@@ -362,9 +376,23 @@ class ContinualRuntime:
         for st in slots.values():
             params = st.model.init(jax.random.PRNGKey(self.seed))
             opt_state = make_optimizer_state(st.model, self.opt_cfg, params)
-            step0 = st.steps.get(st.controller.plan)
-            for _ in range(self.pretrain_epochs):
-                for b in st.bench.scenarios[0].train_batches:
+            if st.steps.donate:
+                # donation needs de-aliased buffers: init trees share
+                # zero-filled leaves (and constant-cache hits), which a
+                # donating step would otherwise donate twice
+                params = jax.tree.map(jnp.copy, params)
+                opt_state = jax.tree.map(jnp.copy, opt_state)
+            plan0 = st.controller.plan
+            pre = [b for _ in range(self.pretrain_epochs)
+                   for b in st.bench.scenarios[0].train_batches]
+            if self.compiled:
+                # one fused scan per same-shape run of pretrain batches
+                for run in same_shape_runs(pre):
+                    params, opt_state, _ = st.steps.fused_call(
+                        plan0, params, opt_state, run)
+            else:
+                step0 = st.steps.get(plan0)
+                for b in pre:
                     params, opt_state, _ = step0(params, opt_state, as_jnp(b))
             st.reference_params = params  # "initial model before fine-tuning"
             st.executor.load(params, opt_state)
@@ -487,7 +515,7 @@ class ContinualRuntime:
 
         server = InferenceServer(primary_slot.model,
                                  batch_window=self.inference_window,
-                                 on_served=served)
+                                 on_served=served, fused=self.compiled)
         for name, st in slots.items():
             server.register(name, st.model)
             server.publish(st.executor.params, 0.0, slot=name)
@@ -589,6 +617,7 @@ class ContinualRuntime:
             # inference_served (LazyTune decay, scenario detection) lag by
             # at most one window.
             server.expire(ev.time)
+            server.drain()  # fused mode: deliver deferred serves now
             change = pending_change.get(st, False) \
                 and self.boundaries == "detector"
             if (boundary and self.boundaries == "oracle") or change:
@@ -656,6 +685,7 @@ class ContinualRuntime:
             # detection used to.
             st = ev.stream
             settle(ev.time)
+            server.drain()  # fused mode: serve anything deferred first
             probes_fired[0] += 1
             slot = slot_of(st)
             acquire(slot, ev.time, st)
@@ -673,11 +703,38 @@ class ContinualRuntime:
             if confirm is None or confirm(logits):
                 pending_change[st] = True
 
-        scheduler.run(on_data=on_data, on_inference=on_inference,
-                      on_scenario_change=on_scenario_change,
-                      on_probe=on_probe)
+        def on_inference_event(ev: Event) -> None:
+            # compiled but unsegmented (detector mode, or `segment` off):
+            # serve each event's deferred dispatch before the next event,
+            # so detector probes are pushed at the same timeline instant
+            # as on the eager path
+            on_inference(ev)
+            server.drain()
+
+        def on_inference_segment(segment: List[Event]) -> None:
+            # the scheduler hands over a maximal run of consecutive
+            # inference events; per-event bookkeeping (params resolution,
+            # latency/preemption, RNG draws) is unchanged — only the
+            # device dispatch is deferred and fused into one drain
+            for ev in segment:
+                on_inference(ev)
+            server.drain()
+
+        # segment slicing stays off in detector mode: `served` pushes
+        # probe Events at scheduler.now mid-drain, so serving must stay
+        # aligned with the per-event clock
+        segmented = (self.compiled and self.segment
+                     and self.boundaries != "detector")
+        scheduler.run(
+            on_data=on_data,
+            on_inference=on_inference_event if self.compiled
+            else on_inference,
+            on_scenario_change=on_scenario_change, on_probe=on_probe,
+            on_inference_segment=on_inference_segment if segmented
+            else None)
         settle(float("inf"))  # finalize a round still in flight at drain end
         server.flush()
+        server.drain()
         # trailing flush: any buffered data still fine-tunes (no data dropped)
         for slot in slots.values():
             for st in slot.executor.pending_streams:

@@ -26,7 +26,8 @@ import numpy as np
 
 from repro.runtime.costmodel import EdgeCostModel
 from repro.runtime.ledger import DEFAULT_MODEL, CostLedger
-from repro.runtime.train_loop import TrainStepCache, as_jnp
+from repro.runtime.train_loop import (TrainStepCache, as_jnp,
+                                      same_shape_runs)
 
 
 # ---------------------------------------------------------------------------
@@ -82,8 +83,9 @@ class SimSiamHook(RoundHook):
     `unlabeled_fraction`, an image batch is treated as unlabeled and gets a
     SimSiam self-supervised update instead of the supervised step."""
 
-    def __init__(self, unlabeled_fraction: float):
+    def __init__(self, unlabeled_fraction: float, *, donate: bool = True):
         self.unlabeled_fraction = unlabeled_fraction
+        self.donate = donate  # donate params in the jitted semi step
         self.model = None
         self._head = None
         self._step = None
@@ -131,7 +133,10 @@ class SimSiamHook(RoundHook):
                                   - 1e-3 * b.astype(jnp.float32)).astype(a.dtype),
                     p, g)
 
-            self._step = jax.jit(semi_step)
+            # params are rebound by the caller right after the call, so
+            # the input buffer is dead on return — donate it (no-op on CPU)
+            self._step = jax.jit(
+                semi_step, donate_argnums=(0,) if self.donate else ())
         rng = jax.random.PRNGKey(int(np.random.default_rng(0).integers(1 << 30)))
         return self._step(params, self._head, rng, batch["images"])
 
@@ -213,7 +218,9 @@ class FineTuneExecutor:
                  hooks: Sequence[RoundHook] = (),
                  calibrate_cost: bool = True,
                  model_name: str = DEFAULT_MODEL,
-                 preempt_resume_cost_s: float = 0.0):
+                 preempt_resume_cost_s: float = 0.0,
+                 compiled: bool = False,
+                 fuse: bool = True):
         self.steps = steps
         self.cost = cost
         self.ledger = ledger
@@ -221,6 +228,13 @@ class FineTuneExecutor:
         self.rng = rng
         self.hooks = list(hooks)
         self.calibrate_cost = calibrate_cost
+        # compiled hot path (DESIGN.md §12): every supervised update goes
+        # through the scan-based fused step — `fuse` additionally batches
+        # each maximal same-shape run of a round into one dispatch, and
+        # can be dropped per-run (segment-split fallback) without moving
+        # a single bit, since both are the same scan program
+        self.compiled = bool(compiled)
+        self.fuse = bool(fuse)
         # model-slot attribution key for every ledger charge this executor
         # makes (ModelPool runs one executor per slot; single-model runs
         # keep the "default" slot)
@@ -259,17 +273,48 @@ class FineTuneExecutor:
         return sorted(s for s, b in self.buffers.items() if b)
 
     # ---- round -----------------------------------------------------------
-    def _train_batch(self, step, b: dict) -> None:
+    def _own_buffers(self) -> None:
+        """Donating steps consume their inputs. Params escape the
+        executor between rounds — serving lanes hold the published
+        object, `reference_params` is the pretrain result — so before a
+        round's first donating dispatch we take exclusive copies; the
+        escaped aliases stay live and every later dispatch in the round
+        already owns its (freshly produced) buffers. One device copy per
+        round, bitwise identical."""
+        if getattr(self.steps, "donate", False):
+            self.params = jax.tree.map(jnp.copy, self.params)
+            self.opt_state = jax.tree.map(jnp.copy, self.opt_state)
+
+    def _train_batch(self, step, plan, b: dict) -> None:
         """One training iteration: the first hook that claims the batch
-        updates the params; otherwise the plan-aware supervised step."""
+        updates the params; otherwise the plan-aware supervised step
+        (the trip-count-1 fused scan in compiled mode, so per-batch and
+        segment-batched execution are the same program)."""
         jb = as_jnp(b)
         for h in self.hooks:
             handled = h.process_batch(self.params, b, jb)
             if handled is not None:
                 self.params = handled
                 return
+        if self.compiled:
+            self.params, self.opt_state, _ = self.steps.fused_call(
+                plan, self.params, self.opt_state, [b])
+            return
         self.params, self.opt_state, _ = step(self.params,
                                               self.opt_state, jb)
+
+    def _run_batches(self, step, plan, batches: Sequence[dict]) -> None:
+        """Train a round's batches. Compiled hook-free rounds batch each
+        maximal run of same-shape batches into one fused scan dispatch;
+        hooks claim batches one at a time (their RNG draws are order-
+        dependent), so hook-bearing rounds stay per-batch."""
+        if not (self.compiled and self.fuse) or self.hooks:
+            for b in batches:
+                self._train_batch(step, plan, b)
+            return
+        for run in same_shape_runs(batches):
+            self.params, self.opt_state, _ = self.steps.fused_call(
+                plan, self.params, self.opt_state, run)
 
     def _round_cost(self, plan, batches, recompile: int):
         """XLA-measured round FLOPs + (one-shot calibrated) modeled cost."""
@@ -310,6 +355,7 @@ class FineTuneExecutor:
             self.compiled_plans.add(plan)
             recompile = 1
         step = self.steps.get(plan)
+        self._own_buffers()
         batches = self.buffers.pop(stream)
         if self.replay:
             batches.append(self.replay.sample(self.rng))
@@ -317,8 +363,7 @@ class FineTuneExecutor:
             h.on_round_start(self.ledger.rounds)
         if not preemptible:
             # legacy synchronous path — bit-exact with the pre-QoS runtime
-            for b in batches:
-                self._train_batch(step, b)
+            self._run_batches(step, plan, batches)
             flops, t, e, parts = self._round_cost(plan, batches, recompile)
             self.ledger.charge_round(flops=flops, time_s=t, energy_j=e,
                                      parts=parts, stream=stream,
@@ -343,7 +388,7 @@ class FineTuneExecutor:
         n = len(ar.batches)
         target = min(n, int(n * elapsed / max(ar.time_s, 1e-12)))
         while ar.trained < target:
-            self._train_batch(ar.step, ar.batches[ar.trained])
+            self._train_batch(ar.step, ar.plan, ar.batches[ar.trained])
             ar.trained += 1
 
     def _charge_segment(self, ar: ActiveRound, seg_dur: float,
@@ -428,8 +473,10 @@ class FineTuneExecutor:
         ar = self.active_round
         if ar is None or (now is not None and now < ar.end):
             return None
+        # preemption boundaries fall back to per-batch (trip-count-1)
+        # execution of the same scan program — QoS semantics untouched
         while ar.trained < len(ar.batches):
-            self._train_batch(ar.step, ar.batches[ar.trained])
+            self._train_batch(ar.step, ar.plan, ar.batches[ar.trained])
             ar.trained += 1
         self._charge_segment(ar, ar.end - ar.seg_start, final=True)
         self.active_round = None

@@ -46,6 +46,12 @@ import numpy as np
 from repro.runtime.ledger import DEFAULT_MODEL
 from repro.runtime.train_loop import as_jnp, evaluate
 
+# Process-global serving programs: jit(vmap(predict)) keyed on the
+# predict closure itself plus (concat-signature, stack bucket), so every
+# server over the same (memoized) model shares one XLA program — a sweep
+# doesn't re-pay the serving compile per cell.
+_VMAPPED: Dict[Any, Callable] = {}
+
 
 @dataclass
 class _SlotLane:
@@ -81,9 +87,18 @@ class InferenceServer:
     """
 
     def __init__(self, model, *, batch_window: float = 0.0,
-                 on_served: Optional[Callable[[np.ndarray, int], bool]] = None):
+                 on_served: Optional[Callable[[np.ndarray, int], bool]] = None,
+                 fused: bool = False):
         self.batch_window = float(batch_window)
         self.on_served = on_served
+        # compiled hot path (DESIGN.md §12): defer closed groups to a FIFO
+        # and execute them in `drain()` as padded vmapped forwards —
+        # same-shape groups for one (slot, params) stack into a single
+        # dispatch. Recording and `on_served` delivery stay in arrival
+        # order; the composition root drains at every event boundary, so
+        # controller signal timing matches the eager path.
+        self.fused = bool(fused)
+        self._ready: List[List[_Pending]] = []
         # model slots: the single-model path lives entirely in "default";
         # a ModelPool runtime registers one extra lane per slot.
         self._lanes: Dict[str, _SlotLane] = {DEFAULT_MODEL: _SlotLane(model)}
@@ -145,6 +160,7 @@ class InferenceServer:
         genuinely serve the pre-round model — the paper §III-A "outdated
         model" effect."""
         self.flush()
+        self.drain()
         lane = self._lanes[slot]
         if delayed and lane.visible_params is not None:
             lane.latest_params = lane.visible_params
@@ -218,6 +234,9 @@ class InferenceServer:
 
     # ---- execution -------------------------------------------------------
     def _serve(self, group: List[_Pending]) -> None:
+        if self.fused:
+            self._ready.append(group)
+            return
         self.eval_calls += 1
         if len(group) == 1:
             p = group[0]
@@ -239,6 +258,68 @@ class InferenceServer:
                                  np.asarray(p.request["labels"]))
                                 .astype(np.float32)))
             self._record(p, acc, lg)
+
+    def drain(self) -> None:
+        """Execute every deferred group (fused mode; no-op otherwise).
+
+        Groups are concatenated exactly like the eager multi-request path,
+        then same-(slot, params, shape) concats are stacked and run as one
+        `jit(vmap(predict))` dispatch, padded up to a power-of-two group
+        count by repeating the first concat (vmap output is per-example
+        independent, so padding rows slice away without moving a bit).
+        Results are recorded strictly in arrival order."""
+        if not self._ready:
+            return
+        ready, self._ready = self._ready, []
+        concats: List[Dict[str, np.ndarray]] = []
+        stacks: Dict[Any, List[int]] = {}
+        for gi, group in enumerate(ready):
+            if len(group) == 1:
+                batch = {k: np.asarray(v) for k, v in group[0].request.items()}
+            else:
+                batch = {k: np.concatenate([p.request[k] for p in group])
+                         for k in group[0].request}
+            concats.append(batch)
+            sig = tuple(sorted((k, v.shape, str(v.dtype))
+                               for k, v in batch.items()))
+            key = (group[0].slot, id(group[0].params), sig)
+            stacks.setdefault(key, []).append(gi)
+        logits_by_group: Dict[int, np.ndarray] = {}
+        for (slot, _, sig), idxs in stacks.items():
+            first = ready[idxs[0]][0]
+            out = self._forward_stack(first.model, first.params, slot, sig,
+                                      [concats[i] for i in idxs])
+            for row, gi in enumerate(idxs):
+                logits_by_group[gi] = out[row]
+        for gi, group in enumerate(ready):
+            self.eval_calls += 1
+            logits = logits_by_group[gi]
+            offset = 0
+            for p in group:
+                n = len(p.request["labels"])
+                lg = logits[offset:offset + n]
+                offset += n
+                acc = float(np.mean((np.argmax(lg, -1) ==
+                                     np.asarray(p.request["labels"]))
+                                    .astype(np.float32)))
+                self._record(p, acc, lg)
+
+    def _forward_stack(self, model, params, slot, sig,
+                       concats: List[Dict[str, np.ndarray]]) -> np.ndarray:
+        import jax
+        import jax.numpy as jnp
+
+        n = len(concats)
+        bucket = 1 << max(n - 1, 0).bit_length()
+        key = (model.predict, sig, bucket)
+        fwd = _VMAPPED.get(key)
+        if fwd is None:
+            fwd = _VMAPPED[key] = jax.jit(
+                jax.vmap(model.predict, in_axes=(None, 0)))
+        stacked = {k: jnp.stack([jnp.asarray(c[k]) for c in concats]
+                                + [jnp.asarray(concats[0][k])] * (bucket - n))
+                   for k in concats[0]}
+        return np.asarray(fwd(params, stacked))[:n]
 
     def _record(self, p: _Pending, acc: float, logits) -> None:
         self.accs.append(acc)

@@ -32,6 +32,7 @@ OnData = Callable[[Event, bool], None]          # (event, scenario_boundary)
 OnInference = Callable[[Event], None]
 OnScenarioChange = Callable[[int, Event], None]  # (previous_scenario, event)
 OnProbe = Callable[[Event], None]                # detector-driven probe
+OnInferenceSegment = Callable[[list], None]      # maximal run of inferences
 
 
 @dataclass
@@ -159,12 +160,22 @@ class EventScheduler:
     # ---- dispatch --------------------------------------------------------
     def run(self, *, on_data: OnData, on_inference: OnInference,
             on_scenario_change: Optional[OnScenarioChange] = None,
-            on_probe: Optional[OnProbe] = None) -> None:
+            on_probe: Optional[OnProbe] = None,
+            on_inference_segment: Optional[OnInferenceSegment] = None) -> None:
         """Drain the queue in time order, advancing `now` monotonically and
         emitting one callback per event. "probe" events (detector-driven
         drift confirmation, typically pushed mid-drain) go to `on_probe`
         and are dropped when no handler is wired — they carry no payload a
-        generic embedder must not lose."""
+        generic embedder must not lose.
+
+        With `on_inference_segment` wired (the compiled hot path,
+        DESIGN.md §12), each *maximal run of consecutive inference
+        events* — the timeline slice between two non-inference events —
+        is popped in one go and delivered as a single segment, so the
+        handler can fuse the whole run into one device dispatch. Slicing
+        never reorders: the segment's events are exactly the events
+        `on_inference` would have seen, in the same order, and `now` /
+        `dispatched` advance identically."""
         while self._heap:
             _, ev = heapq.heappop(self._heap)
             self.now = max(self.now, ev.time)
@@ -183,5 +194,13 @@ class EventScheduler:
             elif ev.kind == "probe":
                 if on_probe is not None:
                     on_probe(ev)
+            elif on_inference_segment is not None:
+                segment = [ev]
+                while self._heap and self._heap[0][1].kind == "inference":
+                    _, nxt = heapq.heappop(self._heap)
+                    self.dispatched += 1
+                    segment.append(nxt)
+                self.now = max(self.now, segment[-1].time)
+                on_inference_segment(segment)
             else:
                 on_inference(ev)

@@ -167,3 +167,57 @@ def test_wkv_chunked_xla_matches_exact_ref():
                                rtol=5e-3, atol=5e-3)
     np.testing.assert_allclose(np.asarray(s_got), np.asarray(s_want),
                                rtol=5e-3, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# runtime-facing `use_pallas` call-sites (DESIGN.md §12): the *same entry
+# points the serving/probe paths dispatch* — a classifier's `predict`
+# with `cfg.use_pallas` routing attention through the flash kernel, and
+# the drift detector's CKA probe with `use_kernel` — must agree with
+# their XLA forms on interpret-mode CPU.
+
+
+def test_vit_predict_use_pallas_matches_xla():
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.models import build_model
+
+    cfg = get_reduced("deit-tiny")
+    xla = build_model(cfg)
+    pal = build_model(cfg.replace(use_pallas=True))
+    params = xla.init(jax.random.PRNGKey(0))
+    batch = {"images": _randn((4, cfg.image_size, cfg.image_size, 3))}
+    np.testing.assert_allclose(np.asarray(pal.predict(params, batch)),
+                               np.asarray(xla.predict(params, batch)),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_bert_predict_use_pallas_matches_xla():
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.models import build_model
+
+    cfg = get_reduced("bert-base")
+    xla = build_model(cfg)
+    pal = build_model(cfg.replace(use_pallas=True))
+    params = xla.init(jax.random.PRNGKey(1))
+    tokens = jnp.asarray(RNG.integers(0, cfg.vocab_size, size=(4, 32)),
+                         jnp.int32)
+    np.testing.assert_allclose(
+        np.asarray(pal.predict(params, {"tokens": tokens})),
+        np.asarray(xla.predict(params, {"tokens": tokens})),
+        rtol=2e-4, atol=2e-5)
+
+
+def test_core_cka_use_kernel_matches_plain():
+    from repro.core.cka import cka
+
+    x = _randn((130, 64))
+    y = jnp.asarray(0.5 * np.asarray(x, np.float32)
+                    + RNG.normal(size=(130, 64)), jnp.float32)
+    plain = float(cka(x, y))
+    kernel = float(cka(x, y, use_kernel=True))
+    assert abs(plain - kernel) < 1e-3
+    assert abs(float(cka(x, x, use_kernel=True)) - 1.0) < 1e-3
