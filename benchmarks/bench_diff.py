@@ -14,9 +14,13 @@ default-trigger siblings. v5 adds two soft directional gates for the
 compiled hot path: `wall_s` fails beyond 1.5x the baseline cell (0.5s
 absolute floor — wall time is host-measured and noisy) and `recompiles`
 fails when a cell grows more than 2 extra XLA programs (compile-ledger
-churn). Baseline cells — and baseline per-stream/per-model entries —
-that vanish also fail (coverage must never shrink); brand-new cells are
-reported but don't fail.
+churn). v6 extends the same directional gate to the
+per-device attribution columns (device costs/syncs up, device serving
+accuracy down) — and a baseline device entry that vanishes from a cell
+fails, so a fleet quietly shrinking can't land. Baseline cells — and
+baseline per-stream/per-model/per-device entries — that vanish also fail
+(coverage must never shrink); brand-new cells are reported but don't
+fail.
 
 Accuracy gets its own (wider) threshold: cell accuracies average a few
 dozen requests, so XLA-CPU codegen differences between the machine that
@@ -59,7 +63,7 @@ METRIC_DIRECTIONS = {
     "wall_s": "up",
     "recompiles": "up",
 }
-INFO_METRICS = ("rounds", "preemptions", "swaps")
+INFO_METRICS = ("rounds", "preemptions", "swaps", "devices", "syncs")
 
 #: per-metric relative-threshold overrides (`--threshold` covers the
 #: rest): wall_s fails only beyond 1.5x the baseline cell.
@@ -83,8 +87,20 @@ MODEL_METRIC_DIRECTIONS = {
     "avg_inference_acc": "down",
 }
 
+#: per-device attribution metrics (BENCH schema v6): a device's modeled
+#: costs and sync charges regress upward, its serving accuracy downward.
+#: A baseline device entry that vanishes fails outright (`_diff_sub`) —
+#: a fleet quietly shrinking is a coverage regression, not noise.
+DEVICE_METRIC_DIRECTIONS = {
+    "time_s": "up",
+    "energy_j": "up",
+    "flops": "up",
+    "syncs": "up",
+    "avg_inference_acc": "down",
+}
+
 _ABS_FLOOR = {"latency_p50": 1e-3, "latency_p95": 1e-3,
-              "wall_s": 0.5, "recompiles": 2}
+              "wall_s": 0.5, "recompiles": 2, "syncs": 2}
 
 
 def cell_key(cell: Dict) -> Tuple[str, str, int, str]:
@@ -174,6 +190,8 @@ def diff_cells(base_doc: Dict, new_doc: Dict, *, threshold: float = 0.05,
         _diff_sub(label, "per_stream", b, n, STREAM_METRIC_DIRECTIONS,
                   threshold, acc_threshold, regressions, infos)
         _diff_sub(label, "per_model", b, n, MODEL_METRIC_DIRECTIONS,
+                  threshold, acc_threshold, regressions, infos)
+        _diff_sub(label, "per_device", b, n, DEVICE_METRIC_DIRECTIONS,
                   threshold, acc_threshold, regressions, infos)
         for metric in INFO_METRICS:
             if b.get(metric) != n.get(metric) and metric in b:

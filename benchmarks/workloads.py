@@ -37,13 +37,16 @@ from repro.runtime import (RuntimeConfig, SlotConfig, edgeol_session,
 from repro.runtime.modelpool import ModelPool, ModelSlot
 from repro.workloads import WorkloadSpec, presets
 
-#: v5: cells run on the compiled hot path by default (segment-batched
-#: event loop, donated scan steps, jitted serving; DESIGN.md §12) and
-#: carry a `compiled` flag; `wall_s` + `recompiles` become directionally
-#: gated in bench_diff. (v4 added the PolicyStack `trigger_policy`
-#: column + priority-weighted qos cells; v3 the ModelPool columns; v2
-#: QoS — `preemptible`/`preemptions` + per-stream latency.)
-SCHEMA_VERSION = 5
+#: v6: DeviceFleet columns (DESIGN.md §13) — every cell carries
+#: `devices`/`syncs` plus a validated `per_device` attribution dict
+#: (summing to the cell totals like per_stream/per_model), and the sweep
+#: adds `fleet` preset cells running hundreds of streams across a
+#: multi-device fleet with federated aggregation. (v5 moved cells to the
+#: compiled hot path and gated `wall_s`/`recompiles`; v4 added the
+#: PolicyStack `trigger_policy` column + priority-weighted qos cells; v3
+#: the ModelPool columns; v2 QoS — `preemptible`/`preemptions` +
+#: per-stream latency.)
+SCHEMA_VERSION = 6
 METHODS = PAPER_METHODS
 DEFAULT_OUT = os.path.abspath(
     os.path.join(os.path.dirname(__file__), "..", "BENCH_workloads.json"))
@@ -56,7 +59,7 @@ MODALITY_ARCH = {"nlp": "bert-base"}
 CELL_FIELDS = ("acc", "time_s", "energy_j", "tflops", "rounds",
                "recompiles", "events", "streams", "wall_s",
                "preemptible", "preemptions", "models", "swaps",
-               "compiled")
+               "compiled", "devices", "syncs")
 
 #: String fields every cell must carry (schema contract, v4).
 CELL_STR_FIELDS = ("workload", "method", "trigger_policy")
@@ -69,6 +72,11 @@ STREAM_FIELDS = ("time_s", "energy_j", "flops", "rounds", "preemptions",
 #: Numeric fields every per-model attribution cell must carry (v3).
 MODEL_FIELDS = ("time_s", "energy_j", "flops", "rounds", "swaps",
                 "avg_inference_acc", "inferences")
+
+#: Numeric fields every per-device attribution cell must carry (v6).
+DEVICE_FIELDS = ("time_s", "energy_j", "flops", "rounds", "swaps",
+                 "syncs", "avg_inference_acc", "inferences", "streams",
+                 "utilization")
 
 
 # ---------------------------------------------------------------------------
@@ -115,12 +123,15 @@ def workload_config(arch: str, workload, method: str, *, seed: int = 0,
                     trigger_policy: str = "default",
                     workload_scale: Optional[Dict] = None,
                     compiled: bool = True,
-                    use_pallas: bool = False) -> RuntimeConfig:
+                    use_pallas: bool = False,
+                    devices=(), routing: str = "static",
+                    aggregate_every: float = 0.0) -> RuntimeConfig:
     """The declarative session config of one sweep cell. `workload` is a
     preset name or an already-scaled `WorkloadSpec`; paper methods get
     their policy stacks per slot (baselines keep the default stack and
     inject controllers at session build). Cells run on the compiled hot
-    path (DESIGN.md §12) unless `compiled=False`."""
+    path (DESIGN.md §12) unless `compiled=False`. `devices`/`routing`/
+    `aggregate_every` (v6) turn the cell into a DeviceFleet run."""
     if isinstance(workload, WorkloadSpec):
         spec = workload
     else:
@@ -140,7 +151,9 @@ def workload_config(arch: str, workload, method: str, *, seed: int = 0,
         seed=seed, pretrain_epochs=pretrain_epochs,
         inference_batch=inference_batch, preemptible=preemptible,
         memory_budget_mb=memory_budget_mb,
-        compiled=compiled, use_pallas=use_pallas)
+        compiled=compiled, use_pallas=use_pallas,
+        devices=tuple(devices), routing=routing,
+        aggregate_every=aggregate_every)
 
 
 def run_workload(arch: str, spec: WorkloadSpec, method: str, *,
@@ -152,14 +165,19 @@ def run_workload(arch: str, spec: WorkloadSpec, method: str, *,
                  trigger_policy: str = "default",
                  workload_scale: Optional[Dict] = None,
                  compiled: bool = True,
-                 use_pallas: bool = False) -> Dict:
+                 use_pallas: bool = False,
+                 devices=(), routing: str = "static",
+                 aggregate_every: float = 0.0) -> Dict:
     """One (workload, controller) cell: full runtime run, paper metrics +
-    per-stream and per-model attribution (incl. p50/p95 serving latency).
-    `preemptible` turns on QoS round preemption; `trigger_policy`
-    ("default" | "priority-weighted") picks the paper methods' trigger
-    (BENCH v4). A spec naming more than one modality (the faithful
-    `mixed` preset) runs on a `ModelPool` — one model slot per modality
-    sharing the device under `memory_budget_mb` (0 = unlimited)."""
+    per-stream, per-model and per-device attribution (incl. p50/p95
+    serving latency). `preemptible` turns on QoS round preemption;
+    `trigger_policy` ("default" | "priority-weighted") picks the paper
+    methods' trigger (BENCH v4). A spec naming more than one modality
+    (the faithful `mixed` preset) runs on a `ModelPool` — one model slot
+    per modality sharing the device under `memory_budget_mb` (0 =
+    unlimited). `devices`/`routing`/`aggregate_every` (v6) run the cell
+    on a DeviceFleet — streams routed across the device list, fine-tuned
+    deltas merged federated-style every `aggregate_every` seconds."""
     cfg = workload_config(arch, spec, method, seed=seed,
                           batch_size=batch_size,
                           pretrain_epochs=pretrain_epochs,
@@ -168,7 +186,9 @@ def run_workload(arch: str, spec: WorkloadSpec, method: str, *,
                           memory_budget_mb=memory_budget_mb,
                           trigger_policy=trigger_policy,
                           workload_scale=workload_scale,
-                          compiled=compiled, use_pallas=use_pallas)
+                          compiled=compiled, use_pallas=use_pallas,
+                          devices=devices, routing=routing,
+                          aggregate_every=aggregate_every)
     t0 = time.time()
     if method in PAPER_METHODS:
         # fully declarative: benchmarks, pool, controllers and the event
@@ -207,9 +227,11 @@ def run_workload(arch: str, spec: WorkloadSpec, method: str, *,
         "rounds": res.rounds, "recompiles": res.recompiles,
         "preemptible": int(preemptible), "preemptions": res.preemptions,
         "swaps": res.swaps, "compiled": int(compiled),
+        "devices": len(res.per_device), "syncs": res.syncs,
         "wall_s": round(time.time() - t0, 2),
         "per_stream": {str(k): v for k, v in res.per_stream.items()},
         "per_model": dict(res.per_model),
+        "per_device": dict(res.per_device),
         # multi-model cells record the pool manifest (slot footprints as
         # measured at run start + the budget the cell ran under)
         **({"pool": rt.pool.describe()} if rt.pool is not None else {}),
@@ -223,18 +245,24 @@ def run_workload(arch: str, spec: WorkloadSpec, method: str, *,
 def sweep(*, quick: bool = True, arch: str = "mobilenetv2", seed: int = 0,
           workload_names: Optional[Sequence[str]] = None,
           methods: Sequence[str] = METHODS) -> Dict:
-    scale = (dict(batches_per_scenario=4, inferences=10, num_scenarios=2)
+    scale = (dict(batches_per_scenario=4, inferences=10, num_scenarios=2,
+                  fleet_streams=6)
              if quick else
-             dict(batches_per_scenario=8, inferences=24, num_scenarios=3))
+             dict(batches_per_scenario=8, inferences=24, num_scenarios=3,
+                  fleet_streams=24))
+    # the fleet cell's device count (v6): a few devices at CI scale, a
+    # dozen for full local runs (the preset itself scales to hundreds of
+    # streams via `fleet_streams`)
+    fleet_size = 3 if quick else 12
     specs = presets(seed=seed, **scale)
     names = list(workload_names) if workload_names else list(specs)
     cells: List[Dict] = []
 
-    def one(spec, method, preemptible, trigger_policy, base):
+    def one(spec, method, preemptible, trigger_policy, base, **fleet_kw):
         cell = run_workload(arch, spec, method, seed=seed,
                             preemptible=preemptible,
                             trigger_policy=trigger_policy,
-                            workload_scale=scale)
+                            workload_scale=scale, **fleet_kw)
         if base is None:
             base = cell
         cell["time_norm"] = cell["time_s"] / max(base["time_s"], 1e-9)
@@ -242,7 +270,8 @@ def sweep(*, quick: bool = True, arch: str = "mobilenetv2", seed: int = 0,
                                / max(base["energy_j"], 1e-9))
         cells.append(cell)
         tag = ("/qos" if preemptible else "") + \
-            ("/pw" if trigger_policy == "priority-weighted" else "")
+            ("/pw" if trigger_policy == "priority-weighted" else "") + \
+            (f"/x{cell['devices']}" if cell["devices"] > 1 else "")
         print(f"workloads,{spec.name}/{method}{tag},"
               f"acc={cell['acc']:.4f} "
               f"time={cell['time_s']:.1f}s "
@@ -250,12 +279,27 @@ def sweep(*, quick: bool = True, arch: str = "mobilenetv2", seed: int = 0,
               f"rounds={cell['rounds']} "
               f"preempt={cell['preemptions']} "
               f"models={cell['models']} swaps={cell['swaps']} "
+              f"devices={cell['devices']} syncs={cell['syncs']} "
               f"wall={cell['wall_s']:.0f}s",
               flush=True)
         return base
 
     for name in names:
         spec = specs[name]
+        if name == "fleet":
+            # DeviceFleet cell (v6): one method (etuner), many streams
+            # routed least-loaded across a heterogeneous fleet, federated
+            # merges every quarter scenario span. Too many streams for
+            # the full method x workload product — it gets its own cell
+            # and validate_bench exempts it from method coverage.
+            from repro.runtime import fleet_devices
+            one(spec, "etuner", False, "default", None,
+                devices=fleet_devices(fleet_size, seed=seed,
+                                      speed_spread=0.4,
+                                      energy_spread=0.2),
+                routing="least-loaded",
+                aggregate_every=spec.scenario_span / 4.0)
+            continue
         # prioritized presets (qos) sweep both QoS modes so the artifact
         # records the preemption latency win next to its baseline
         prioritized = any(s.priority for s in spec.streams)
@@ -337,6 +381,21 @@ def validate_bench(doc: Dict, *, min_workloads: int = 3,
                             f"cell {i} model {mid}: field {f!r} missing "
                             f"or not a non-negative finite number "
                             f"(got {v!r})")
+        pd = cell.get("per_device")
+        if not isinstance(pd, dict) or not pd:
+            errors.append(f"cell {i}: missing per_device attribution (v6)")
+        else:
+            if len(pd) != cell.get("devices"):
+                errors.append(f"cell {i}: devices={cell.get('devices')!r} "
+                              f"but per_device has {len(pd)} entries")
+            for did, dc in pd.items():
+                for f in DEVICE_FIELDS:
+                    v = dc.get(f) if isinstance(dc, dict) else None
+                    if not isinstance(v, (int, float)) or v != v or v < 0:
+                        errors.append(
+                            f"cell {i} device {did}: field {f!r} missing "
+                            f"or not a non-negative finite number "
+                            f"(got {v!r})")
         if "workload" not in cell or "method" not in cell:
             continue
         seen.setdefault(cell["workload"], set()).add(cell["method"])
@@ -344,6 +403,8 @@ def validate_bench(doc: Dict, *, min_workloads: int = 3,
         errors.append(f"only {len(seen)} workload(s) covered; "
                       f"need >= {min_workloads}")
     for wl, ms in seen.items():
+        if wl == "fleet":
+            continue  # v6: the fleet preset runs one dedicated cell
         missing = set(methods) - ms
         if missing:
             errors.append(f"workload {wl!r}: missing controllers "
@@ -354,6 +415,12 @@ def validate_bench(doc: Dict, *, min_workloads: int = 3,
     if any(wl == "qos" for wl in seen) and not pw:
         errors.append("qos preset present but no priority-weighted "
                       "trigger cell (v4)")
+    # v6: a fleet preset cell must really be multi-device
+    fleet_cells = [c for c in cells if c.get("workload") == "fleet"]
+    if "fleet" in seen and not any(
+            c.get("devices", 0) >= 2 for c in fleet_cells):
+        errors.append("fleet preset present but no cell with >= 2 "
+                      "devices (v6)")
     return errors
 
 

@@ -15,7 +15,7 @@ would call around each step."""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -37,8 +37,14 @@ class HostStat:
 
 
 class StragglerTracker:
-    def __init__(self, num_hosts: int, config: StragglerConfig = StragglerConfig()):
-        self.cfg = config
+    def __init__(self, num_hosts: int,
+                 config: Optional[StragglerConfig] = None):
+        # NOTE: the config default must be built per instance — a
+        # `config=StragglerConfig()` default would be evaluated once at
+        # function definition and *shared by every tracker* (mutable
+        # dataclass), so tuning one tracker's thresholds would silently
+        # retune all of them
+        self.cfg = config if config is not None else StragglerConfig()
         self.hosts: Dict[int, HostStat] = {h: HostStat() for h in range(num_hosts)}
         self.evicted: List[int] = []
 

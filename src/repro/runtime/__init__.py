@@ -1,13 +1,19 @@
-from repro.runtime.config import (HookSpec, RuntimeConfig, SlotConfig,
-                                  build_hook, materialize_stream_benchmarks)
+from repro.runtime.config import (DeviceConfig, HookSpec, RuntimeConfig,
+                                  SlotConfig, build_hook,
+                                  materialize_stream_benchmarks)
 from repro.runtime.continual import (ContinualRuntime, RunResult,
                                      edgeol_session)
-from repro.runtime.costmodel import EdgeCostModel, PodCostModel
+from repro.runtime.costmodel import EdgeCostModel, PodCostModel, scale_cost
+from repro.runtime.device import DeviceRuntime
 from repro.runtime.executor import (FakeQuantHook, FineTuneExecutor,
                                     ReplayBuffer, RoundHook, RoundReport,
                                     SimSiamHook)
+from repro.runtime.fleet import (FLEET_STREAM, ROUTING_POLICIES, DeviceFleet,
+                                 LeastLoaded, RoutingPolicy, StaticAffinity,
+                                 fleet_devices)
 from repro.runtime.inference import InferenceServer
-from repro.runtime.ledger import (BREAKDOWN_KEYS, DEFAULT_MODEL, MODEL_KEYS,
+from repro.runtime.ledger import (BREAKDOWN_KEYS, DEFAULT_DEVICE,
+                                  DEFAULT_MODEL, DEVICE_KEYS, MODEL_KEYS,
                                   STREAM_KEYS, CostLedger)
 from repro.runtime.modelpool import ModelPool, ModelSlot
 from repro.runtime.scheduler import EventScheduler
@@ -17,6 +23,9 @@ __all__ = ["EdgeCostModel", "PodCostModel", "ContinualRuntime", "RunResult",
            "TrainStepCache", "evaluate", "EventScheduler", "InferenceServer",
            "FineTuneExecutor", "ReplayBuffer", "RoundHook", "RoundReport",
            "SimSiamHook", "FakeQuantHook", "CostLedger", "BREAKDOWN_KEYS",
-           "STREAM_KEYS", "MODEL_KEYS", "DEFAULT_MODEL", "ModelPool",
-           "ModelSlot", "RuntimeConfig", "SlotConfig", "HookSpec",
-           "edgeol_session", "build_hook", "materialize_stream_benchmarks"]
+           "STREAM_KEYS", "MODEL_KEYS", "DEVICE_KEYS", "DEFAULT_MODEL",
+           "DEFAULT_DEVICE", "ModelPool", "ModelSlot", "RuntimeConfig",
+           "SlotConfig", "HookSpec", "DeviceConfig", "edgeol_session",
+           "build_hook", "materialize_stream_benchmarks", "scale_cost",
+           "DeviceRuntime", "DeviceFleet", "RoutingPolicy", "StaticAffinity",
+           "LeastLoaded", "ROUTING_POLICIES", "FLEET_STREAM", "fleet_devices"]

@@ -39,7 +39,8 @@ from repro.runtime.executor import FakeQuantHook, RoundHook, SimSiamHook
 #: workload_scale keys forwarded to `repro.workloads.presets` (plus
 #: `batch_size`, consumed by per-stream benchmark materialization).
 WORKLOAD_SCALE_KEYS = ("batches_per_scenario", "inferences",
-                       "num_scenarios", "scenario_span", "batch_size")
+                       "num_scenarios", "scenario_span", "batch_size",
+                       "fleet_streams")
 
 BOUNDARY_MODES = ("oracle", "detector")
 
@@ -141,6 +142,54 @@ class SlotConfig:
         return cls(**kw)
 
 
+@dataclass(frozen=True)
+class DeviceConfig:
+    """One fleet device (DESIGN.md §13): a name plus its hardware envelope
+    relative to the reference `EdgeCostModel` device. `speed_scale`
+    multiplies throughput (2.0 = rounds finish in half the time),
+    `energy_scale` multiplies both power draws (0.5 = half the joules per
+    second), and `memory_budget_mb` caps the device's ModelPool residency
+    (0.0 = unbounded, like the single-device default)."""
+    name: str
+    speed_scale: float = 1.0
+    energy_scale: float = 1.0
+    memory_budget_mb: float = 0.0
+
+    def validate(self, context: str = "device") -> "DeviceConfig":
+        if not self.name or not isinstance(self.name, str):
+            raise ValueError(f"{context}: name must be a non-empty string")
+        for fname in ("speed_scale", "energy_scale"):
+            if getattr(self, fname) <= 0:
+                raise ValueError(f"{context} {self.name!r}: {fname} must "
+                                 f"be > 0")
+        if self.memory_budget_mb < 0:
+            raise ValueError(f"{context} {self.name!r}: memory_budget_mb "
+                             f"must be >= 0")
+        return self
+
+    def to_dict(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {"name": self.name}
+        if self.speed_scale != 1.0:
+            out["speed_scale"] = self.speed_scale
+        if self.energy_scale != 1.0:
+            out["energy_scale"] = self.energy_scale
+        if self.memory_budget_mb:
+            out["memory_budget_mb"] = self.memory_budget_mb
+        return out
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "DeviceConfig":
+        if not isinstance(d, dict) or "name" not in d:
+            raise ValueError(f"a device config must be a dict with a "
+                             f"'name' key (got {d!r})")
+        valid = {"name", "speed_scale", "energy_scale", "memory_budget_mb"}
+        unknown = set(d) - valid
+        if unknown:
+            raise ValueError(f"device config: unknown key(s) "
+                             f"{sorted(unknown)}; valid: {sorted(valid)}")
+        return cls(**d)
+
+
 def _default_slots() -> Dict[str, SlotConfig]:
     return {"default": SlotConfig()}
 
@@ -168,6 +217,13 @@ class RuntimeConfig:
     # route attention forwards and the SimFreeze CKA probe through the
     # Pallas kernels (interpret mode on CPU, so CI runs them)
     use_pallas: bool = False
+    # fleet (DESIGN.md §13): the devices streams route across (empty =
+    # one implicit default device, the legacy single-device session),
+    # the stream->device routing policy, and the cross-device delta-merge
+    # period in timeline seconds (0.0 = never aggregate)
+    devices: Tuple[DeviceConfig, ...] = ()
+    routing: str = "static"
+    aggregate_every: float = 0.0
 
     # ---- validation ------------------------------------------------------
     def validate(self) -> "RuntimeConfig":
@@ -198,9 +254,22 @@ class RuntimeConfig:
         if self.inference_batch < 1:
             raise ValueError("inference_batch must be >= 1")
         for fname in ("inference_window", "preempt_resume_cost_s",
-                      "memory_budget_mb"):
+                      "memory_budget_mb", "aggregate_every"):
             if getattr(self, fname) < 0:
                 raise ValueError(f"{fname} must be >= 0")
+        names = [dc.name for dc in self.devices]
+        if len(set(names)) != len(names):
+            raise ValueError(f"device names must be unique (got {names})")
+        for dc in self.devices:
+            if not isinstance(dc, DeviceConfig):
+                raise ValueError(f"devices entries must be DeviceConfig "
+                                 f"(got {type(dc).__name__})")
+            dc.validate()
+        from repro.runtime.fleet import ROUTING_POLICIES
+
+        if self.routing not in ROUTING_POLICIES:
+            raise ValueError(f"unknown routing policy {self.routing!r}; "
+                             f"known: {sorted(ROUTING_POLICIES)}")
         return self
 
     # ---- serialization ---------------------------------------------------
@@ -223,6 +292,12 @@ class RuntimeConfig:
             out["workload"] = self.workload
             if self.workload_scale:
                 out["workload_scale"] = dict(self.workload_scale)
+        if self.devices:
+            out["devices"] = [dc.to_dict() for dc in self.devices]
+        if self.routing != "static":
+            out["routing"] = self.routing
+        if self.aggregate_every:
+            out["aggregate_every"] = self.aggregate_every
         return out
 
     @classmethod
@@ -233,7 +308,7 @@ class RuntimeConfig:
                  "replay_batches", "pretrain_epochs", "inference_batch",
                  "calibrate_cost", "inference_window", "preemptible",
                  "preempt_resume_cost_s", "memory_budget_mb", "compiled",
-                 "use_pallas"}
+                 "use_pallas", "devices", "routing", "aggregate_every"}
         unknown = set(d) - valid
         if unknown:
             raise ValueError(f"runtime config: unknown key(s) "
@@ -244,6 +319,9 @@ class RuntimeConfig:
                 raise ValueError("runtime config: 'slots' must be a dict")
             kw["slots"] = {n: SlotConfig.from_dict(s)
                            for n, s in kw["slots"].items()}
+        if "devices" in kw:
+            kw["devices"] = tuple(DeviceConfig.from_dict(dc)
+                                  for dc in kw["devices"])
         return cls(**kw).validate()
 
 
@@ -459,4 +537,6 @@ def resolve_session(cfg: RuntimeConfig, *, model=None, benchmark=None,
         preemptible=cfg.preemptible,
         preempt_resume_cost_s=cfg.preempt_resume_cost_s,
         model_pool=model_pool, compiled=cfg.compiled,
-        use_pallas=cfg.use_pallas, session_events=session_events)
+        use_pallas=cfg.use_pallas, session_events=session_events,
+        devices=cfg.devices, routing=cfg.routing,
+        aggregate_every=cfg.aggregate_every)

@@ -59,26 +59,19 @@ import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.policies import adapt_controller
 from repro.data.arrivals import Event, build_timeline
 from repro.data.streams import ContinualBenchmark
 from repro.optim import AdamWConfig
-from repro.runtime.config import (HookSpec, RuntimeConfig, SlotConfig,
-                                  resolve_session)
-from repro.runtime.costmodel import EdgeCostModel
+from repro.runtime.config import (DeviceConfig, HookSpec, RuntimeConfig,
+                                  SlotConfig, resolve_session)
+from repro.runtime.costmodel import EdgeCostModel, scale_cost
 from repro.runtime.executor import (FineTuneExecutor, ReplayBuffer,
                                     RoundHook, fake_quant, quantized_model)
-from repro.runtime.inference import InferenceServer
-from repro.runtime.ledger import (DEFAULT_MODEL, MODEL_KEYS, STREAM_KEYS,
-                                  CostLedger)
-from repro.runtime.modelpool import ModelPool, tree_mb
-from repro.runtime.scheduler import EventScheduler
-from repro.runtime.train_loop import (TrainStepCache, as_jnp, evaluate,
-                                     make_optimizer_state, same_shape_runs)
+from repro.runtime.ledger import DEFAULT_DEVICE, DEFAULT_MODEL, CostLedger
+from repro.runtime.modelpool import ModelPool
+from repro.runtime.train_loop import TrainStepCache
 
 # legacy aliases (pre-decomposition import sites)
 _fake_quant = fake_quant
@@ -105,10 +98,16 @@ class RunResult:
     # "default" slot): slot -> {time_s, energy_j, flops, rounds, swaps,
     # avg_inference_acc, inferences}
     per_model: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    # per-device attribution (DeviceFleet; single-device runs report one
+    # "dev0"): device -> {time_s, energy_j, flops, rounds, swaps, syncs,
+    # avg_inference_acc, inferences, streams, utilization, evicted}
+    per_device: Dict[str, Dict[str, float]] = field(default_factory=dict)
     # QoS: total round splits absorbed by lower-priority streams' rounds
     preemptions: int = 0
     # ModelPool: total cold-slot swap-ins charged to the run
     swaps: int = 0
+    # DeviceFleet: per-device cross-device sync charges (federated merges)
+    syncs: int = 0
     # detector mode: drift-confirmation probe passes fired
     probes: int = 0
 
@@ -210,7 +209,8 @@ class ContinualRuntime:
               inference_batch, calibrate_cost, inference_window, hooks,
               slot_hooks, stream_benchmarks, controller_factory,
               preemptible, preempt_resume_cost_s, model_pool,
-              compiled=False, use_pallas=False, session_events=None):
+              compiled=False, use_pallas=False, session_events=None,
+              devices=(), routing="static", aggregate_every=0.0):
         # ModelPool construction path: the pool's slots carry the models,
         # benchmarks and (optionally) controllers; model/benchmark/
         # controller may be None and default to the first slot's. Slot
@@ -273,6 +273,17 @@ class ContinualRuntime:
             k: list(v) for k, v in (slot_hooks or {}).items()}
         for h in self.hooks:
             self.model = h.bind(self.model)
+        # DeviceFleet knobs (DESIGN.md §13): device specs, initial stream
+        # routing and the federated aggregation period. Empty `devices`
+        # means a fleet of one reference device — the legacy session.
+        self.devices = tuple(devices or ())
+        self.routing = routing
+        self.aggregate_every = float(aggregate_every)
+        # optional straggler-mitigation config, picked up by the fleet
+        # (None = StragglerConfig defaults)
+        self.straggler_config = None
+        # the DeviceFleet the last run() drove (live handle for tests)
+        self.fleet = None
         # a config-built session may carry its workload's compiled event
         # timeline; run() replays it when no explicit events are passed
         self._session_events: Optional[List[Event]] = session_events
@@ -288,19 +299,27 @@ class ContinualRuntime:
         return self._session_events
 
     # -------------------------------------------------------------------
-    def _build_slots(self, ledger: CostLedger,
-                     rng: np.random.Generator) -> Dict[str, _SlotState]:
-        """Assemble per-slot runtime state. The single-model path builds
-        exactly one "default" slot wired to the runtime's own
-        model/steps/cost and the *shared* rng — preserving the legacy RNG
-        consumption order bit-for-bit."""
+    def _build_slots(self, ledger: CostLedger, rng: np.random.Generator,
+                     device: Optional[DeviceConfig] = None
+                     ) -> Dict[str, _SlotState]:
+        """Assemble per-slot runtime state for one device (`device=None`
+        means the reference "dev0" at identity cost scales — a bitwise
+        no-op on every cost figure). The single-model path builds exactly
+        one "default" slot wired to the runtime's own model/steps/cost
+        and the *shared* rng — preserving the legacy RNG consumption
+        order bit-for-bit."""
+        spec = device if device is not None else DeviceConfig(DEFAULT_DEVICE)
         slots: Dict[str, _SlotState] = {}
         if self.pool is None:
             replay = ReplayBuffer(
                 self.bench.scenarios[0].train_batches[:self.replay_batches])
             executor = FineTuneExecutor(
-                self.steps, self.cost, ledger, replay, rng=rng,
+                self.steps,
+                scale_cost(self.cost, speed=spec.speed_scale,
+                           energy=spec.energy_scale),
+                ledger, replay, rng=rng,
                 hooks=self.hooks, calibrate_cost=self.calibrate_cost,
+                device_name=spec.name, speed_scale=spec.speed_scale,
                 preempt_resume_cost_s=self.preempt_resume_cost_s,
                 compiled=self.compiled, fuse=self.segment)
             slots[DEFAULT_MODEL] = _SlotState(
@@ -329,10 +348,14 @@ class ContinualRuntime:
             replay = ReplayBuffer(
                 slot.benchmark.scenarios[0].train_batches[:self.replay_batches])
             executor = FineTuneExecutor(
-                steps, slot.cost, ledger, replay,
+                steps,
+                scale_cost(slot.cost, speed=spec.speed_scale,
+                           energy=spec.energy_scale),
+                ledger, replay,
                 rng=np.random.default_rng([self.seed, i]),
                 hooks=hooks, calibrate_cost=self.calibrate_cost,
-                model_name=slot.name,
+                model_name=slot.name, device_name=spec.name,
+                speed_scale=spec.speed_scale,
                 preempt_resume_cost_s=self.preempt_resume_cost_s,
                 compiled=self.compiled, fuse=self.segment)
             slots[slot.name] = _SlotState(slot.name, model,
@@ -364,44 +387,6 @@ class ContinualRuntime:
                 f"supplied (explicit or from the session's workload "
                 f"config)", UserWarning, stacklevel=2)
         bench = self.bench
-        rng = np.random.default_rng(self.seed)
-        ledger = CostLedger()
-        slots = self._build_slots(ledger, rng)
-        primary_slot = next(iter(slots.values()))
-        primary_ctrl = self.controller if self.controller is not None \
-            else primary_slot.controller
-
-        # --- pretrain every slot on its scenario 0 (not cost-accounted;
-        # paper §V-A) and measure slot memory footprints -----------------
-        for st in slots.values():
-            params = st.model.init(jax.random.PRNGKey(self.seed))
-            opt_state = make_optimizer_state(st.model, self.opt_cfg, params)
-            if st.steps.donate:
-                # donation needs de-aliased buffers: init trees share
-                # zero-filled leaves (and constant-cache hits), which a
-                # donating step would otherwise donate twice
-                params = jax.tree.map(jnp.copy, params)
-                opt_state = jax.tree.map(jnp.copy, opt_state)
-            plan0 = st.controller.plan
-            pre = [b for _ in range(self.pretrain_epochs)
-                   for b in st.bench.scenarios[0].train_batches]
-            if self.compiled:
-                # one fused scan per same-shape run of pretrain batches
-                for run in same_shape_runs(pre):
-                    params, opt_state, _ = st.steps.fused_call(
-                        plan0, params, opt_state, run)
-            else:
-                step0 = st.steps.get(plan0)
-                for b in pre:
-                    params, opt_state, _ = step0(params, opt_state, as_jnp(b))
-            st.reference_params = params  # "initial model before fine-tuning"
-            st.executor.load(params, opt_state)
-        if self.pool is not None:
-            for name, st in slots.items():
-                self.pool.set_memory(name, tree_mb(st.executor.params,
-                                                   st.executor.opt_state))
-            self.pool.warm()
-
         if events is None and self._session_events is not None:
             # config-built session: replay the workload's compiled timeline
             events = list(self._session_events)
@@ -417,366 +402,16 @@ class ContinualRuntime:
             events = [dataclasses.replace(e, scenario=e.scenario + 1)
                       for e in events]
 
-        # --- compose the subsystems -------------------------------------
-        # per-stream policy state: stream 0 is the primary controller;
-        # extra streams (multi-stream workloads) get their own controller
-        # from the factory, or share the primary one. Streams *absent*
-        # from the start-of-run event list (e.g. a probe Event pushed onto
-        # the live scheduler mid-drain — detector-driven probes) fall back
-        # to the primary controller/benchmark via the accessors below
-        # instead of KeyError-ing the callbacks. Under a ModelPool a
-        # stream's controller is its *slot's* (streams sharing a model
-        # share the policy that owns its freeze plan).
-        stream_ids = sorted({e.stream for e in events}) or [0]
-        stream_slot: Dict[int, str] = {}
-        if self.pool is not None:
-            for e in events:
-                stream_slot.setdefault(e.stream, e.modality)
-            for st_id, name in stream_slot.items():
-                self.pool.slot(name)  # raise early on an unknown modality
+        # --- delegate to the fleet (DESIGN.md §13): the default session
+        # is a DeviceFleet of one reference device, whose device 0 is
+        # built through the exact legacy code path — the golden regression
+        # pins single-device runs bit-for-bit. `RuntimeConfig.devices` /
+        # `routing` / `aggregate_every` turn the same session into a
+        # multi-device one.
+        from repro.runtime.fleet import DeviceFleet
 
-        def slot_of(st: int) -> _SlotState:
-            return slots.get(stream_slot.get(st, primary_slot.name),
-                             primary_slot)
-
-        controllers: Dict[int, Any] = {}
-        for st in stream_ids:
-            if self.pool is not None:
-                controllers[st] = slot_of(st).controller
-            elif st == 0 or self.controller_factory is None:
-                controllers[st] = primary_ctrl
-            else:
-                controllers[st] = self.controller_factory(st)
-        # monolithic controllers predating the staleness/priority keywords
-        # keep working: wrap them so the drive loop can always pass the
-        # full signal set (same objects underneath — state is shared)
-        controllers = {st: adapt_controller(c)
-                       for st, c in controllers.items()}
-        primary_ctrl = adapt_controller(primary_ctrl)
-
-        def ctrl_for(st: int):
-            return controllers.get(st, primary_ctrl)
-
-        def bench_for(st: int) -> ContinualBenchmark:
-            b = self.stream_benchmarks.get(st)
-            return b if b is not None else slot_of(st).bench
-
-        # QoS: a stream's priority rides on its events (StreamSpec.priority
-        # -> Event.priority); a round reserves the device at its stream's
-        # priority, so only strictly-higher-priority arrivals can split it.
-        stream_priority: Dict[int, int] = {st: 0 for st in stream_ids}
-        for e in events:
-            stream_priority[e.stream] = max(stream_priority[e.stream],
-                                            e.priority)
-        scheduler = EventScheduler(events)
-        # live handle: controller callbacks / tests may push events onto
-        # the running timeline (mid-drain push is supported)
-        self.scheduler = scheduler
-        pending_change = {st: False for st in stream_ids}
-        # probes_pushed numbers probe Events; probes_fired counts the ones
-        # actually dispatched (a detection during the post-drain flush
-        # pushes onto an already-drained scheduler and never runs)
-        probes_pushed = [0]
-        probes_fired = [0]
-        # per-stream policy latches, owned by the runtime — NOT stored on
-        # the controller object: streams may share one controller (no
-        # controller_factory), and the first stream's start_scenario must
-        # not suppress every other stream's
-        scenario_started: Dict[int, bool] = {}
-        # per-stream staleness: wall-clock since the stream's last round
-        # completed (run start counts as "fresh"), fed to should_trigger
-        # so priority-aware controllers can weigh starvation
-        last_round_end: Dict[int, float] = {}
-        # scenario snapshot at round launch: a lazily-finalized
-        # (preemptible) round must validate against the scenario whose
-        # batches it trained, not whatever the stream drifted to by the
-        # time the timeline passes the reservation's end
-        launch_scenario: Dict[int, int] = {}
-
-        def served(logits, stream=0) -> bool:
-            # route the request's logits to its stream's controller; a True
-            # return (detected scenario change) is latched per stream — or,
-            # in detector mode, schedules a dedicated drift-confirmation
-            # probe on the live timeline instead (DESIGN.md: a detection
-            # from noisy request logits is confirmed by a forward pass
-            # over the stream's probe data before the policy reacts).
-            hit = ctrl_for(stream).inference_served(logits)
-            if hit:
-                if self.boundaries == "detector":
-                    probes_pushed[0] += 1
-                    scheduler.push(Event(
-                        scheduler.now, "probe",
-                        scheduler.scenario_of(stream), probes_pushed[0] - 1,
-                        stream=stream,
-                        modality=stream_slot.get(stream, "cv")))
-                else:
-                    pending_change[stream] = True
-            return hit
-
-        server = InferenceServer(primary_slot.model,
-                                 batch_window=self.inference_window,
-                                 on_served=served, fused=self.compiled)
-        for name, st in slots.items():
-            server.register(name, st.model)
-            server.publish(st.executor.params, 0.0, slot=name)
-        val_curve: List[float] = []
-
-        def acquire(slot: _SlotState, now: float, stream: int) -> None:
-            # ModelPool residency: touching a cold slot swaps it in — a
-            # real ledger charge (t_swap/e_swap, attributed to the
-            # touching stream and the loaded slot) and real device
-            # occupancy, so whatever triggered the touch waits it out.
-            # Deliberate interaction with QoS: the swap occupancy becomes
-            # the scheduler's in-flight reservation, so a preemptible
-            # round with swap IO queued behind it stops being splittable
-            # (`can_preempt` goes False) — splitting it would have to
-            # slide the committed IO slot around, which the single-
-            # reservation timeline cannot account for (DESIGN.md §9).
-            if self.pool is None:
-                return
-            t_swap, e_swap, _ = self.pool.ensure_resident(slot.name)
-            if t_swap:
-                ledger.charge_swap(time_s=t_swap, energy_j=e_swap,
-                                   model=slot.name, stream=stream)
-                scheduler.occupy(now, t_swap, stream=stream)
-
-        def complete(slot: _SlotState, report) -> None:
-            # a round's results reach the rest of the system when it
-            # completes: publish to serving, validate, notify the
-            # stream's controller, charge SimFreeze's CKA probes
-            stream = report.stream
-            ctrl = ctrl_for(stream)
-            # the stream's publish policy decides when the new params
-            # reach serving (default: bug-compat immediate, DESIGN.md §5;
-            # round-end keeps pre-round params for mid-round arrivals)
-            pub = getattr(ctrl, "publish_policy", None)
-            if pub is None:
-                server.publish(slot.executor.params, report.end,
-                               slot=slot.name)
-            else:
-                server.publish(slot.executor.params,
-                               pub.visible_at(report.end), slot=slot.name,
-                               delayed=pub.delayed)
-            # validation accuracy (labeled 5% split) -> LazyTune; the
-            # split belongs to the scenario current at round *launch*
-            val = bench_for(stream).scenarios[
-                launch_scenario.pop(stream,
-                                    scheduler.scenario_of(stream))].val
-            val_acc, _ = evaluate(slot.model, slot.executor.params,
-                                  as_jnp(val))
-            val_curve.append(val_acc)
-            cka_before = ctrl.simfreeze.state.cka_flops \
-                if hasattr(ctrl, "simfreeze") else 0.0
-            ctrl.round_finished(report.iters, val_acc, slot.executor.params)
-            if hasattr(ctrl, "simfreeze"):
-                dcka = ctrl.simfreeze.state.cka_flops - cka_before
-                if dcka:
-                    tc, ec = slot.executor.cost.compute_cost(dcka)
-                    ledger.charge_probe("cka", tc, ec, stream=stream,
-                                        model=slot.name)
-            last_round_end[stream] = report.end
-
-        def settle(now: float) -> None:
-            # preemptible rounds complete lazily: once the timeline passes
-            # a reservation's end, finalize it (train the remaining
-            # checkpointed batches, charge the exact-remainder segment).
-            # At most one round is in flight across all slots (one device)
-            for st in slots.values():
-                report = st.executor.finalize_round(now)
-                if report is not None:
-                    complete(st, report)
-
-        def finish_round(now: float, stream: int = 0) -> None:
-            slot = slot_of(stream)
-            acquire(slot, now, stream)
-            launch_scenario[stream] = scheduler.scenario_of(stream)
-            report = slot.executor.execute_round(
-                ctrl_for(stream).plan, now, scheduler, stream=stream,
-                priority=stream_priority.get(stream, 0),
-                preemptible=self.preemptible)
-            if report is None and slot.executor.active_round is None:
-                launch_scenario.pop(stream, None)  # nothing was buffered
-            elif report is not None:  # synchronous (non-preemptible) path
-                complete(slot, report)
-
-        def on_scenario_change(previous: int, ev: Event) -> None:
-            # keep a replay sample of the just-entered scenario
-            sc = bench_for(ev.stream).scenarios[ev.scenario]
-            slot_of(ev.stream).executor.replay.add(
-                sc.train_batches[ev.index % len(sc.train_batches)])
-
-        def on_data(ev: Event, boundary: bool) -> None:
-            st = ev.stream
-            settle(ev.time)
-            ctrl = ctrl_for(st)
-            slot = slot_of(st)
-            sc = bench_for(st).scenarios[ev.scenario]
-            batch = sc.train_batches[ev.index % len(sc.train_batches)]
-            # bound micro-batch deferral: a queued group whose window has
-            # elapsed is served now, so controller signals driven by
-            # inference_served (LazyTune decay, scenario detection) lag by
-            # at most one window.
-            server.expire(ev.time)
-            server.drain()  # fused mode: deliver deferred serves now
-            change = pending_change.get(st, False) \
-                and self.boundaries == "detector"
-            if (boundary and self.boundaries == "oracle") or change:
-                pending_change[st] = False
-                if ctrl.plan is not None and hasattr(ctrl, "scenario_changed"):
-                    ctrl.scenario_changed(slot.executor.params, as_jnp(batch))
-            if getattr(ctrl, "needs_reference", True) and \
-                    hasattr(ctrl, "start_scenario") and \
-                    (boundary or (scheduler.scenario_of(st)
-                                  and not scenario_started.get(st, False))):
-                ctrl.start_scenario(slot.reference_params, as_jnp(batch))
-                scenario_started[st] = True
-            slot.executor.enqueue(batch, stream=st)
-            if ctrl.should_trigger(slot.executor.pending_for(st),
-                                   staleness=ev.time
-                                   - last_round_end.get(st, 0.0),
-                                   priority=stream_priority.get(st, 0)) and \
-                    scheduler.idle_at(ev.time):
-                finish_round(ev.time, st)
-
-        def on_inference(ev: Event) -> None:
-            st = ev.stream
-            settle(ev.time)
-            b = bench_for(st)
-            slot = slot_of(st)
-            cur = scheduler.scenario_of(st)
-            sc = b.scenarios[min(ev.scenario, cur) or ev.scenario]
-            test = b.scenarios[max(cur, 1)].test \
-                if ev.scenario <= cur else sc.test
-            idx = rng.choice(len(test["labels"]),
-                             min(self.inference_batch, len(test["labels"])),
-                             replace=False)
-            # QoS serving latency (arrival -> modeled service instant): an
-            # idle device serves at once; a busy one makes the request
-            # wait out the round's occupancy — unless the arrival outranks
-            # a preemptible round, which it splits and is served at its
-            # arrival time (the round resumes; with a zero resume cost its
-            # end is unchanged). A request for a *cold* ModelPool slot
-            # first waits out the slot's swap-in (and never preempts — the
-            # swap IO would stall the split anyway).
-            swap_needed = self.pool is not None \
-                and not self.pool.is_resident(slot.name)
-            if scheduler.idle_at(ev.time) and not swap_needed:
-                latency = 0.0
-            elif not swap_needed and scheduler.can_preempt(ev.time,
-                                                           ev.priority):
-                active = next(s.executor for s in slots.values()
-                              if s.executor.active_round is not None)
-                active.preempt(ev.time, scheduler, preempting_stream=st)
-                latency = 0.0
-            else:
-                acquire(slot, ev.time, st)
-                latency = scheduler.busy_until - ev.time
-            server.submit(ev.time, {k: v[idx] for k, v in test.items()},
-                          stream=st, latency=latency, slot=slot.name)
-
-        def on_probe(ev: Event) -> None:
-            # detector-driven probe (ROADMAP): confirm a flagged drift
-            # with a dedicated forward pass over the stream's current
-            # validation split before the policy reacts. The pass is
-            # charged as probe compute (~1/3 of a measured train step:
-            # forward only) — and, like any other touch, a probe on a
-            # cold ModelPool slot first pays the swap-in; confirmation
-            # latches the per-stream change flag exactly as a direct
-            # detection used to.
-            st = ev.stream
-            settle(ev.time)
-            server.drain()  # fused mode: serve anything deferred first
-            probes_fired[0] += 1
-            slot = slot_of(st)
-            acquire(slot, ev.time, st)
-            ctrl = ctrl_for(st)
-            b = bench_for(st)
-            sc = b.scenarios[min(max(scheduler.scenario_of(st), ev.scenario,
-                                     1), len(b.scenarios) - 1)]
-            _, logits = evaluate(slot.model, slot.executor.params,
-                                 as_jnp(sc.val))
-            flops = slot.steps.flops(ctrl.plan,
-                                     as_jnp(sc.train_batches[0])) / 3.0
-            tc, ec = slot.executor.cost.compute_cost(flops)
-            ledger.charge_probe("probe", tc, ec, stream=st, model=slot.name)
-            confirm = getattr(ctrl, "probe_served", None)
-            if confirm is None or confirm(logits):
-                pending_change[st] = True
-
-        def on_inference_event(ev: Event) -> None:
-            # compiled but unsegmented (detector mode, or `segment` off):
-            # serve each event's deferred dispatch before the next event,
-            # so detector probes are pushed at the same timeline instant
-            # as on the eager path
-            on_inference(ev)
-            server.drain()
-
-        def on_inference_segment(segment: List[Event]) -> None:
-            # the scheduler hands over a maximal run of consecutive
-            # inference events; per-event bookkeeping (params resolution,
-            # latency/preemption, RNG draws) is unchanged — only the
-            # device dispatch is deferred and fused into one drain
-            for ev in segment:
-                on_inference(ev)
-            server.drain()
-
-        # segment slicing stays off in detector mode: `served` pushes
-        # probe Events at scheduler.now mid-drain, so serving must stay
-        # aligned with the per-event clock
-        segmented = (self.compiled and self.segment
-                     and self.boundaries != "detector")
-        scheduler.run(
-            on_data=on_data,
-            on_inference=on_inference_event if self.compiled
-            else on_inference,
-            on_scenario_change=on_scenario_change, on_probe=on_probe,
-            on_inference_segment=on_inference_segment if segmented
-            else None)
-        settle(float("inf"))  # finalize a round still in flight at drain end
-        server.flush()
-        server.drain()
-        # trailing flush: any buffered data still fine-tunes (no data dropped)
-        for slot in slots.values():
-            for st in slot.executor.pending_streams:
-                finish_round(scheduler.busy_until, st)
-                settle(float("inf"))
-
-        stats = primary_ctrl.stats() if hasattr(primary_ctrl, "stats") else {}
-        per_stream: Dict[int, Dict[str, float]] = {}
-        # include streams first seen mid-run (events pushed onto the live
-        # scheduler carry streams the start-of-run list never saw)
-        for st in sorted(set(stream_ids) | set(ledger.per_stream)
-                         | set(server.accs_by_stream)):
-            cell = dict(ledger.per_stream.get(
-                st, {k: 0.0 for k in STREAM_KEYS}))
-            accs = server.accs_by_stream.get(st, [])
-            cell["avg_inference_acc"] = float(np.mean(accs)) if accs else 0.0
-            cell["inferences"] = float(len(accs))
-            lats = server.latencies_by_stream.get(st, [])
-            cell["latency_p50"] = float(np.percentile(lats, 50)) if lats else 0.0
-            cell["latency_p95"] = float(np.percentile(lats, 95)) if lats else 0.0
-            per_stream[st] = cell
-        per_model: Dict[str, Dict[str, float]] = {}
-        for name in sorted(set(slots) | set(ledger.per_model)
-                           | set(server.accs_by_slot)):
-            cell = dict(ledger.per_model.get(
-                name, {k: 0.0 for k in MODEL_KEYS}))
-            accs = server.accs_by_slot.get(name, [])
-            cell["avg_inference_acc"] = float(np.mean(accs)) if accs else 0.0
-            cell["inferences"] = float(len(accs))
-            per_model[name] = cell
-        return RunResult(
-            avg_inference_acc=server.avg_acc,
-            total_time_s=ledger.total_time_s,
-            total_energy_j=ledger.total_energy_j,
-            compute_tflops=ledger.compute_tflops, rounds=ledger.rounds,
-            recompiles=sum(st.steps.recompiles for st in slots.values())
-            if self.pool is not None else self.steps.recompiles,
-            inference_accs=server.accs,
-            breakdown=ledger.breakdown, controller_stats=stats,
-            val_curve=val_curve, per_stream=per_stream,
-            per_model=per_model, preemptions=ledger.preemptions,
-            swaps=ledger.swaps, probes=probes_fired[0])
+        self.fleet = DeviceFleet(self)
+        return self.fleet.run(events)
 
 
 def edgeol_session(cfg: RuntimeConfig, **inject) -> ContinualRuntime:

@@ -50,6 +50,30 @@ class EdgeCostModel:
         return t, t * self.compute_power_w
 
 
+def scale_cost(cost: EdgeCostModel, *, speed: float = 1.0,
+               energy: float = 1.0) -> EdgeCostModel:
+    """A heterogeneous fleet device's cost model, relative to a reference
+    one (DESIGN.md §13): `speed` multiplies throughput and divides every
+    fixed time overhead (init/load/save/recompile), `energy` multiplies
+    both power draws. Identity scales return `cost` unchanged, so the
+    default device is bitwise the reference device. Note executor cost
+    calibration re-derives `flops_per_sec` and multiplies the calibrated
+    figure by the same speed scale (`FineTuneExecutor.speed_scale`)."""
+    if speed == 1.0 and energy == 1.0:
+        return cost
+    import dataclasses
+
+    return dataclasses.replace(
+        cost,
+        flops_per_sec=cost.flops_per_sec * speed,
+        compute_power_w=cost.compute_power_w * energy,
+        overhead_power_w=cost.overhead_power_w * energy,
+        t_init_s=cost.t_init_s / speed,
+        t_load_s=cost.t_load_s / speed,
+        t_save_s=cost.t_save_s / speed,
+        t_recompile_s=cost.t_recompile_s / speed)
+
+
 @dataclass(frozen=True)
 class PodCostModel:
     peak_flops: float = 197e12        # bf16 / chip

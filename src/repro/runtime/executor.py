@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.runtime.costmodel import EdgeCostModel
-from repro.runtime.ledger import DEFAULT_MODEL, CostLedger
+from repro.runtime.ledger import DEFAULT_DEVICE, DEFAULT_MODEL, CostLedger
 from repro.runtime.train_loop import (TrainStepCache, as_jnp,
                                       same_shape_runs)
 
@@ -218,6 +218,8 @@ class FineTuneExecutor:
                  hooks: Sequence[RoundHook] = (),
                  calibrate_cost: bool = True,
                  model_name: str = DEFAULT_MODEL,
+                 device_name: str = DEFAULT_DEVICE,
+                 speed_scale: float = 1.0,
                  preempt_resume_cost_s: float = 0.0,
                  compiled: bool = False,
                  fuse: bool = True):
@@ -239,6 +241,13 @@ class FineTuneExecutor:
         # makes (ModelPool runs one executor per slot; single-model runs
         # keep the "default" slot)
         self.model_name = model_name
+        # fleet-device attribution key + relative throughput: every ledger
+        # charge and scheduler occupancy lands on this device, and cost
+        # calibration multiplies flops_per_sec by `speed_scale` so a fast
+        # device finishes the same round sooner (DESIGN.md §13). The
+        # defaults ("dev0", 1.0) are a bitwise no-op for seed-era runs.
+        self.device_name = device_name
+        self.speed_scale = float(speed_scale)
         # modeled checkpoint-resume overhead paid on each preemption split
         # (0.0 = the legacy free split; see `preempt`)
         self.preempt_resume_cost_s = float(preempt_resume_cost_s)
@@ -326,7 +335,8 @@ class FineTuneExecutor:
             # 1.1 s fixed overheads (58%/42% split). DESIGN.md §3.
             per_iter = flops / max(len(batches), 1)
             self.cost = dataclasses.replace(
-                self.cost, flops_per_sec=max(per_iter * 2 / 0.8, 1.0))
+                self.cost,
+                flops_per_sec=max(per_iter * 2 / 0.8, 1.0) * self.speed_scale)
             self.calibrate_cost = False
         t, e, parts = self.cost.round_cost(flops, recompiles=recompile)
         return flops, t, e, parts
@@ -367,15 +377,17 @@ class FineTuneExecutor:
             flops, t, e, parts = self._round_cost(plan, batches, recompile)
             self.ledger.charge_round(flops=flops, time_s=t, energy_j=e,
                                      parts=parts, stream=stream,
-                                     model=self.model_name)
+                                     model=self.model_name,
+                                     device=self.device_name)
             start, end = scheduler.occupy(now, t, stream=stream,
-                                          priority=priority)
+                                          priority=priority,
+                                          device=self.device_name)
             return RoundReport(iters=len(batches), flops=flops, time_s=t,
                                energy_j=e, recompiled=bool(recompile),
                                start=start, end=end, stream=stream)
         flops, t, e, parts = self._round_cost(plan, batches, recompile)
         res = scheduler.occupy(now, t, stream=stream, priority=priority,
-                               preemptible=True)
+                               preemptible=True, device=self.device_name)
         self.active_round = ActiveRound(step, plan, stream, batches, flops,
                                         t, e, parts, bool(recompile), res)
         return None
@@ -410,7 +422,9 @@ class FineTuneExecutor:
         self.ledger.charge_round_segment(flops=flops, time_s=time_s,
                                          energy_j=energy_j, parts=parts,
                                          stream=ar.stream,
-                                         model=self.model_name, final=final)
+                                         model=self.model_name,
+                                         device=self.device_name,
+                                         final=final)
         ar.charged["time_s"] += time_s
         ar.charged["energy_j"] += energy_j
         ar.charged["flops"] += flops
@@ -444,7 +458,7 @@ class FineTuneExecutor:
         self._charge_segment(ar, t - ar.seg_start, final=False)
         self.ledger.note_preemption(ar.stream)
         ar.preemptions += 1
-        remaining = scheduler.preempt(t)
+        remaining = scheduler.preempt(t, self.device_name)
         resume = self.preempt_resume_cost_s
         if resume > 0.0:
             # the resume overhead is a separate charge (the round's own
@@ -454,12 +468,15 @@ class FineTuneExecutor:
                 else preempting_stream
             self.ledger.charge_probe(
                 "resume", resume, resume * self.cost.overhead_power_w,
-                stream=payer, model=self.model_name)
+                stream=payer, model=self.model_name,
+                device=self.device_name)
             scheduler.occupy(t, resume, stream=payer,
-                             priority=ar.reservation.priority)
+                             priority=ar.reservation.priority,
+                             device=self.device_name)
         ar.reservation = scheduler.occupy(
             t, remaining, stream=ar.stream,
-            priority=ar.reservation.priority, preemptible=True)
+            priority=ar.reservation.priority, preemptible=True,
+            device=self.device_name)
         # segment bookkeeping resumes where the round's work does (after
         # any resume overhead), so segment durations stay pure round time
         ar.seg_start = ar.reservation.start

@@ -9,11 +9,13 @@ keeps the breakdown keys consistent across the runtime, benchmarks and
 tests, and makes "where did the joules go" auditable instead of being
 smeared across the event loop (DESIGN.md §3).
 
-Attribution is two-dimensional: every charge lands in the global totals,
-in ``per_stream[stream]`` (which arrival stream caused it) and in
-``per_model[model]`` (which model slot executed it — DESIGN.md §9). Both
-attributions independently sum back to the totals; single-model runs put
-everything under the ``"default"`` slot so the invariant is universal.
+Attribution is three-dimensional: every charge lands in the global totals,
+in ``per_stream[stream]`` (which arrival stream caused it), in
+``per_model[model]`` (which model slot executed it — DESIGN.md §9) and in
+``per_device[device]`` (which fleet device ran it — DESIGN.md §13). All
+three attributions independently sum back to the totals; single-model
+single-device runs put everything under the ``"default"`` slot and the
+``"dev0"`` device so the invariant is universal.
 """
 from __future__ import annotations
 
@@ -48,6 +50,16 @@ MODEL_KEYS = ("time_s", "energy_j", "flops", "rounds", "swaps")
 #: Model-slot key used when the runtime runs a single model (no pool).
 DEFAULT_MODEL = "default"
 
+#: Per-device attribution keys (DeviceFleet, DESIGN.md §13). The cost keys
+#: mirror STREAM_KEYS and sum to the totals the same way; `swaps` counts
+#: the device's ModelPool reloads and `syncs` its participations in
+#: cross-device delta merges (counters, like `preemptions`).
+DEVICE_KEYS = ("time_s", "energy_j", "flops", "rounds", "swaps", "syncs")
+
+#: Device key used when the runtime runs a fleet of size 1 (the legacy
+#: single-device case — every seed-era run).
+DEFAULT_DEVICE = "dev0"
+
 
 @dataclass
 class CostLedger:
@@ -59,6 +71,7 @@ class CostLedger:
         default_factory=lambda: {k: 0.0 for k in BREAKDOWN_KEYS})
     per_stream: Dict[int, Dict[str, float]] = field(default_factory=dict)
     per_model: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    per_device: Dict[str, Dict[str, float]] = field(default_factory=dict)
 
     def _stream(self, stream: int) -> Dict[str, float]:
         return self.per_stream.setdefault(
@@ -68,20 +81,27 @@ class CostLedger:
         return self.per_model.setdefault(
             model, {k: 0.0 for k in MODEL_KEYS})
 
+    def _device(self, device: str) -> Dict[str, float]:
+        return self.per_device.setdefault(
+            device, {k: 0.0 for k in DEVICE_KEYS})
+
     def charge_round(self, *, flops: float, time_s: float, energy_j: float,
                      parts: Dict[str, float], stream: int = 0,
-                     model: str = DEFAULT_MODEL) -> None:
+                     model: str = DEFAULT_MODEL,
+                     device: str = DEFAULT_DEVICE) -> None:
         """One fine-tuning round: `parts` is EdgeCostModel's breakdown dict
         (t_compute/t_overhead/e_compute/e_overhead); `stream` is the
         arrival stream whose buffered batches the round trained; `model`
-        the slot that executed it."""
+        the slot that executed it; `device` the fleet device it ran on."""
         self.charge_round_segment(flops=flops, time_s=time_s,
                                   energy_j=energy_j, parts=parts,
-                                  stream=stream, model=model, final=True)
+                                  stream=stream, model=model, device=device,
+                                  final=True)
 
     def charge_round_segment(self, *, flops: float, time_s: float,
                              energy_j: float, parts: Dict[str, float],
                              stream: int = 0, model: str = DEFAULT_MODEL,
+                             device: str = DEFAULT_DEVICE,
                              final: bool = True) -> None:
         """One *segment* of a (possibly preempted) round. A preemptible
         round charges each occupancy segment as it completes; the caller
@@ -101,10 +121,15 @@ class CostLedger:
         pm["time_s"] += time_s
         pm["energy_j"] += energy_j
         pm["flops"] += flops
+        pd = self._device(device)
+        pd["time_s"] += time_s
+        pd["energy_j"] += energy_j
+        pd["flops"] += flops
         if final:
             self.rounds += 1
             per["rounds"] += 1
             pm["rounds"] += 1
+            pd["rounds"] += 1
 
     def note_preemption(self, stream: int = 0) -> None:
         """A higher-priority arrival split `stream`'s in-flight round."""
@@ -116,7 +141,8 @@ class CostLedger:
                        for v in self.per_stream.values()))
 
     def charge_probe(self, key: str, time_s: float, energy_j: float,
-                     stream: int = 0, model: str = DEFAULT_MODEL) -> None:
+                     stream: int = 0, model: str = DEFAULT_MODEL,
+                     device: str = DEFAULT_DEVICE) -> None:
         """An auxiliary compute charge outside the round proper (e.g. `key`
         = 'cka'). Adds to the totals and to `t_<key>` / `e_<key>`."""
         time_s, energy_j = float(time_s), float(energy_j)
@@ -130,20 +156,39 @@ class CostLedger:
         pm = self._model(model)
         pm["time_s"] += time_s
         pm["energy_j"] += energy_j
+        pd = self._device(device)
+        pd["time_s"] += time_s
+        pd["energy_j"] += energy_j
 
     def charge_swap(self, *, time_s: float, energy_j: float, model: str,
-                    stream: int = 0) -> None:
+                    stream: int = 0, device: str = DEFAULT_DEVICE) -> None:
         """A ModelPool residency swap: `model` was loaded back into device
         memory (evicted peers saved out first). Lands in the totals, the
-        `t_swap`/`e_swap` breakdown, both attributions, and bumps the
-        slot's `swaps` counter."""
+        `t_swap`/`e_swap` breakdown, all attributions, and bumps the
+        slot's and device's `swaps` counters."""
         self.charge_probe("swap", time_s, energy_j, stream=stream,
-                          model=model)
+                          model=model, device=device)
         self._model(model)["swaps"] += 1
+        self._device(device)["swaps"] += 1
+
+    def charge_sync(self, *, time_s: float, energy_j: float, device: str,
+                    stream: int = 0, model: str = DEFAULT_MODEL) -> None:
+        """One device's participation in a cross-device delta merge
+        (DeviceFleet aggregation, DESIGN.md §13): serializing its unfrozen
+        params out and loading the merged result back. Lands in the totals,
+        the `t_sync`/`e_sync` breakdown, all attributions, and bumps the
+        device's `syncs` counter."""
+        self.charge_probe("sync", time_s, energy_j, stream=stream,
+                          model=model, device=device)
+        self._device(device)["syncs"] += 1
 
     @property
     def swaps(self) -> int:
         return int(sum(v.get("swaps", 0) for v in self.per_model.values()))
+
+    @property
+    def syncs(self) -> int:
+        return int(sum(v.get("syncs", 0) for v in self.per_device.values()))
 
     @property
     def compute_tflops(self) -> float:

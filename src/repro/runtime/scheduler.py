@@ -27,6 +27,7 @@ from typing import Callable, Dict, Iterable, Optional
 # everywhere (the legacy case) degenerates to the original
 # (time, kind, insertion) order.
 from repro.data.arrivals import KIND_ORDER, Event
+from repro.runtime.ledger import DEFAULT_DEVICE
 
 OnData = Callable[[Event, bool], None]          # (event, scenario_boundary)
 OnInference = Callable[[Event], None]
@@ -50,6 +51,7 @@ class Reservation:
     stream: int = 0
     priority: int = 0
     preemptible: bool = False
+    device: str = DEFAULT_DEVICE
 
     @property
     def duration(self) -> float:
@@ -87,13 +89,47 @@ class EventScheduler:
         self._heap: list = []
         self._seq = 0
         self.now = 0.0
-        self.busy_until = 0.0
+        # Occupancy is tracked per fleet device (DESIGN.md §13); the
+        # legacy scalar `busy_until` / `reservation` attributes remain as
+        # views of the default device, so single-device callers (every
+        # seed-era call site) see exactly the original semantics.
+        self._busy: Dict[str, float] = {DEFAULT_DEVICE: 0.0}
+        self._resv: Dict[str, Optional[Reservation]] = {DEFAULT_DEVICE: None}
         self.current_scenario = 0
         self.stream_scenarios: Dict[int, int] = {}
         self.dispatched = 0
-        self.reservation: Optional[Reservation] = None  # in-flight grant
         for e in events:
             self.push(e)
+
+    # ---- legacy single-device views --------------------------------------
+    @property
+    def busy_until(self) -> float:
+        return self._busy[DEFAULT_DEVICE]
+
+    @busy_until.setter
+    def busy_until(self, value: float) -> None:
+        self._busy[DEFAULT_DEVICE] = value
+
+    @property
+    def reservation(self) -> Optional[Reservation]:
+        """In-flight grant on the default device."""
+        return self._resv[DEFAULT_DEVICE]
+
+    @reservation.setter
+    def reservation(self, value: Optional[Reservation]) -> None:
+        self._resv[DEFAULT_DEVICE] = value
+
+    def busy_until_of(self, device: str = DEFAULT_DEVICE) -> float:
+        return self._busy.get(device, 0.0)
+
+    def reservation_of(self, device: str = DEFAULT_DEVICE) \
+            -> Optional[Reservation]:
+        return self._resv.get(device)
+
+    @property
+    def devices(self):
+        """Device names that have been occupied at least once."""
+        return sorted(self._busy)
 
     # ---- queue -----------------------------------------------------------
     def push(self, event: Event) -> None:
@@ -115,46 +151,51 @@ class EventScheduler:
         return self.stream_scenarios.get(stream, 0)
 
     # ---- device occupancy ------------------------------------------------
-    def idle_at(self, t: float) -> bool:
-        """True when the device can start new work at time `t`."""
-        return t >= self.busy_until
+    def idle_at(self, t: float, device: str = DEFAULT_DEVICE) -> bool:
+        """True when `device` can start new work at time `t`."""
+        return t >= self._busy.get(device, 0.0)
 
     def occupy(self, start: float, duration: float, *, stream: int = 0,
-               priority: int = 0, preemptible: bool = False) -> Reservation:
-        """Reserve the device for `duration` seconds, no earlier than
-        `start` and never overlapping in-flight work. Returns a
-        `Reservation` (unpacks as ``(actual_start, end)`` for legacy
-        callers); `busy_until` advances to its end. A `preemptible`
-        reservation may later be split by `preempt`."""
-        actual = max(start, self.busy_until)
-        self.busy_until = actual + duration
-        self.reservation = Reservation(actual, self.busy_until, stream,
-                                       priority, preemptible)
-        return self.reservation
+               priority: int = 0, preemptible: bool = False,
+               device: str = DEFAULT_DEVICE) -> Reservation:
+        """Reserve `device` for `duration` seconds, no earlier than
+        `start` and never overlapping that device's in-flight work.
+        Returns a `Reservation` (unpacks as ``(actual_start, end)`` for
+        legacy callers); the device's `busy_until` advances to its end. A
+        `preemptible` reservation may later be split by `preempt`.
+        Devices occupy independently — the fleet's timelines only couple
+        through the shared event queue and ledger."""
+        actual = max(start, self._busy.get(device, 0.0))
+        self._busy[device] = actual + duration
+        self._resv[device] = Reservation(actual, self._busy[device], stream,
+                                         priority, preemptible, device)
+        return self._resv[device]
 
-    def can_preempt(self, t: float, priority: int) -> bool:
+    def can_preempt(self, t: float, priority: int,
+                    device: str = DEFAULT_DEVICE) -> bool:
         """True when an arrival of `priority` at time `t` may split the
-        in-flight reservation: the device is busy, the reservation opted
-        in, and the arrival outranks the reservation's stream."""
-        r = self.reservation
+        device's in-flight reservation: the device is busy, the
+        reservation opted in, and the arrival outranks the reservation's
+        stream."""
+        r = self._resv.get(device)
         return (r is not None and r.preemptible and t < r.end
                 and t >= r.start and priority > r.priority)
 
-    def preempt(self, t: float) -> float:
-        """Split the in-flight reservation at time `t`: its `end` is
-        pulled back to `t` (the completed segment), `busy_until` rewinds
-        with it, and the unserved remainder (seconds) is returned — the
-        owner re-occupies it (usually immediately, yielding only the
-        preemption *point* to the arrival). Callers gate on
-        `can_preempt`; splitting a non-preemptible reservation is always
-        an error (its cost was charged as one synchronous round)."""
-        r = self.reservation
+    def preempt(self, t: float, device: str = DEFAULT_DEVICE) -> float:
+        """Split the device's in-flight reservation at time `t`: its `end`
+        is pulled back to `t` (the completed segment), the device's
+        `busy_until` rewinds with it, and the unserved remainder (seconds)
+        is returned — the owner re-occupies it (usually immediately,
+        yielding only the preemption *point* to the arrival). Callers gate
+        on `can_preempt`; splitting a non-preemptible reservation is
+        always an error (its cost was charged as one synchronous round)."""
+        r = self._resv.get(device)
         if r is None or not r.preemptible or t < r.start or t >= r.end:
             raise ValueError(f"no preemptible reservation to split at t={t}")
         remaining = r.end - t
         r.end = t
-        self.busy_until = t
-        self.reservation = None
+        self._busy[device] = t
+        self._resv[device] = None
         return remaining
 
     # ---- dispatch --------------------------------------------------------

@@ -23,8 +23,12 @@ from repro.workloads.spec import (DiurnalConfig, DutyCycle, MMPPConfig,
 
 def presets(*, batches_per_scenario: int = 8, inferences: int = 24,
             num_scenarios: int = 3, scenario_span: float = 100.0,
-            seed: int = 0) -> Dict[str, WorkloadSpec]:
-    """The standard preset set, scaled by the given knobs."""
+            seed: int = 0,
+            fleet_streams: int = 120) -> Dict[str, WorkloadSpec]:
+    """The standard preset set, scaled by the given knobs.
+    `fleet_streams` sizes only the `fleet` preset (the DeviceFleet cell,
+    DESIGN.md §13): hundreds of light camera streams by default, scaled
+    down to a handful for the CI quick sweep."""
     def cv(**kw) -> StreamSpec:
         base = dict(modality="cv", benchmark="nc",
                     batches_per_scenario=batches_per_scenario,
@@ -78,6 +82,22 @@ def presets(*, batches_per_scenario: int = 8, inferences: int = 24,
                          batches_per_scenario=batches_per_scenario * 2,
                          inferences=max(inferences // 2, 4))),
                      **geom),
+        # DeviceFleet cell (DESIGN.md §13): a whole fleet of light camera
+        # streams — each a fraction of the single-device load, phased so
+        # arrivals spread over the scenario span — routed across tens of
+        # devices by the runtime's `RuntimeConfig.devices` axis. Every
+        # fourth stream is latency-critical (priority 1) so the routing
+        # policies have asymmetry to work with; drift is staggered like a
+        # rolling multi-camera deployment.
+        WorkloadSpec("fleet",
+                     tuple(cv(benchmark="ni" if i % 3 == 2 else "nc",
+                              batches_per_scenario=max(
+                                  batches_per_scenario // 2, 2),
+                              inferences=max(inferences // 4, 3),
+                              priority=1 if i % 4 == 3 else 0,
+                              phase=(i % 8) * scenario_span / 8.0)
+                           for i in range(fleet_streams)),
+                     drift="staggered", **geom),
     ]
     return {s.validate().name: s for s in specs}
 

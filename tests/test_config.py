@@ -91,6 +91,34 @@ def test_bad_scalars_raise():
         RuntimeConfig(inference_batch=0).validate()
 
 
+def test_device_config_round_trip_and_validation():
+    from repro.runtime.config import DeviceConfig
+
+    fleet = (DeviceConfig("dev0"),
+             DeviceConfig("jetson1", speed_scale=1.6, energy_scale=0.8,
+                          memory_budget_mb=256.0))
+    cfg = RuntimeConfig(devices=fleet, routing="least-loaded",
+                        aggregate_every=50.0).validate()
+    again = RuntimeConfig.from_dict(json.loads(json.dumps(cfg.to_dict())))
+    assert again.devices == fleet
+    assert again.routing == "least-loaded"
+    assert again.aggregate_every == 50.0
+    # defaults stay out of the serialized form
+    assert "devices" not in RuntimeConfig().to_dict()
+    assert DeviceConfig("dev0").to_dict() == {"name": "dev0"}
+    with pytest.raises(ValueError, match=r"unknown routing.*least-loaded"):
+        RuntimeConfig(routing="round-robbin").validate()
+    with pytest.raises(ValueError, match="unique"):
+        RuntimeConfig(devices=(DeviceConfig("a"),
+                               DeviceConfig("a"))).validate()
+    with pytest.raises(ValueError, match="speed_scale"):
+        DeviceConfig("a", speed_scale=0.0).validate()
+    with pytest.raises(ValueError, match=r"unknown key"):
+        DeviceConfig.from_dict({"name": "a", "speeed": 2.0})
+    with pytest.raises(ValueError, match="aggregate_every"):
+        RuntimeConfig(aggregate_every=-1.0).validate()
+
+
 def test_unknown_workload_preset_actionable():
     with pytest.raises(ValueError, match=r"known presets.*single-poisson"):
         edgeol_session(RuntimeConfig(workload="nope"))

@@ -118,3 +118,26 @@ def test_straggler_no_flags_when_uniform():
     for _ in range(20):
         tr.record_step({h: 1.0 + 0.01 * h for h in range(8)})
     assert tr.stragglers() == []
+
+
+def test_straggler_trackers_do_not_share_config():
+    """Regression: `StragglerTracker.__init__` used a shared
+    `StragglerConfig()` default instance — mutating one tracker's config
+    (as the DeviceFleet does when tightening `evict_after` for a small
+    fleet) silently changed every other default-constructed tracker."""
+    a = StragglerTracker(4)
+    b = StragglerTracker(4)
+    assert a.cfg is not b.cfg
+    a.cfg.slow_factor = 99.0
+    assert b.cfg.slow_factor != 99.0
+    assert StragglerTracker(2).cfg is not StragglerTracker(2).cfg
+
+
+def test_straggler_rebalance_excludes_evicted_hosts():
+    tr = StragglerTracker(3, StragglerConfig(min_samples=2))
+    for _ in range(4):
+        tr.record_step({0: 1.0, 1: 1.0, 2: 2.5})
+    tr.evict(2)
+    plan = tr.rebalance_plan()
+    assert 2 not in plan
+    assert abs(sum(plan.values()) - 1.0) < 1e-9

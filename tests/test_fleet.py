@@ -1,0 +1,193 @@
+"""DeviceFleet (DESIGN.md §13): the fleet-of-1 exactness contract, the
+routing policies, federated aggregation accounting, straggler eviction,
+and the three-way attribution invariant under the many-stream `fleet`
+preset.
+
+The load-bearing test is `test_fleet_of_one_matches_single_device`: the
+DeviceRuntime extraction turned `ContinualRuntime` into a fleet of size
+1, and that delegation must be bit-for-bit — same accuracy trace, same
+ledger, same attributions — whether or not an aggregation period is set
+(a fleet of one never has a merge partner)."""
+import numpy as np
+import pytest
+
+from repro.data.arrivals import Event
+from repro.runtime import RuntimeConfig, SlotConfig, edgeol_session
+from repro.runtime.config import DeviceConfig
+from repro.runtime.fleet import (FLEET_STREAM, LeastLoaded, StaticAffinity,
+                                 build_routing, fleet_devices)
+
+SCALE = dict(batches_per_scenario=3, inferences=6, num_scenarios=2)
+
+
+def _run(workload="two-stream", *, scale=SCALE, **cfg_kw):
+    cfg = RuntimeConfig(slots={"cv": SlotConfig()}, workload=workload,
+                        workload_scale=dict(scale), seed=0,
+                        pretrain_epochs=1, compiled=True, **cfg_kw)
+    return edgeol_session(cfg).run()
+
+
+def _assert_identical(a, b):
+    assert a.rounds == b.rounds
+    assert a.swaps == b.swaps
+    assert a.syncs == b.syncs
+    np.testing.assert_array_equal(a.inference_accs, b.inference_accs)
+    np.testing.assert_array_equal(a.val_curve, b.val_curve)
+    assert a.total_time_s == b.total_time_s
+    assert a.total_energy_j == b.total_energy_j
+    assert a.compute_tflops == b.compute_tflops
+    assert a.per_stream == b.per_stream
+    assert a.per_model == b.per_model
+
+
+def _assert_attributions_sum(res):
+    """ISSUE acceptance: per-stream, per-model and per-device each
+    independently reconstruct the cell totals."""
+    for dim in (res.per_stream, res.per_model, res.per_device):
+        np.testing.assert_allclose(
+            sum(v["time_s"] for v in dim.values()), res.total_time_s,
+            rtol=1e-9)
+        np.testing.assert_allclose(
+            sum(v["energy_j"] for v in dim.values()), res.total_energy_j,
+            rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# fleet-of-1 exactness (the refactor's regression contract)
+
+
+def test_fleet_of_one_matches_single_device():
+    legacy = _run()                                     # no devices axis
+    one = _run(devices=(DeviceConfig("dev0"),))
+    _assert_identical(legacy, one)
+    assert one.syncs == 0
+    assert set(one.per_device) == {"dev0"}
+
+
+def test_fleet_of_one_with_aggregation_period_never_merges():
+    # a merge needs >= 2 participants: setting aggregate_every on a fleet
+    # of one must not perturb a bit (no sync charges, no param copies)
+    legacy = _run()
+    one = _run(devices=(DeviceConfig("dev0"),), aggregate_every=20.0,
+               routing="least-loaded")
+    _assert_identical(legacy, one)
+    assert one.syncs == 0
+
+
+# ---------------------------------------------------------------------------
+# routing policies
+
+
+def test_static_affinity_modulo_mapping():
+    specs = [DeviceConfig("dev0"), DeviceConfig("dev1")]
+    got = StaticAffinity().assign([3, 0, 7, 1], [], specs)
+    assert got == {0: 0, 1: 1, 3: 0, 7: 1}     # sorted stream order
+
+
+def test_least_loaded_respects_speed_scale():
+    specs = [DeviceConfig("dev0"), DeviceConfig("fast", speed_scale=3.0)]
+    events = [Event(float(i), "data", 0, i, stream=st)
+              for st in range(4) for i in range(5)]   # uniform weights
+    got = LeastLoaded().assign([0, 1, 2, 3], events, specs)
+    counts = {0: 0, 1: 0}
+    for d in got.values():
+        counts[d] += 1
+    assert counts[1] > counts[0]               # 3x device absorbs more
+
+
+def test_least_loaded_places_heaviest_first():
+    specs = [DeviceConfig("dev0"), DeviceConfig("dev1")]
+    events = ([Event(0.0, "data", 0, i, stream=0) for i in range(10)]
+              + [Event(0.0, "data", 0, i, stream=1) for i in range(1)]
+              + [Event(0.0, "data", 0, i, stream=2) for i in range(1)])
+    got = LeastLoaded().assign([0, 1, 2], events, specs)
+    # the heavy stream gets a device to itself; the light two share
+    assert got[1] == got[2] != got[0]
+
+
+def test_build_routing_unknown_name_actionable():
+    with pytest.raises(ValueError, match=r"least-loaded.*static"):
+        build_routing("bogus")
+
+
+def test_fleet_devices_deterministic_with_reference_dev0():
+    a = fleet_devices(4, seed=3, speed_spread=0.4, energy_spread=0.2)
+    b = fleet_devices(4, seed=3, speed_spread=0.4, energy_spread=0.2)
+    assert a == b
+    assert a[0] == DeviceConfig("dev0")        # golden reference lane
+    assert all(d.speed_scale > 0 for d in a)
+    assert len({d.name for d in a}) == 4
+    with pytest.raises(ValueError, match="at least one"):
+        fleet_devices(0)
+
+
+# ---------------------------------------------------------------------------
+# multi-device runs: aggregation accounting + attribution invariant
+
+
+def test_multi_device_fleet_syncs_and_sums():
+    devices = fleet_devices(3, seed=0, speed_spread=0.4,
+                            energy_spread=0.2)
+    res = _run(devices=devices, routing="least-loaded",
+               aggregate_every=25.0)
+    assert res.syncs > 0                        # merges actually charged
+    assert set(res.per_device) == {d.name for d in devices}
+    assert res.syncs == sum(v["syncs"] for v in res.per_device.values())
+    # sync charges land on the fleet pseudo-stream, inside the totals
+    assert str(FLEET_STREAM) in {str(k) for k in res.per_stream}
+    _assert_attributions_sum(res)
+    for v in res.per_device.values():
+        assert 0.0 <= v["utilization"] <= 1.0 + 1e-9
+
+
+def test_fleet_preset_three_way_attribution_sums():
+    scale = dict(batches_per_scenario=2, inferences=4, num_scenarios=2,
+                 fleet_streams=6)
+    res = _run("fleet", scale=scale,
+               devices=fleet_devices(3, seed=0, speed_spread=0.4),
+               routing="least-loaded", aggregate_every=25.0)
+    assert res.syncs > 0
+    assert len(res.per_device) == 3
+    # every stream is served somewhere
+    assert sum(v["streams"] for v in res.per_device.values()) == 6
+    _assert_attributions_sum(res)
+
+
+def test_aggregation_changes_trajectory_but_not_totals_dimensionality():
+    # with merges off the devices drift independently; with merges on the
+    # sync charges appear — both keep the attribution invariant
+    devices = fleet_devices(2, seed=0, speed_spread=0.4)
+    drift = _run(devices=devices, aggregate_every=0.0)
+    merged = _run(devices=devices, aggregate_every=20.0)
+    assert drift.syncs == 0 and merged.syncs > 0
+    assert merged.total_time_s > 0
+    _assert_attributions_sum(drift)
+    _assert_attributions_sum(merged)
+
+
+# ---------------------------------------------------------------------------
+# stragglers: flagging reroutes, eviction drains a device
+
+
+def test_straggler_eviction_reroutes_streams():
+    from repro.distributed.straggler import StragglerConfig
+
+    devices = (DeviceConfig("dev0"), DeviceConfig("dev1"),
+               DeviceConfig("slow", speed_scale=0.2))
+    cfg = RuntimeConfig(slots={"cv": SlotConfig()}, workload="fleet",
+                        workload_scale=dict(batches_per_scenario=2,
+                                            inferences=4, num_scenarios=2,
+                                            fleet_streams=6),
+                        seed=0, pretrain_epochs=1, compiled=True,
+                        devices=devices, routing="static",
+                        aggregate_every=10.0)
+    rt = edgeol_session(cfg)
+    rt.straggler_config = StragglerConfig(min_samples=1, slow_factor=1.5,
+                                          evict_after=2)
+    res = rt.run()
+    slow = res.per_device["slow"]
+    assert slow.get("evicted")                 # 5x-slow device thrown out
+    assert slow["streams"] == 0                # its streams moved away
+    assert sum(v["streams"] for v in res.per_device.values()) == 6
+    assert res.rounds > 0
+    _assert_attributions_sum(res)

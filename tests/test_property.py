@@ -149,36 +149,44 @@ def test_int8_error_feedback_converges_in_mean():
 
 
 @settings(max_examples=40, deadline=None)
-@given(st.lists(st.tuples(st.integers(0, 2),      # charge kind
+@given(st.lists(st.tuples(st.integers(0, 3),      # charge kind
                           st.integers(0, 2),      # model slot
                           st.integers(0, 3),      # stream
+                          st.integers(0, 2),      # fleet device
                           st.floats(1e-3, 5.0),   # time_s
                           st.floats(1e-2, 50.0),  # energy_j
                           st.booleans()),         # final segment
                 min_size=1, max_size=60))
 def test_ledger_attributions_always_sum_to_totals(ops):
     """ISSUE acceptance (property): whatever interleaving of round
-    segments, probe charges and ModelPool swaps a run produces, the
-    per-model and per-stream attributions each independently sum back to
-    the ledger totals."""
+    segments, probe charges, ModelPool swaps and cross-device sync
+    charges a run produces, the per-model, per-stream and per-device
+    attributions each independently sum back to the ledger totals."""
     from repro.runtime.ledger import CostLedger
 
     led = CostLedger()
     models = ("cv", "nlp", "audio")
-    for kind, m, stream, t, e, final in ops:
+    devices = ("dev0", "jetson1", "rpi2")
+    for kind, m, stream, d, t, e, final in ops:
         model = models[m]
+        device = devices[d]
         if kind == 0:
             parts = {"t_compute": t * 0.6, "t_overhead": t * 0.4,
                      "e_compute": e * 0.7, "e_overhead": e * 0.3}
             led.charge_round_segment(flops=t * 1e9, time_s=t, energy_j=e,
                                      parts=parts, stream=stream,
-                                     model=model, final=final)
+                                     model=model, device=device,
+                                     final=final)
         elif kind == 1:
-            led.charge_probe("cka", t, e, stream=stream, model=model)
-        else:
+            led.charge_probe("cka", t, e, stream=stream, model=model,
+                             device=device)
+        elif kind == 2:
             led.charge_swap(time_s=t, energy_j=e, model=model,
-                            stream=stream)
-    for view in (led.per_model, led.per_stream):
+                            stream=stream, device=device)
+        else:
+            led.charge_sync(time_s=t, energy_j=e, device=device,
+                            stream=stream, model=model)
+    for view in (led.per_model, led.per_stream, led.per_device):
         np.testing.assert_allclose(
             sum(v["time_s"] for v in view.values()), led.total_time_s,
             rtol=1e-9)
@@ -190,3 +198,4 @@ def test_ledger_attributions_always_sum_to_totals(ops):
             rtol=1e-9)
     assert led.rounds == sum(v["rounds"] for v in led.per_model.values())
     assert led.swaps == sum(v["swaps"] for v in led.per_model.values())
+    assert led.syncs == sum(v["syncs"] for v in led.per_device.values())

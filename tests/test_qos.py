@@ -413,16 +413,16 @@ def test_lazy_finalize_validates_against_launch_scenario(monkeypatch):
     on_data's settle, so reading it at finalize time would grade round 1
     on scenario 2's val split. Spies on the val batches actually
     evaluated."""
-    import repro.runtime.continual as C
+    import repro.runtime.device as D
 
     val_labels = []
-    real_eval = C.evaluate
+    real_eval = D.evaluate
 
     def spy(model, params, batch):
         val_labels.append(np.asarray(batch["labels"]))
         return real_eval(model, params, batch)
 
-    monkeypatch.setattr(C, "evaluate", spy)
+    monkeypatch.setattr(D, "evaluate", spy)
     rt, _ = _tiny_runtime(preemptible=True)
     events = [Event(1.0, "data", 1, 0),
               Event(50.0, "data", 2, 0),   # boundary event finalizes it

@@ -80,6 +80,31 @@ def test_scheduler_busy_until_serializes_rounds():
     assert sched.busy_until == 6.0
 
 
+def test_scheduler_per_device_occupancy_is_independent():
+    """DeviceFleet (DESIGN.md §13): each fleet device owns its own
+    occupancy lane — one device's in-flight round never delays another's,
+    and the legacy scalar views stay aliases of the default device."""
+    sched = EventScheduler()
+    s0 = sched.occupy(2.0, 3.0)                       # default device
+    s1 = sched.occupy(2.0, 1.0, device="jetson1")     # concurrent lane
+    assert (s0.start, s0.end) == (2.0, 5.0)
+    assert (s1.start, s1.end) == (2.0, 3.0)           # not serialized
+    assert sched.busy_until_of() == 5.0
+    assert sched.busy_until_of("jetson1") == 3.0
+    assert sched.idle_at(3.0, device="jetson1") and not sched.idle_at(3.0)
+    # queued work serializes only within its own device
+    s2 = sched.occupy(2.5, 1.0, device="jetson1")
+    assert (s2.start, s2.end) == (3.0, 4.0)
+    assert sched.busy_until_of() == 5.0               # untouched
+    # legacy scalar views alias the default device
+    assert sched.busy_until == 5.0
+    assert sched.reservation is sched.reservation_of()
+    assert sched.reservation_of("jetson1") is s2
+    sched.busy_until = 7.0
+    assert sched.busy_until_of() == 7.0
+    assert set(sched.devices) >= {"jetson1"}
+
+
 def test_scheduler_scenario_boundary_bookkeeping():
     events = [Event(0.5, "data", 0, 0), Event(1.0, "data", 1, 0),
               Event(1.5, "inference", 1, 0), Event(2.0, "data", 2, 0)]

@@ -255,11 +255,14 @@ def _valid_doc():
     import benchmarks.workloads as W
 
     cell = {f: 1.0 for f in W.CELL_FIELDS}
+    cell["devices"] = 1
     stream_cell = {f: 1.0 for f in W.STREAM_FIELDS}
     model_cell = {f: 1.0 for f in W.MODEL_FIELDS}
+    device_cell = {f: 1.0 for f in W.DEVICE_FIELDS}
     cells = [dict(cell, workload=w, method=m, trigger_policy="default",
                   per_stream={"0": dict(stream_cell)},
-                  per_model={"default": dict(model_cell)})
+                  per_model={"default": dict(model_cell)},
+                  per_device={"dev0": dict(device_cell)})
              for w in ("a", "b", "c") for m in W.METHODS]
     return W, {
         "schema_version": W.SCHEMA_VERSION, "suite": "workloads",
@@ -312,6 +315,19 @@ def test_bench_schema_validator_flags_violations():
     bad = dict(doc, cells=[dict(c, workload="qos") for c in doc["cells"]])
     assert any("priority-weighted" in e for e in W.validate_bench(
         bad, min_workloads=1))
+    # v6: every cell carries a per-device attribution consistent with its
+    # `devices` count, and a fleet preset must include a multi-device cell
+    bad = dict(doc, cells=[dict(c) for c in doc["cells"]])
+    del bad["cells"][0]["per_device"]
+    assert any("per_device" in e for e in W.validate_bench(bad))
+    bad = dict(doc, cells=[dict(c, devices=2) for c in doc["cells"]])
+    assert any("devices" in e for e in W.validate_bench(bad))
+    bad = dict(doc, cells=[dict(c, per_device={"dev0": dict(
+        c["per_device"]["dev0"])}) for c in doc["cells"]])
+    del bad["cells"][0]["per_device"]["dev0"]["utilization"]
+    assert any("utilization" in e for e in W.validate_bench(bad))
+    bad = dict(doc, cells=[dict(c, workload="fleet") for c in doc["cells"]])
+    assert any(">= 2" in e for e in W.validate_bench(bad, min_workloads=1))
 
 
 # ---------------------------------------------------------------------------
