@@ -22,7 +22,12 @@ def load(mesh: str, tag: str = ""):
         parts = name.split("__")
         if (tag and not name.endswith(suffix)) or (not tag and len(parts) > 3):
             continue
-        out.append(json.load(open(p)))
+        with open(p) as f:
+            try:
+                out.append(json.load(f))
+            except json.JSONDecodeError as e:
+                raise ValueError(
+                    f"malformed dry-run record {p}: {e}") from e
     return out
 
 

@@ -32,8 +32,8 @@ from benchmarks.common import (PAPER_METHODS, make_controller,
                                method_policies)
 from repro.configs import get_reduced
 from repro.models import build_model
-from repro.runtime import (RuntimeConfig, SlotConfig, edgeol_session,
-                           materialize_stream_benchmarks)
+from repro.runtime import (RuntimeConfig, SlotConfig, TelemetrySpec,
+                           edgeol_session, materialize_stream_benchmarks)
 from repro.runtime.modelpool import ModelPool, ModelSlot
 from repro.workloads import WorkloadSpec, presets
 
@@ -77,6 +77,17 @@ MODEL_FIELDS = ("time_s", "energy_j", "flops", "rounds", "swaps",
 DEVICE_FIELDS = ("time_s", "energy_j", "flops", "rounds", "swaps",
                  "syncs", "avg_inference_acc", "inferences", "streams",
                  "utilization")
+
+
+def trace_spec(path: Optional[str]) -> Optional[TelemetrySpec]:
+    """Map a CLI ``--trace-out`` path to a `TelemetrySpec` (None stays
+    None): a ``.jsonl`` suffix selects the JSONL event feed, anything
+    else the Perfetto-loadable Chrome export (DESIGN.md §14)."""
+    if not path:
+        return None
+    if path.endswith(".jsonl"):
+        return TelemetrySpec(enabled=True, trace_jsonl=path)
+    return TelemetrySpec(enabled=True, chrome_trace=path)
 
 
 # ---------------------------------------------------------------------------
@@ -125,13 +136,17 @@ def workload_config(arch: str, workload, method: str, *, seed: int = 0,
                     compiled: bool = True,
                     use_pallas: bool = False,
                     devices=(), routing: str = "static",
-                    aggregate_every: float = 0.0) -> RuntimeConfig:
+                    aggregate_every: float = 0.0,
+                    telemetry: Optional[TelemetrySpec] = None
+                    ) -> RuntimeConfig:
     """The declarative session config of one sweep cell. `workload` is a
     preset name or an already-scaled `WorkloadSpec`; paper methods get
     their policy stacks per slot (baselines keep the default stack and
     inject controllers at session build). Cells run on the compiled hot
     path (DESIGN.md §12) unless `compiled=False`. `devices`/`routing`/
-    `aggregate_every` (v6) turn the cell into a DeviceFleet run."""
+    `aggregate_every` (v6) turn the cell into a DeviceFleet run;
+    `telemetry` (PR 9, DESIGN.md §14) attaches a `TelemetrySpec` so the
+    cell records a structured trace."""
     if isinstance(workload, WorkloadSpec):
         spec = workload
     else:
@@ -153,7 +168,8 @@ def workload_config(arch: str, workload, method: str, *, seed: int = 0,
         memory_budget_mb=memory_budget_mb,
         compiled=compiled, use_pallas=use_pallas,
         devices=tuple(devices), routing=routing,
-        aggregate_every=aggregate_every)
+        aggregate_every=aggregate_every,
+        **({"telemetry": telemetry} if telemetry is not None else {}))
 
 
 def run_workload(arch: str, spec: WorkloadSpec, method: str, *,
@@ -167,7 +183,8 @@ def run_workload(arch: str, spec: WorkloadSpec, method: str, *,
                  compiled: bool = True,
                  use_pallas: bool = False,
                  devices=(), routing: str = "static",
-                 aggregate_every: float = 0.0) -> Dict:
+                 aggregate_every: float = 0.0,
+                 telemetry: Optional[TelemetrySpec] = None) -> Dict:
     """One (workload, controller) cell: full runtime run, paper metrics +
     per-stream, per-model and per-device attribution (incl. p50/p95
     serving latency). `preemptible` turns on QoS round preemption;
@@ -188,7 +205,8 @@ def run_workload(arch: str, spec: WorkloadSpec, method: str, *,
                           workload_scale=workload_scale,
                           compiled=compiled, use_pallas=use_pallas,
                           devices=devices, routing=routing,
-                          aggregate_every=aggregate_every)
+                          aggregate_every=aggregate_every,
+                          telemetry=telemetry)
     t0 = time.time()
     if method in PAPER_METHODS:
         # fully declarative: benchmarks, pool, controllers and the event
@@ -244,7 +262,8 @@ def run_workload(arch: str, spec: WorkloadSpec, method: str, *,
 
 def sweep(*, quick: bool = True, arch: str = "mobilenetv2", seed: int = 0,
           workload_names: Optional[Sequence[str]] = None,
-          methods: Sequence[str] = METHODS) -> Dict:
+          methods: Sequence[str] = METHODS,
+          trace_out: Optional[str] = None) -> Dict:
     scale = (dict(batches_per_scenario=4, inferences=10, num_scenarios=2,
                   fleet_streams=6)
              if quick else
@@ -257,8 +276,19 @@ def sweep(*, quick: bool = True, arch: str = "mobilenetv2", seed: int = 0,
     specs = presets(seed=seed, **scale)
     names = list(workload_names) if workload_names else list(specs)
     cells: List[Dict] = []
+    # --trace-out (PR 9): record a Chrome trace of ONE representative
+    # cell — the fleet cell when the sweep includes it (richest track
+    # layout: devices x streams), else the first cell run
+    tspec = trace_spec(trace_out)
+    trace_on = "fleet" if (tspec and "fleet" in names) else \
+        (names[0] if tspec and names else None)
+
+    pending_trace = {"spec": tspec}
 
     def one(spec, method, preemptible, trigger_policy, base, **fleet_kw):
+        if spec.name == trace_on and pending_trace["spec"] is not None:
+            fleet_kw["telemetry"] = pending_trace.pop("spec")
+            pending_trace["spec"] = None
         cell = run_workload(arch, spec, method, seed=seed,
                             preemptible=preemptible,
                             trigger_policy=trigger_policy,
@@ -437,6 +467,11 @@ def main() -> int:
     ap.add_argument("--workloads", default="",
                     help="comma-separated preset names (default: all)")
     ap.add_argument("--methods", default=",".join(METHODS))
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="record a Chrome trace (DESIGN.md §14) of one "
+                         "representative cell — the fleet cell when the "
+                         "sweep includes it — to PATH; summarize with "
+                         "`python -m benchmarks.trace_report PATH`")
     ap.add_argument("--validate", metavar="PATH",
                     help="validate an existing BENCH file and exit")
     args = ap.parse_args()
@@ -457,7 +492,8 @@ def main() -> int:
     methods = tuple(m for m in args.methods.split(",") if m)
     t0 = time.time()
     doc = sweep(quick=args.quick, arch=args.arch, seed=args.seed,
-                workload_names=names, methods=methods)
+                workload_names=names, methods=methods,
+                trace_out=args.trace_out)
     errors = validate_bench(doc, min_workloads=min(
         3, len(doc["workloads"])), methods=methods)
     if errors:
@@ -470,6 +506,10 @@ def main() -> int:
     print(f"# wrote {args.out}: {len(doc['cells'])} cells over "
           f"{len(doc['workloads'])} workloads "
           f"(wall {time.time() - t0:.0f}s)")
+    if args.trace_out:
+        print(f"# wrote {args.trace_out}: Chrome trace — load at "
+              f"https://ui.perfetto.dev or summarize with "
+              f"`python -m benchmarks.trace_report {args.trace_out}`")
     return 0
 
 

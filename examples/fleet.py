@@ -19,6 +19,14 @@ down here by --streams); any other preset works too:
     PYTHONPATH=src python examples/fleet.py --devices 8 --routing static \
         --aggregate-every 50 --streams 24 --inferences 8
     PYTHONPATH=src python examples/fleet.py --preset two-stream --devices 2
+    PYTHONPATH=src python examples/fleet.py --devices 4 --streams 12 \
+        --trace-out /tmp/fleet_trace.json
+
+`--trace-out` turns on telemetry (DESIGN.md §14): a Perfetto-loadable
+Chrome trace with one track per device lane (the occupancy Gantt of
+rounds, swaps and fleet syncs) and one per stream (request latency
+spans); ``.jsonl`` paths get the raw event feed instead. Summarize with
+`python -m benchmarks.trace_report`.
 """
 import argparse
 import os
@@ -26,7 +34,7 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.workloads import METHODS, run_workload
+from benchmarks.workloads import METHODS, run_workload, trace_spec
 from repro.runtime import ROUTING_POLICIES, fleet_devices
 from repro.workloads import presets
 
@@ -68,6 +76,13 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-compiled", dest="compiled", action="store_false",
                     help="pure-Python per-event fallback (bit-identical)")
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="record the fleet's telemetry trace (DESIGN.md "
+                         "§14) to PATH: a Perfetto-loadable Chrome trace "
+                         "with one track per device and per stream, or "
+                         "the JSONL event feed if PATH ends in '.jsonl'; "
+                         "summarize with `python -m "
+                         "benchmarks.trace_report PATH`")
     args = ap.parse_args()
 
     from repro.launch.platform import bootstrap
@@ -91,7 +106,8 @@ def main():
     cell = run_workload(args.arch, spec, args.method, seed=args.seed,
                         compiled=args.compiled, workload_scale=scale,
                         devices=devices, routing=args.routing,
-                        aggregate_every=args.aggregate_every)
+                        aggregate_every=args.aggregate_every,
+                        telemetry=trace_spec(args.trace_out))
     print(f"{args.method:10s} fleet acc={cell['acc']*100:6.2f}% "
           f"time={cell['time_s']:7.1f}s energy={cell['energy_j']:7.1f}J "
           f"rounds={cell['rounds']} syncs={cell['syncs']} "
@@ -104,6 +120,10 @@ def main():
               f"swaps={per['swaps']:.0f} syncs={per['syncs']:.0f} "
               f"time={per['time_s']:6.1f}s energy={per['energy_j']:6.1f}J"
               + ("  [evicted]" if per.get("evicted") else ""))
+    if args.trace_out:
+        print(f"trace written to {args.trace_out} — load at "
+              f"https://ui.perfetto.dev or run "
+              f"`python -m benchmarks.trace_report {args.trace_out}`")
 
 
 if __name__ == "__main__":

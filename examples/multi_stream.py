@@ -34,6 +34,13 @@ the Pallas kernels (interpret mode on CPU).
         --preemptible --trigger-policy priority-weighted
     PYTHONPATH=src python examples/multi_stream.py --arch deit-tiny \
         --use-pallas
+    PYTHONPATH=src python examples/multi_stream.py --preset qos \
+        --preemptible --trace-out /tmp/qos_trace.json
+
+`--trace-out` turns on telemetry (DESIGN.md §14): the run records every
+round/segment/swap/serve/publish on the modeled timeline and writes a
+Perfetto-loadable Chrome trace (or a JSONL event feed when the path ends
+in ``.jsonl``); summarize it with `python -m benchmarks.trace_report`.
 """
 import argparse
 import os
@@ -41,7 +48,7 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.workloads import METHODS, run_workload
+from benchmarks.workloads import METHODS, run_workload, trace_spec
 from repro.workloads import presets
 
 
@@ -89,6 +96,12 @@ def main():
                     help="route attention forwards and the CKA drift "
                          "probe through the Pallas kernels (interpret "
                          "mode on CPU)")
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="record the run's telemetry trace (DESIGN.md "
+                         "§14) to PATH: a Perfetto-loadable Chrome trace, "
+                         "or the JSONL event feed if PATH ends in "
+                         "'.jsonl'; summarize with `python -m "
+                         "benchmarks.trace_report PATH`")
     args = ap.parse_args()
 
     from repro.launch.platform import bootstrap
@@ -112,7 +125,8 @@ def main():
                         workload_scale=dict(
                             batches_per_scenario=args.batches,
                             inferences=args.inferences,
-                            num_scenarios=args.scenarios))
+                            num_scenarios=args.scenarios),
+                        telemetry=trace_spec(args.trace_out))
     print(f"{args.method:10s} acc={cell['acc']*100:6.2f}% "
           f"time={cell['time_s']:7.1f}s energy={cell['energy_j']:7.1f}J "
           f"rounds={cell['rounds']} events={cell['events']} "
@@ -131,6 +145,10 @@ def main():
               f"time={per['time_s']:6.1f}s energy={per['energy_j']:6.1f}J "
               f"rounds={per['rounds']:.0f} requests={per['inferences']:.0f} "
               f"swaps={per['swaps']:.0f}")
+    if args.trace_out:
+        print(f"trace written to {args.trace_out} — load at "
+              f"https://ui.perfetto.dev or run "
+              f"`python -m benchmarks.trace_report {args.trace_out}`")
 
 
 if __name__ == "__main__":

@@ -24,6 +24,10 @@ import time
 import traceback
 from typing import Optional
 
+from repro.obs.log import configure_logging, get_logger
+
+log = get_logger("launch.dryrun")
+
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "benchmarks", "results", "dryrun")
 
@@ -140,10 +144,12 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, *,
 
     mem = compiled.memory_analysis()
     if print_analysis:
-        print(f"[{arch} x {shape_name} x {mesh_name}] memory_analysis:", mem)
+        log.info("[%s x %s x %s] memory_analysis: %s",
+                 arch, shape_name, mesh_name, mem)
         ca = RA.cost_analysis_dict(compiled)
-        print(f"[{arch} x {shape_name} x {mesh_name}] cost_analysis:",
-              {k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
+        log.info("[%s x %s x %s] cost_analysis: %s",
+                 arch, shape_name, mesh_name,
+                 {k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
 
     rep = RA.analyze(compiled, arch=arch, shape=shape_name,
                      mesh_name=mesh_name, chips=chips,
@@ -291,14 +297,14 @@ def orchestrate(mesh_modes, archs=None, shapes=None, timeout=2400,
             for shape in shapes:
                 out = cell_filename(arch, shape, mesh_name, tag)
                 if os.path.exists(out):
-                    print(f"skip existing {out}")
+                    log.info("skip existing %s", out)
                     continue
                 cmd = [sys.executable, "-m", "repro.launch.dryrun",
                        "--arch", arch, "--shape", shape, "--mesh", mesh_name,
                        "--save"] + list(extra_args)
                 if tag:
                     cmd += ["--tag", tag]
-                print(">>", " ".join(cmd), flush=True)
+                log.info(">> %s", " ".join(cmd))
                 try:
                     r = subprocess.run(cmd, timeout=timeout)
                     if r.returncode != 0:
@@ -306,13 +312,14 @@ def orchestrate(mesh_modes, archs=None, shapes=None, timeout=2400,
                 except subprocess.TimeoutExpired:
                     failures.append((arch, shape, mesh_name, "timeout"))
     if failures:
-        print("FAILURES:", failures)
+        log.error("FAILURES: %s", failures)
         return 1
-    print("all cells complete")
+    log.info("all cells complete")
     return 0
 
 
 def main():
+    configure_logging(os.environ.get("EDGEOL_LOG") or "INFO")
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
     ap.add_argument("--shape")
@@ -349,14 +356,17 @@ def main():
                   "traceback": traceback.format_exc()[-4000:], "tag": args.tag}
         if args.save:
             save_record(record)
-        print(json.dumps({k: v for k, v in record.items() if k != "traceback"},
-                         indent=1))
-        print(record["traceback"])
+        # the JSON record is the worker's machine-readable stdout
+        # contract; diagnostics go through the logger (stderr)
+        sys.stdout.write(json.dumps(
+            {k: v for k, v in record.items() if k != "traceback"},
+            indent=1) + "\n")
+        log.error("cell failed:\n%s", record["traceback"])
         sys.exit(2)
     if args.save:
         path = save_record(record)
-        print("saved", path)
-    print(json.dumps(record, indent=1))
+        log.info("saved %s", path)
+    sys.stdout.write(json.dumps(record, indent=1) + "\n")
 
 
 if __name__ == "__main__":

@@ -86,6 +86,11 @@ def bootstrap(platform: str = None, host_devices: int = None,
     if _bootstrapped:
         return
     _bootstrapped = True
+    # logging first, so everything after (including jax config paths)
+    # reports through the "edgeol" logger tree; level from $EDGEOL_LOG
+    from repro.obs.log import configure_logging
+
+    configure_logging()
     if host_devices:
         set_host_device_count(host_devices)
     platform = platform or os.environ.get("EDGEOL_PLATFORM")

@@ -7,6 +7,7 @@ production mesh from launch/mesh.py.
     PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --steps 60
 """
 import argparse
+import os
 import time
 
 import jax
@@ -19,10 +20,16 @@ from repro.core.freeze_plan import FreezePlan
 from repro.distributed import sharding as sh
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
+from repro.obs.log import configure_logging, get_logger
 from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+log = get_logger("launch.train")
 
 
 def main():
+    # a CLI driver wants its progress visible by default; EDGEOL_LOG
+    # still wins when set (e.g. EDGEOL_LOG=WARNING for quiet runs)
+    configure_logging(os.environ.get("EDGEOL_LOG") or "INFO")
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma2-2b", choices=list(ARCHS))
     ap.add_argument("--steps", type=int, default=60)
@@ -35,7 +42,7 @@ def main():
     cfg = get_reduced(args.arch)
     model = build_model(cfg)
     mesh = make_host_mesh()
-    print(f"mesh: {dict(mesh.shape)} devices={mesh.devices.size}")
+    log.info("mesh: %s devices=%d", dict(mesh.shape), mesh.devices.size)
 
     params = model.init(jax.random.PRNGKey(0))
     specs = sh.param_specs(params, cfg, mesh)
@@ -65,7 +72,8 @@ def main():
                 G = model.num_freeze_units
                 plan = FreezePlan(groups=tuple(i < G // 2 for i in range(G)),
                                   embed=True)
-                print(f"step {step_i}: structural freeze of {G//2}/{G} groups")
+                log.info("step %d: structural freeze of %d/%d groups",
+                         step_i, G // 2, G)
             toks = rng.integers(0, cfg.vocab_size, (args.batch, args.seq + 1))
             batch = {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
                      "targets": jnp.asarray(toks[:, 1:], jnp.int32)}
@@ -75,11 +83,11 @@ def main():
                     jnp.bfloat16)
             params, opt_state, loss = get_step(plan)(params, opt_state, batch)
             if step_i % 10 == 0:
-                print(f"step {step_i:3d} loss={float(loss):.4f}")
+                log.info("step %3d loss=%.4f", step_i, float(loss))
             if step_i % 25 == 24:
                 mgr.save(step_i, params)
     mgr.save(args.steps - 1, params, block=True)
-    print(f"done in {time.time()-t0:.1f}s; ckpts at {args.ckpt_dir}")
+    log.info("done in %.1fs; ckpts at %s", time.time() - t0, args.ckpt_dir)
 
 
 if __name__ == "__main__":

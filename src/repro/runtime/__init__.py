@@ -1,3 +1,4 @@
+from repro.obs.spec import TelemetrySpec
 from repro.runtime.config import (DeviceConfig, HookSpec, RuntimeConfig,
                                   SlotConfig, build_hook,
                                   materialize_stream_benchmarks)
@@ -28,4 +29,5 @@ __all__ = ["EdgeCostModel", "PodCostModel", "ContinualRuntime", "RunResult",
            "SlotConfig", "HookSpec", "DeviceConfig", "edgeol_session",
            "build_hook", "materialize_stream_benchmarks", "scale_cost",
            "DeviceRuntime", "DeviceFleet", "RoutingPolicy", "StaticAffinity",
-           "LeastLoaded", "ROUTING_POLICIES", "FLEET_STREAM", "fleet_devices"]
+           "LeastLoaded", "ROUTING_POLICIES", "FLEET_STREAM", "fleet_devices",
+           "TelemetrySpec"]

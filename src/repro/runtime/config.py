@@ -34,6 +34,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.policies import PolicyStackSpec
+from repro.obs.spec import TelemetrySpec
 from repro.runtime.executor import FakeQuantHook, RoundHook, SimSiamHook
 
 #: workload_scale keys forwarded to `repro.workloads.presets` (plus
@@ -224,6 +225,11 @@ class RuntimeConfig:
     devices: Tuple[DeviceConfig, ...] = ()
     routing: str = "static"
     aggregate_every: float = 0.0
+    # observability (DESIGN.md §14): the default spec is inactive — no
+    # tracer, no metrics, no sinks; the run is bit-exact with the
+    # pre-telemetry runtime. Any of enabled/trace_jsonl/chrome_trace
+    # builds a live `repro.obs.Telemetry` for the session.
+    telemetry: TelemetrySpec = field(default_factory=TelemetrySpec)
 
     # ---- validation ------------------------------------------------------
     def validate(self) -> "RuntimeConfig":
@@ -270,6 +276,10 @@ class RuntimeConfig:
         if self.routing not in ROUTING_POLICIES:
             raise ValueError(f"unknown routing policy {self.routing!r}; "
                              f"known: {sorted(ROUTING_POLICIES)}")
+        if not isinstance(self.telemetry, TelemetrySpec):
+            raise ValueError(f"telemetry must be a TelemetrySpec (got "
+                             f"{type(self.telemetry).__name__})")
+        self.telemetry.validate()
         return self
 
     # ---- serialization ---------------------------------------------------
@@ -298,6 +308,8 @@ class RuntimeConfig:
             out["routing"] = self.routing
         if self.aggregate_every:
             out["aggregate_every"] = self.aggregate_every
+        if self.telemetry != TelemetrySpec():
+            out["telemetry"] = self.telemetry.to_dict()
         return out
 
     @classmethod
@@ -308,7 +320,8 @@ class RuntimeConfig:
                  "replay_batches", "pretrain_epochs", "inference_batch",
                  "calibrate_cost", "inference_window", "preemptible",
                  "preempt_resume_cost_s", "memory_budget_mb", "compiled",
-                 "use_pallas", "devices", "routing", "aggregate_every"}
+                 "use_pallas", "devices", "routing", "aggregate_every",
+                 "telemetry"}
         unknown = set(d) - valid
         if unknown:
             raise ValueError(f"runtime config: unknown key(s) "
@@ -322,11 +335,23 @@ class RuntimeConfig:
         if "devices" in kw:
             kw["devices"] = tuple(DeviceConfig.from_dict(dc)
                                   for dc in kw["devices"])
+        if "telemetry" in kw:
+            kw["telemetry"] = TelemetrySpec.from_dict(kw["telemetry"])
         return cls(**kw).validate()
 
 
 # ---------------------------------------------------------------------------
 # session materialization
+
+
+def _build_telemetry(spec: TelemetrySpec):
+    """An active spec becomes a live `repro.obs.Telemetry`; the default
+    inactive spec stays None — the zero-overhead legacy path."""
+    if not spec.active:
+        return None
+    from repro.obs.telemetry import Telemetry
+
+    return Telemetry(spec)
 
 
 def materialize_stream_benchmarks(spec, seed: int,
@@ -539,4 +564,5 @@ def resolve_session(cfg: RuntimeConfig, *, model=None, benchmark=None,
         model_pool=model_pool, compiled=cfg.compiled,
         use_pallas=cfg.use_pallas, session_events=session_events,
         devices=cfg.devices, routing=cfg.routing,
-        aggregate_every=cfg.aggregate_every)
+        aggregate_every=cfg.aggregate_every,
+        telemetry=_build_telemetry(cfg.telemetry))

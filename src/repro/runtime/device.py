@@ -65,11 +65,16 @@ class DeviceRuntime:
         # straggler-tracker feed), reset by the fleet at each sync
         self.rounds_since_sync: Dict[str, int] = {n: 0 for n in slots}
         self.round_times: List[float] = []
+        # observability (DESIGN.md §14): the fleet's tracer (NULL_TRACER
+        # when telemetry is off) records this device's swap/cka/probe
+        # spans; the serving lane tags its instants with the device name.
+        self.tracer = fleet.tracer
         host = self.host
         self.server = InferenceServer(self.primary.model,
                                       batch_window=host.inference_window,
                                       on_served=self.served,
-                                      fused=host.compiled)
+                                      fused=host.compiled,
+                                      tracer=self.tracer, track=self.name)
         for name, st in slots.items():
             self.server.register(name, st.model)
             self.server.publish(st.executor.params, 0.0, slot=name)
@@ -116,8 +121,12 @@ class DeviceRuntime:
             self.ledger.charge_swap(time_s=t_swap, energy_j=e_swap,
                                     model=slot.name, stream=stream,
                                     device=self.name)
-            self.scheduler.occupy(now, t_swap, stream=stream,
-                                  device=self.name)
+            r = self.scheduler.occupy(now, t_swap, stream=stream,
+                                      device=self.name)
+            if self.tracer:
+                self.tracer.span("swap", f"swap/{slot.name}", r.start,
+                                 t_swap, stream=stream, device=self.name,
+                                 slot=slot.name)
 
     def complete(self, slot, report) -> None:
         # a round's results reach the rest of the system when it
@@ -151,6 +160,10 @@ class DeviceRuntime:
                 tc, ec = slot.executor.cost.compute_cost(dcka)
                 self.ledger.charge_probe("cka", tc, ec, stream=stream,
                                          model=slot.name, device=self.name)
+                if self.tracer:
+                    self.tracer.span("cka", f"cka/{slot.name}", report.end,
+                                     tc, stream=stream, device=self.name,
+                                     slot=slot.name)
         fleet.last_round_end[stream] = report.end
         self.rounds_since_sync[slot.name] += 1
         self.round_times.append(report.time_s)
@@ -252,6 +265,9 @@ class DeviceRuntime:
         else:
             self.acquire(slot, ev.time, st)
             latency = self.scheduler.busy_until_of(self.name) - ev.time
+        if fleet.telemetry is not None:
+            fleet.telemetry.metrics.histogram(
+                "latency_s", stream=st).observe(latency)
         self.server.submit(ev.time, {k: v[idx] for k, v in test.items()},
                            stream=st, latency=latency, slot=slot.name)
 
@@ -277,6 +293,9 @@ class DeviceRuntime:
         tc, ec = slot.executor.cost.compute_cost(flops)
         self.ledger.charge_probe("probe", tc, ec, stream=st,
                                  model=slot.name, device=self.name)
+        if self.tracer:
+            self.tracer.span("probe", f"probe/{slot.name}", ev.time, tc,
+                             stream=st, device=self.name, slot=slot.name)
         confirm = getattr(ctrl, "probe_served", None)
         if confirm is None or confirm(logits):
             fleet.pending_change[st] = True
@@ -329,7 +348,8 @@ def clone_device_slots(fleet, spec, index: int, slots0: Dict,
             model_name=name, device_name=spec.name,
             speed_scale=spec.speed_scale,
             preempt_resume_cost_s=host.preempt_resume_cost_s,
-            compiled=host.compiled, fuse=host.segment)
+            compiled=host.compiled, fuse=host.segment,
+            tracer=fleet.tracer)
         executor.load(jax.tree.map(jnp.copy, src.executor.params),
                       jax.tree.map(jnp.copy, src.executor.opt_state))
         slots[name] = _SlotState(name, src.model, src.bench, ctrl,

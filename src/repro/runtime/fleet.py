@@ -42,6 +42,8 @@ import numpy as np
 from repro.core.policies import adapt_controller
 from repro.data.arrivals import Event
 from repro.distributed.straggler import StragglerConfig, StragglerTracker
+from repro.obs.log import get_logger
+from repro.obs.trace import NULL_TRACER
 from repro.runtime.config import DeviceConfig
 from repro.runtime.device import (DeviceRuntime, clone_device_slots,
                                   clone_pool)
@@ -55,6 +57,8 @@ from repro.runtime.train_loop import (as_jnp, make_optimizer_state,
 #: caused them, the fleet did. Appears in `per_stream` like any stream
 #: (the sums-to-totals contract is unchanged).
 FLEET_STREAM = -1
+
+log = get_logger("fleet")
 
 
 # ---------------------------------------------------------------------------
@@ -184,6 +188,11 @@ class DeviceFleet:
         self.tracker: Optional[StragglerTracker] = None
         self._evicted: set = set()
         self._flagged: set = set()
+        # observability (DESIGN.md §14): run() swaps in the host's live
+        # Telemetry bundle when one is configured; the falsy NULL_TRACER
+        # default keeps every instrumented path allocation-free.
+        self.telemetry = None
+        self.tracer = NULL_TRACER
 
     # ---- lookups (fleet-level policy state, see device.py docstring) -----
     def device_for(self, stream: int) -> DeviceRuntime:
@@ -204,6 +213,16 @@ class DeviceFleet:
         rng = np.random.default_rng(host.seed)
         ledger = CostLedger()
         self.ledger = ledger
+        # observability: reset the host's Telemetry for this run (fresh
+        # tracer + registry), install it as the ledger's observer and
+        # expose its tracer to every subsystem built below. A host
+        # without telemetry keeps the falsy NULL_TRACER everywhere.
+        tel = getattr(host, "telemetry", None)
+        self.telemetry = tel
+        if tel is not None:
+            tel.reset()
+            self.tracer = tel.tracer
+            ledger.telemetry = tel
         slots0 = host._build_slots(ledger, rng, device=self.specs[0])
         primary_slot = next(iter(slots0.values()))
         primary_ctrl = host.controller if host.controller is not None \
@@ -255,6 +274,9 @@ class DeviceFleet:
         self.assignment = dict(self.policy.assign(stream_ids, events,
                                                   self.specs))
         scheduler = EventScheduler(events)
+        scheduler.tracer = self.tracer
+        scheduler.trace_dispatch = tel.spec.dispatch_events \
+            if tel is not None else True
         self.scheduler = scheduler
         # live handles: controller callbacks / tests may push events onto
         # the running timeline (mid-drain push is supported)
@@ -390,6 +412,18 @@ class DeviceFleet:
                 self.evict_device(h, ts)
             current = set(self.tracker.stragglers()) - self._evicted
             for h in sorted(current - self._flagged):
+                # straggler mitigation must be loud: a flagged device
+                # loses its streams and sits merges out until it recovers
+                log.warning("sync at t=%.3f: device %s flagged as "
+                            "straggler — re-routing its streams",
+                            ts, self.devices[h].name)
+                if self.telemetry is not None:
+                    self.telemetry.metrics.counter(
+                        "straggler_flags",
+                        device=self.devices[h].name).inc()
+                if self.tracer:
+                    self.tracer.instant("straggler", "flag", ts,
+                                        device=self.devices[h].name)
                 self._reroute_streams(h, ts)
             self._flagged = current
         self._merge(ts)
@@ -404,10 +438,22 @@ class DeviceFleet:
         candidates = [d for d in self.devices
                       if d.index not in self._evicted
                       and d.index not in self._flagged]
+        tel = self.telemetry
         for name in self.devices[0].slots:
             group = [d for d in candidates
                      if d.slots[name].executor.active_round is None]
+            skipped = [d for d in candidates if d not in group]
+            for d in skipped:
+                # never a silent drop: a mid-round device sitting a merge
+                # out is expected, but observable (log + counter)
+                log.info("sync at t=%.3f: device %s sits out slot %r "
+                         "merge (round in flight)", ts, d.name, name)
+                if tel is not None:
+                    tel.metrics.counter("sync_skips", device=d.name).inc()
             if len(group) < 2:
+                log.info("sync at t=%.3f: slot %r merge skipped "
+                         "(%d eligible device(s), need >= 2)",
+                         ts, name, len(group))
                 continue
             ws = [float(d.rounds_since_sync.get(name, 0)) for d in group]
             total = sum(ws)
@@ -427,8 +473,13 @@ class DeviceFleet:
                 self.ledger.charge_sync(
                     time_s=t_sync, energy_j=t_sync * c.overhead_power_w,
                     device=d.name, stream=FLEET_STREAM, model=name)
-                self.scheduler.occupy(ts, t_sync, stream=FLEET_STREAM,
-                                      device=d.name)
+                r = self.scheduler.occupy(ts, t_sync, stream=FLEET_STREAM,
+                                          device=d.name)
+                if self.tracer:
+                    self.tracer.span("sync", f"sync/{name}", r.start,
+                                     t_sync, stream=FLEET_STREAM,
+                                     device=d.name, slot=name,
+                                     participants=len(group))
                 d.rounds_since_sync[name] = 0
 
     def _reroute_streams(self, from_idx: int, ts: float) -> None:
@@ -461,6 +512,15 @@ class DeviceFleet:
         onto it (values preserved; distributed/elastic.py)."""
         if index in self._evicted:
             return
+        log.warning("t=%.3f: evicting device %s (persistent straggler); "
+                    "its streams re-route and its deltas leave the merge",
+                    ts, self.devices[index].name)
+        if self.telemetry is not None:
+            self.telemetry.metrics.counter(
+                "evictions", device=self.devices[index].name).inc()
+        if self.tracer:
+            self.tracer.instant("straggler", "evict", ts,
+                                device=self.devices[index].name)
         if self.tracker is not None:
             self.tracker.evict(index)
         self._evicted.add(index)
@@ -540,6 +600,16 @@ class DeviceFleet:
                 if makespan > 0 else 0.0
             cell["evicted"] = float(dev.index in self._evicted)
             per_device[dev.name] = cell
+        tel = self.telemetry
+        if tel is not None:
+            for dev in self.devices:
+                tel.metrics.gauge("utilization", device=dev.name).set(
+                    per_device[dev.name]["utilization"])
+            tel.metrics.gauge("recompiles").set(float(
+                sum(st.steps.recompiles for st in slots0.values())
+                if host.pool is not None else host.steps.recompiles))
+            tel.metrics.gauge("makespan_s").set(makespan)
+            tel.flush_sinks()
         return RunResult(
             avg_inference_acc=float(np.mean(all_accs)) if all_accs else 0.0,
             total_time_s=ledger.total_time_s,

@@ -43,6 +43,7 @@ from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
 from repro.runtime.ledger import DEFAULT_MODEL
 from repro.runtime.train_loop import as_jnp, evaluate
 
@@ -88,9 +89,16 @@ class InferenceServer:
 
     def __init__(self, model, *, batch_window: float = 0.0,
                  on_served: Optional[Callable[[np.ndarray, int], bool]] = None,
-                 fused: bool = False):
+                 fused: bool = False, tracer=NULL_TRACER,
+                 track: Optional[str] = None):
         self.batch_window = float(batch_window)
         self.on_served = on_served
+        # observability (DESIGN.md §14): request spans (per-stream latency
+        # on the modeled timeline — no device tag, so they never enter
+        # device-time reconciliation) plus serve/publish instants tagged
+        # with `track`, the owning device's lane. NULL_TRACER = free.
+        self.tracer = tracer
+        self.track = track
         # compiled hot path (DESIGN.md §12): defer closed groups to a FIFO
         # and execute them in `drain()` as padded vmapped forwards —
         # same-shape groups for one (slot, params) stack into a single
@@ -161,6 +169,10 @@ class InferenceServer:
         model" effect."""
         self.flush()
         self.drain()
+        if self.tracer:
+            self.tracer.instant("publish", f"publish/{slot}", visible_at,
+                                device=self.track, slot=slot,
+                                delayed=delayed)
         lane = self._lanes[slot]
         if delayed and lane.visible_params is not None:
             lane.latest_params = lane.visible_params
@@ -198,6 +210,9 @@ class InferenceServer:
         modeled service time); it is recorded per stream and reported via
         `RunResult.per_stream` percentiles, never acted on here."""
         self.latencies_by_stream.setdefault(stream, []).append(float(latency))
+        if self.tracer:
+            self.tracer.span("request", f"s{stream}", t, float(latency),
+                             stream=stream, slot=slot)
         params = self._resolve(t, slot)
         pending = _Pending(t, request, params, stream, slot,
                            self._lanes[slot].model)
@@ -237,6 +252,10 @@ class InferenceServer:
         if self.fused:
             self._ready.append(group)
             return
+        if self.tracer:
+            self.tracer.instant("serve", f"serve/{group[0].slot}",
+                                group[0].time, device=self.track,
+                                slot=group[0].slot, requests=len(group))
         self.eval_calls += 1
         if len(group) == 1:
             p = group[0]
@@ -287,6 +306,12 @@ class InferenceServer:
         logits_by_group: Dict[int, np.ndarray] = {}
         for (slot, _, sig), idxs in stacks.items():
             first = ready[idxs[0]][0]
+            if self.tracer:
+                self.tracer.instant("serve", f"vmap/{slot}", first.time,
+                                    device=self.track, slot=slot,
+                                    groups=len(idxs),
+                                    requests=sum(len(ready[i])
+                                                 for i in idxs))
             out = self._forward_stack(first.model, first.params, slot, sig,
                                       [concats[i] for i in idxs])
             for row, gi in enumerate(idxs):

@@ -20,7 +20,7 @@ single-device runs put everything under the ``"default"`` slot and the
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict
+from typing import Dict, Optional
 
 #: Breakdown keys every `RunResult.breakdown` carries. `t_`/`e_` prefix =
 #: seconds / joules; `compute`/`overhead` follow the paper's Fig. 3 split;
@@ -72,6 +72,11 @@ class CostLedger:
     per_stream: Dict[int, Dict[str, float]] = field(default_factory=dict)
     per_model: Dict[str, Dict[str, float]] = field(default_factory=dict)
     per_device: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    # optional observer (`repro.obs.Telemetry`): every charge is mirrored
+    # into its MetricsRegistry so metrics reconcile with the ledger
+    # exactly. None (the default) is the zero-overhead legacy path.
+    telemetry: Optional[object] = field(default=None, repr=False,
+                                        compare=False)
 
     def _stream(self, stream: int) -> Dict[str, float]:
         return self.per_stream.setdefault(
@@ -130,10 +135,20 @@ class CostLedger:
             per["rounds"] += 1
             pm["rounds"] += 1
             pd["rounds"] += 1
+        if self.telemetry is not None:
+            self.telemetry.on_charge(time_s=time_s, energy_j=energy_j,
+                                     flops=flops, stream=stream,
+                                     model=model, device=device,
+                                     kind="round")
+            if final:
+                self.telemetry.on_round(stream=stream, model=model,
+                                        device=device)
 
     def note_preemption(self, stream: int = 0) -> None:
         """A higher-priority arrival split `stream`'s in-flight round."""
         self._stream(stream)["preemptions"] += 1
+        if self.telemetry is not None:
+            self.telemetry.on_preemption(stream=stream)
 
     @property
     def preemptions(self) -> int:
@@ -159,6 +174,10 @@ class CostLedger:
         pd = self._device(device)
         pd["time_s"] += time_s
         pd["energy_j"] += energy_j
+        if self.telemetry is not None:
+            self.telemetry.on_charge(time_s=time_s, energy_j=energy_j,
+                                     flops=0.0, stream=stream, model=model,
+                                     device=device, kind=key)
 
     def charge_swap(self, *, time_s: float, energy_j: float, model: str,
                     stream: int = 0, device: str = DEFAULT_DEVICE) -> None:
@@ -170,6 +189,8 @@ class CostLedger:
                           model=model, device=device)
         self._model(model)["swaps"] += 1
         self._device(device)["swaps"] += 1
+        if self.telemetry is not None:
+            self.telemetry.on_swap(model=model, device=device)
 
     def charge_sync(self, *, time_s: float, energy_j: float, device: str,
                     stream: int = 0, model: str = DEFAULT_MODEL) -> None:
@@ -181,6 +202,8 @@ class CostLedger:
         self.charge_probe("sync", time_s, energy_j, stream=stream,
                           model=model, device=device)
         self._device(device)["syncs"] += 1
+        if self.telemetry is not None:
+            self.telemetry.on_sync(device=device)
 
     @property
     def swaps(self) -> int:

@@ -27,7 +27,11 @@ from typing import Callable, Dict, Iterable, Optional
 # everywhere (the legacy case) degenerates to the original
 # (time, kind, insertion) order.
 from repro.data.arrivals import KIND_ORDER, Event
+from repro.obs.log import get_logger
+from repro.obs.trace import NULL_TRACER
 from repro.runtime.ledger import DEFAULT_DEVICE
+
+log = get_logger("scheduler")
 
 OnData = Callable[[Event, bool], None]          # (event, scenario_boundary)
 OnInference = Callable[[Event], None]
@@ -98,6 +102,14 @@ class EventScheduler:
         self.current_scenario = 0
         self.stream_scenarios: Dict[int, int] = {}
         self.dispatched = 0
+        # observability (DESIGN.md §14): the fleet swaps in a live Tracer
+        # when telemetry is enabled; the falsy NULL_TRACER default keeps
+        # the dispatch loop allocation-free. `dropped_probes` counts probe
+        # events popped with no `on_probe` handler wired (logged, since a
+        # silently vanishing probe is a mis-wired composition root).
+        self.tracer = NULL_TRACER
+        self.trace_dispatch = True
+        self.dropped_probes = 0
         for e in events:
             self.push(e)
 
@@ -217,10 +229,14 @@ class EventScheduler:
         never reorders: the segment's events are exactly the events
         `on_inference` would have seen, in the same order, and `now` /
         `dispatched` advance identically."""
+        trace = self.tracer if self.trace_dispatch else NULL_TRACER
         while self._heap:
             _, ev = heapq.heappop(self._heap)
             self.now = max(self.now, ev.time)
             self.dispatched += 1
+            if trace:
+                trace.instant("dispatch", ev.kind, ev.time,
+                              stream=ev.stream, scenario=ev.scenario)
             if ev.kind == "data":
                 previous = self.stream_scenarios.get(ev.stream, 0)
                 boundary = ev.scenario != previous
@@ -235,12 +251,27 @@ class EventScheduler:
             elif ev.kind == "probe":
                 if on_probe is not None:
                     on_probe(ev)
+                else:
+                    # a probe with no handler vanishes by design (it
+                    # carries no payload a generic embedder must not
+                    # lose) — but never silently: log + count it, so a
+                    # mis-wired composition root is diagnosable
+                    self.dropped_probes += 1
+                    log.warning(
+                        "probe event dropped at t=%.3f (stream %s): no "
+                        "on_probe handler wired (%d dropped so far)",
+                        ev.time, ev.stream, self.dropped_probes)
             elif on_inference_segment is not None:
                 segment = [ev]
                 while self._heap and self._heap[0][1].kind == "inference":
                     _, nxt = heapq.heappop(self._heap)
                     self.dispatched += 1
                     segment.append(nxt)
+                if trace:
+                    for nxt in segment[1:]:
+                        trace.instant("dispatch", nxt.kind, nxt.time,
+                                      stream=nxt.stream,
+                                      scenario=nxt.scenario)
                 self.now = max(self.now, segment[-1].time)
                 on_inference_segment(segment)
             else:

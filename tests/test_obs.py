@@ -1,0 +1,276 @@
+"""Observability layer (DESIGN.md §14): trace round trips through both
+sinks, metrics/ledger reconciliation across all three attribution
+dimensions, the NullTracer disabled-path bit-exactness contract, and the
+fleet-preset trace's per-device/per-stream track completeness.
+
+The load-bearing tests are `test_telemetry_disabled_is_bit_exact` (the
+default session must not move a bit when instrumentation code is merely
+*present*) and `test_reconciliation_all_dimensions` (summed span
+durations and metric counters reproduce the CostLedger's attributions —
+the trace *is* the ledger, unrolled over time)."""
+import json
+import logging
+
+import numpy as np
+import pytest
+
+from repro.data.arrivals import Event
+from repro.obs import (DEVICE_TIME_CATS, NULL_TRACER, MetricsRegistry,
+                       TelemetrySpec, TraceEvent, Tracer, chrome_trace,
+                       chrome_tracks, device_time, events_from_chrome,
+                       load_chrome_trace, read_jsonl, write_chrome_trace,
+                       write_jsonl)
+from repro.runtime import RuntimeConfig, SlotConfig, edgeol_session
+from repro.runtime.fleet import fleet_devices
+from repro.runtime.scheduler import EventScheduler
+
+SCALE = dict(batches_per_scenario=3, inferences=6, num_scenarios=2)
+
+
+def _session(workload="two-stream", *, scale=SCALE, **cfg_kw):
+    cfg = RuntimeConfig(slots={"cv": SlotConfig()}, workload=workload,
+                        workload_scale=dict(scale), seed=0,
+                        pretrain_epochs=1, compiled=True, **cfg_kw)
+    return edgeol_session(cfg)
+
+
+def _events():
+    return [
+        TraceEvent("round/cv", "round", 10.0, 2.5, stream=0, device="dev0",
+                   slot="cv", args={"iters": 3, "recompiled": True}),
+        TraceEvent("sync/cv", "sync", 20.0, 0.5, stream=-1, device="dev1",
+                   slot="cv"),
+        TraceEvent("serve/cv", "serve", 12.0, None, device="dev0",
+                   slot="cv", args={"requests": 4}),
+        TraceEvent("s1", "request", 12.0, 1.25, stream=1, slot="cv"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# sinks: JSONL and Chrome round trips
+
+
+def test_jsonl_round_trip_is_identity(tmp_path):
+    path = str(tmp_path / "trace.jsonl")
+    events = _events()
+    write_jsonl(events, path)
+    assert read_jsonl(path) == events
+
+
+def test_jsonl_malformed_line_names_file(tmp_path):
+    path = str(tmp_path / "bad.jsonl")
+    with open(path, "w") as f:
+        f.write('{"name": "ok", "cat": "round", "ts": 1.0}\n{oops\n')
+    with pytest.raises(ValueError, match=r"bad\.jsonl line 2"):
+        read_jsonl(path)
+
+
+def test_chrome_trace_round_trips_and_names_tracks(tmp_path):
+    events = _events()
+    doc = chrome_trace(events)
+    tracks = chrome_tracks(doc)
+    assert tracks["devices"] == ["dev0", "dev1"]
+    # stream -1 (fleet-caused work) renders as the "fleet" track
+    assert tracks["streams"] == ["fleet", "stream 0", "stream 1"]
+    # inversion recovers the original event list up to ordering
+    back = events_from_chrome(doc)
+    key = lambda e: (e.ts, e.name, e.cat)  # noqa: E731
+    assert sorted(back, key=key) == sorted(events, key=key)
+    # and the on-disk loader accepts what the writer produced
+    path = str(tmp_path / "trace.json")
+    write_chrome_trace(events, path)
+    loaded = load_chrome_trace(path)
+    assert chrome_tracks(loaded) == tracks
+
+
+def test_load_chrome_trace_rejects_malformed(tmp_path):
+    bad = tmp_path / "broken.json"
+    bad.write_text("{not json")
+    with pytest.raises(ValueError, match=r"broken\.json"):
+        load_chrome_trace(str(bad))
+    empty = tmp_path / "empty.json"
+    empty.write_text(json.dumps({"traceEvents": []}))
+    with pytest.raises(ValueError, match="non-empty"):
+        load_chrome_trace(str(empty))
+
+
+def test_device_time_sums_only_occupancy_spans():
+    got = device_time(_events())
+    # the "request" span has no device tag, the "serve" instant no dur —
+    # only the round (2.5s on dev0) and the sync (0.5s on dev1) count
+    assert got == {"dev0": 2.5, "dev1": 0.5}
+    assert "request" not in DEVICE_TIME_CATS
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+
+
+def test_metrics_counters_and_subset_sum():
+    m = MetricsRegistry()
+    m.counter("time_s", stream=0, device="dev0").inc(2.0)
+    m.counter("time_s", stream=1, device="dev0").inc(3.0)
+    m.counter("time_s", stream=1, device="dev1").inc(5.0)
+    assert m.counter_value("time_s", stream=1, device="dev1") == 5.0
+    assert m.sum_counters("time_s", device="dev0") == 5.0
+    assert m.sum_counters("time_s", stream=1) == 8.0
+    assert m.sum_counters("time_s") == 10.0
+    assert m.label_values("time_s", "device") == ["dev0", "dev1"]
+
+
+def test_metrics_histogram_summary_and_snapshot():
+    m = MetricsRegistry()
+    h = m.histogram("latency_s", stream=0)
+    for v in (0.1, 0.4, 0.2, 0.9):
+        h.observe(v)
+    m.gauge("utilization", device="dev0").set(0.5)
+    snap = m.snapshot()
+    s = snap["histograms"]["latency_s{stream=0}"]
+    assert s["count"] == 4 and s["min"] == 0.1 and s["max"] == 0.9
+    assert abs(s["sum"] - 1.6) < 1e-12
+    assert snap["gauges"]["utilization{device=dev0}"] == 0.5
+
+
+# ---------------------------------------------------------------------------
+# TelemetrySpec (the RuntimeConfig knob)
+
+
+def test_telemetry_spec_round_trip_and_unknown_key():
+    spec = TelemetrySpec(enabled=True, chrome_trace="t.json",
+                         dispatch_events=False)
+    assert TelemetrySpec.from_dict(spec.to_dict()) == spec
+    assert TelemetrySpec.from_dict(TelemetrySpec().to_dict()) \
+        == TelemetrySpec()
+    with pytest.raises(ValueError, match="unknown key"):
+        TelemetrySpec.from_dict({"enabled": True, "chrom_trace": "x"})
+    # sink paths imply collection even without `enabled`
+    assert TelemetrySpec(trace_jsonl="x.jsonl").active
+    assert not TelemetrySpec().active
+
+
+def test_runtime_config_round_trips_telemetry():
+    cfg = RuntimeConfig(slots={"cv": SlotConfig()}, workload="two-stream",
+                        telemetry=TelemetrySpec(enabled=True))
+    back = RuntimeConfig.from_dict(json.loads(json.dumps(cfg.to_dict())))
+    assert back.telemetry == cfg.telemetry
+    # the default (inactive) spec stays out of the serialized form
+    assert "telemetry" not in RuntimeConfig(
+        slots={"cv": SlotConfig()}, workload="two-stream").to_dict()
+
+
+# ---------------------------------------------------------------------------
+# NullTracer disabled path: bit-exactness
+
+
+def test_null_tracer_is_falsy_and_inert():
+    assert not NULL_TRACER
+    assert len(NULL_TRACER) == 0
+    NULL_TRACER.span("round", "r", 0.0, 1.0)
+    NULL_TRACER.instant("serve", "s", 0.0)
+    assert NULL_TRACER.events == []
+    assert Tracer()  # the live one is truthy even while empty
+
+
+def test_telemetry_disabled_is_bit_exact():
+    """The default session (telemetry=None) and an enabled one produce
+    bitwise-identical results — instrumentation observes, never steers."""
+    off = _session().run()
+    rt = _session(telemetry=TelemetrySpec(enabled=True))
+    on = rt.run()
+    assert rt.telemetry is not None
+    assert len(rt.telemetry.tracer.events) > 0
+    np.testing.assert_array_equal(off.inference_accs, on.inference_accs)
+    np.testing.assert_array_equal(off.val_curve, on.val_curve)
+    assert off.total_time_s == on.total_time_s
+    assert off.total_energy_j == on.total_energy_j
+    assert off.compute_tflops == on.compute_tflops
+    assert off.rounds == on.rounds
+    assert off.per_stream == on.per_stream
+    assert off.per_model == on.per_model
+    assert off.per_device == on.per_device
+
+
+# ---------------------------------------------------------------------------
+# ledger <-> metrics <-> trace reconciliation
+
+
+def test_reconciliation_all_dimensions():
+    rt = _session(telemetry=TelemetrySpec(enabled=True), preemptible=True)
+    res = rt.run()
+    tel = rt.telemetry
+    rec = tel.reconcile(res)
+    assert set(rec) == {f"{d}.{f}" for d in
+                        ("per_stream", "per_model", "per_device")
+                        for f in ("time_s", "energy_j", "flops")}
+    assert max(rec.values()) < 1e-9
+    # the trace-side half: per-device span-duration sums reproduce the
+    # ledger's device time attribution
+    spans = device_time(tel.tracer.events)
+    for dev, cell in res.per_device.items():
+        np.testing.assert_allclose(spans.get(dev, 0.0), cell["time_s"],
+                                   atol=1e-6)
+    # snapshot attaches both halves
+    snap = tel.snapshot(res)
+    assert snap["trace_events"] == len(tel.tracer.events)
+    assert max(snap["reconciliation"].values()) < 1e-9
+
+
+def test_fleet_preset_trace_has_all_tracks(tmp_path):
+    """ISSUE acceptance: on the fleet preset the Chrome trace loads, has
+    one track per device and per stream, and span sums reconcile with the
+    ledger's per-device totals."""
+    path = str(tmp_path / "fleet.json")
+    rt = _session(
+        "fleet", scale=dict(SCALE, fleet_streams=4),
+        telemetry=TelemetrySpec(enabled=True, chrome_trace=path),
+        devices=fleet_devices(3, seed=0, speed_spread=0.4,
+                              energy_spread=0.2),
+        routing="least-loaded", aggregate_every=25.0)
+    res = rt.run()
+    assert res.syncs > 0
+    doc = load_chrome_trace(path)          # CI's validating loader
+    tracks = chrome_tracks(doc)
+    assert tracks["devices"] == sorted(res.per_device)
+    for s in range(4):
+        assert f"stream {s}" in tracks["streams"]
+    assert "fleet" in tracks["streams"]    # sync spans on FLEET_STREAM
+    spans = device_time(events_from_chrome(doc))
+    for dev, cell in res.per_device.items():
+        np.testing.assert_allclose(spans.get(dev, 0.0), cell["time_s"],
+                                   atol=1e-6)
+    assert max(rt.telemetry.reconcile(res).values()) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# scheduler instrumentation + logged formerly-silent behaviors
+
+
+def test_dispatch_instants_recorded():
+    events = [Event(0.0, "data", 0, 0, stream=0),
+              Event(1.0, "inference", 0, 0, stream=0),
+              Event(2.0, "inference", 0, 1, stream=0)]
+    sched = EventScheduler(events)
+    sched.tracer = Tracer()
+    sched.run(on_data=lambda e, b: None, on_inference=lambda e: None,
+              on_inference_segment=lambda seg: None)
+    dispatches = [e for e in sched.tracer.events if e.cat == "dispatch"]
+    # segment-mode pops inner inference events in one go — each still
+    # gets its own dispatch instant
+    assert len(dispatches) == 3
+    assert [d.ts for d in dispatches] == [0.0, 1.0, 2.0]
+
+
+def test_probe_drop_is_counted_and_logged(caplog):
+    sched = EventScheduler([Event(1.0, "probe", 0, 0, stream=2)])
+    root = logging.getLogger("edgeol")
+    old = root.propagate
+    root.propagate = True  # let caplog's root handler see the record
+    try:
+        with caplog.at_level(logging.WARNING, logger="edgeol.scheduler"):
+            sched.run(on_data=lambda e, b: None,
+                      on_inference=lambda e: None)
+    finally:
+        root.propagate = old
+    assert sched.dropped_probes == 1
+    assert any("probe event dropped" in r.message and "stream 2"
+               in r.message for r in caplog.records)
