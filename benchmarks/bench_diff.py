@@ -17,7 +17,11 @@ fails when a cell grows more than 2 extra XLA programs (compile-ledger
 churn). v6 extends the same directional gate to the
 per-device attribution columns (device costs/syncs up, device serving
 accuracy down) — and a baseline device entry that vanishes from a cell
-fails, so a fleet quietly shrinking can't land. Baseline cells — and
+fails, so a fleet quietly shrinking can't land. v7 additionally keys
+cells by their `throttle` mode (the fleet preset's mains and
+finite-battery env cells are gated independently) and extends the
+per-device gate to the env columns: `battery_dead` and `throttle_s`
+regress upward. Baseline cells — and
 baseline per-stream/per-model/per-device entries — that vanish also fail
 (coverage must never shrink); brand-new cells are reported but don't
 fail.
@@ -90,33 +94,44 @@ MODEL_METRIC_DIRECTIONS = {
 #: per-device attribution metrics (BENCH schema v6): a device's modeled
 #: costs and sync charges regress upward, its serving accuracy downward.
 #: A baseline device entry that vanishes fails outright (`_diff_sub`) —
-#: a fleet quietly shrinking is a coverage regression, not noise.
+#: a fleet quietly shrinking is a coverage regression, not noise. v7
+#: adds the env columns, gated upward: a device newly draining its
+#: battery dead, or spending materially more time DVFS-throttled (the
+#: 1s absolute floor absorbs boundary jitter), is a power regression
+#: even when the modeled cost totals barely move.
 DEVICE_METRIC_DIRECTIONS = {
     "time_s": "up",
     "energy_j": "up",
     "flops": "up",
     "syncs": "up",
     "avg_inference_acc": "down",
+    "battery_dead": "up",
+    "throttle_s": "up",
 }
 
 _ABS_FLOOR = {"latency_p50": 1e-3, "latency_p95": 1e-3,
-              "wall_s": 0.5, "recompiles": 2, "syncs": 2}
+              "wall_s": 0.5, "recompiles": 2, "syncs": 2,
+              "throttle_s": 1.0}
 
 
-def cell_key(cell: Dict) -> Tuple[str, str, int, str]:
+def cell_key(cell: Dict) -> Tuple[str, str, int, str, str]:
     """Identity of a sweep cell across artifacts. `preemptible` is part
     of the key (a prioritized preset runs once per QoS mode), and so is
     `trigger_policy` (BENCH v4: the same method may run under its default
-    trigger and the priority-weighted one — both are gated)."""
+    trigger and the priority-weighted one — both are gated) and the v7
+    `throttle` mode (the fleet preset runs a mains cell next to its
+    finite-battery env cell)."""
     return (cell.get("workload", "?"), cell.get("method", "?"),
             int(cell.get("preemptible", 0)),
-            cell.get("trigger_policy", "default"))
+            cell.get("trigger_policy", "default"),
+            cell.get("throttle", "none"))
 
 
-def _cell_label(key: Tuple[str, str, int, str]) -> str:
-    return "{}/{}{}{}".format(
+def _cell_label(key: Tuple[str, str, int, str, str]) -> str:
+    return "{}/{}{}{}{}".format(
         key[0], key[1], "+preempt" if key[2] else "",
-        "" if key[3] == "default" else f"+{key[3]}")
+        "" if key[3] == "default" else f"+{key[3]}",
+        "" if key[4] == "none" else f"+env:{key[4]}")
 
 
 def _rel_change(base: float, new: float) -> float:

@@ -20,6 +20,7 @@ measured FLOPs) + the calibrated EdgeCostModel; nothing is hard-coded.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import sys
@@ -31,22 +32,26 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from benchmarks.common import (PAPER_METHODS, make_controller,
                                method_policies)
 from repro.configs import get_reduced
+from repro.core.policies import PolicySpec
 from repro.models import build_model
-from repro.runtime import (RuntimeConfig, SlotConfig, TelemetrySpec,
-                           edgeol_session, materialize_stream_benchmarks)
+from repro.runtime import (EnvSpec, RuntimeConfig, SlotConfig,
+                           TelemetrySpec, edgeol_session,
+                           materialize_stream_benchmarks)
 from repro.runtime.modelpool import ModelPool, ModelSlot
 from repro.workloads import WorkloadSpec, presets
 
-#: v6: DeviceFleet columns (DESIGN.md §13) — every cell carries
-#: `devices`/`syncs` plus a validated `per_device` attribution dict
-#: (summing to the cell totals like per_stream/per_model), and the sweep
-#: adds `fleet` preset cells running hundreds of streams across a
-#: multi-device fleet with federated aggregation. (v5 moved cells to the
-#: compiled hot path and gated `wall_s`/`recompiles`; v4 added the
-#: PolicyStack `trigger_policy` column + priority-weighted qos cells; v3
-#: the ModelPool columns; v2 QoS — `preemptible`/`preemptions` +
-#: per-stream latency.)
-SCHEMA_VERSION = 6
+#: v7: device-environment columns (DESIGN.md §15) — every cell carries
+#: `energy_budget_j` (0 = mains power) and a `throttle` mode string, the
+#: per-device attribution grows `battery_dead`/`throttle_s`, and the
+#: sweep adds a second `fleet` cell running under a finite per-device
+#: battery with the BudgetThrottle policy stack facet + a thermal DVFS
+#: cap. (v6 added the DeviceFleet columns — `devices`/`syncs` +
+#: validated `per_device` attribution; v5 moved cells to the compiled
+#: hot path and gated `wall_s`/`recompiles`; v4 added the PolicyStack
+#: `trigger_policy` column + priority-weighted qos cells; v3 the
+#: ModelPool columns; v2 QoS — `preemptible`/`preemptions` + per-stream
+#: latency.)
+SCHEMA_VERSION = 7
 METHODS = PAPER_METHODS
 DEFAULT_OUT = os.path.abspath(
     os.path.join(os.path.dirname(__file__), "..", "BENCH_workloads.json"))
@@ -59,10 +64,11 @@ MODALITY_ARCH = {"nlp": "bert-base"}
 CELL_FIELDS = ("acc", "time_s", "energy_j", "tflops", "rounds",
                "recompiles", "events", "streams", "wall_s",
                "preemptible", "preemptions", "models", "swaps",
-               "compiled", "devices", "syncs")
+               "compiled", "devices", "syncs", "energy_budget_j")
 
-#: String fields every cell must carry (schema contract, v4).
-CELL_STR_FIELDS = ("workload", "method", "trigger_policy")
+#: String fields every cell must carry (schema contract, v4; v7 adds the
+#: `throttle` policy mode — "none" for mains-powered cells).
+CELL_STR_FIELDS = ("workload", "method", "trigger_policy", "throttle")
 
 #: Numeric fields every per-stream attribution cell must carry.
 STREAM_FIELDS = ("time_s", "energy_j", "flops", "rounds", "preemptions",
@@ -73,10 +79,12 @@ STREAM_FIELDS = ("time_s", "energy_j", "flops", "rounds", "preemptions",
 MODEL_FIELDS = ("time_s", "energy_j", "flops", "rounds", "swaps",
                 "avg_inference_acc", "inferences")
 
-#: Numeric fields every per-device attribution cell must carry (v6).
+#: Numeric fields every per-device attribution cell must carry (v6; v7
+#: adds the env columns — `battery_dead` is a 0/1 flag, `throttle_s` the
+#: modeled seconds the device spent DVFS-throttled below full speed).
 DEVICE_FIELDS = ("time_s", "energy_j", "flops", "rounds", "swaps",
                  "syncs", "avg_inference_acc", "inferences", "streams",
-                 "utilization")
+                 "utilization", "battery_dead", "throttle_s")
 
 
 def trace_spec(path: Optional[str]) -> Optional[TelemetrySpec]:
@@ -137,6 +145,9 @@ def workload_config(arch: str, workload, method: str, *, seed: int = 0,
                     use_pallas: bool = False,
                     devices=(), routing: str = "static",
                     aggregate_every: float = 0.0,
+                    energy_budget_j: float = 0.0,
+                    thermal_cap_c: float = 0.0,
+                    throttle: str = "none",
                     telemetry: Optional[TelemetrySpec] = None
                     ) -> RuntimeConfig:
     """The declarative session config of one sweep cell. `workload` is a
@@ -146,15 +157,26 @@ def workload_config(arch: str, workload, method: str, *, seed: int = 0,
     path (DESIGN.md §12) unless `compiled=False`. `devices`/`routing`/
     `aggregate_every` (v6) turn the cell into a DeviceFleet run;
     `telemetry` (PR 9, DESIGN.md §14) attaches a `TelemetrySpec` so the
-    cell records a structured trace."""
+    cell records a structured trace. `energy_budget_j`/`thermal_cap_c`/
+    `throttle` (v7, DESIGN.md §15) attach a device environment: every
+    device gets a finite battery and/or thermal DVFS cap, and the paper
+    methods' policy stacks grow the named ThrottlePolicy facet
+    (baselines stay legacy — no throttle facet means always-allow)."""
     if isinstance(workload, WorkloadSpec):
         spec = workload
     else:
         knobs = {k: v for k, v in (workload_scale or {}).items()
                  if k != "batch_size"}
         spec = presets(seed=seed, **knobs)[workload]
+    if energy_budget_j > 0 or thermal_cap_c > 0:
+        env = EnvSpec(battery_capacity_j=energy_budget_j,
+                      thermal_cap_c=thermal_cap_c)
+        devices = tuple(dataclasses.replace(d, env=env) for d in devices)
     policies = method_policies(method, trigger_policy) \
         if method in PAPER_METHODS else None
+    if throttle != "none" and policies is not None:
+        policies = dataclasses.replace(policies,
+                                       throttle=PolicySpec(throttle))
     slots = {}
     for m in spec.modalities:
         slots[m] = SlotConfig(arch=_slot_arch(arch, m),
@@ -184,6 +206,9 @@ def run_workload(arch: str, spec: WorkloadSpec, method: str, *,
                  use_pallas: bool = False,
                  devices=(), routing: str = "static",
                  aggregate_every: float = 0.0,
+                 energy_budget_j: float = 0.0,
+                 thermal_cap_c: float = 0.0,
+                 throttle: str = "none",
                  telemetry: Optional[TelemetrySpec] = None) -> Dict:
     """One (workload, controller) cell: full runtime run, paper metrics +
     per-stream, per-model and per-device attribution (incl. p50/p95
@@ -194,7 +219,9 @@ def run_workload(arch: str, spec: WorkloadSpec, method: str, *,
     per modality sharing the device under `memory_budget_mb` (0 =
     unlimited). `devices`/`routing`/`aggregate_every` (v6) run the cell
     on a DeviceFleet — streams routed across the device list, fine-tuned
-    deltas merged federated-style every `aggregate_every` seconds."""
+    deltas merged federated-style every `aggregate_every` seconds.
+    `energy_budget_j`/`thermal_cap_c`/`throttle` (v7) run the cell under
+    a per-device environment (DESIGN.md §15)."""
     cfg = workload_config(arch, spec, method, seed=seed,
                           batch_size=batch_size,
                           pretrain_epochs=pretrain_epochs,
@@ -206,6 +233,9 @@ def run_workload(arch: str, spec: WorkloadSpec, method: str, *,
                           compiled=compiled, use_pallas=use_pallas,
                           devices=devices, routing=routing,
                           aggregate_every=aggregate_every,
+                          energy_budget_j=energy_budget_j,
+                          thermal_cap_c=thermal_cap_c,
+                          throttle=throttle,
                           telemetry=telemetry)
     t0 = time.time()
     if method in PAPER_METHODS:
@@ -238,6 +268,8 @@ def run_workload(arch: str, spec: WorkloadSpec, method: str, *,
     return {
         "workload": spec.name, "method": method,
         "trigger_policy": trigger_policy,
+        "throttle": throttle,
+        "energy_budget_j": float(energy_budget_j),
         "streams": len(spec.streams), "events": len(events),
         "models": len(spec.modalities),
         "acc": res.avg_inference_acc, "time_s": res.total_time_s,
@@ -301,7 +333,9 @@ def sweep(*, quick: bool = True, arch: str = "mobilenetv2", seed: int = 0,
         cells.append(cell)
         tag = ("/qos" if preemptible else "") + \
             ("/pw" if trigger_policy == "priority-weighted" else "") + \
-            (f"/x{cell['devices']}" if cell["devices"] > 1 else "")
+            (f"/x{cell['devices']}" if cell["devices"] > 1 else "") + \
+            (f"/env:{cell['throttle']}"
+             if cell["throttle"] != "none" else "")
         print(f"workloads,{spec.name}/{method}{tag},"
               f"acc={cell['acc']:.4f} "
               f"time={cell['time_s']:.1f}s "
@@ -323,11 +357,25 @@ def sweep(*, quick: bool = True, arch: str = "mobilenetv2", seed: int = 0,
             # the full method x workload product — it gets its own cell
             # and validate_bench exempts it from method coverage.
             from repro.runtime import fleet_devices
+            fleet = fleet_devices(fleet_size, seed=seed,
+                                  speed_spread=0.4, energy_spread=0.2)
+            # v7 env cell (DESIGN.md §15): the same fleet under a finite
+            # per-device battery + a thermal DVFS cap barely above
+            # ambient, with the BudgetThrottle facet gating rounds — the
+            # budget is sized well below the mains cell's per-device
+            # energy so the environment demonstrably engages: devices
+            # throttle / drain dead / ride the eviction path
+            # (validate_bench and bench-smoke both assert it). Runs
+            # first so a `--trace-out` sweep records THIS cell — the
+            # richest track layout: devices x streams plus temperature/
+            # SoC counter tracks and DVFS throttle spans.
             one(spec, "etuner", False, "default", None,
-                devices=fleet_devices(fleet_size, seed=seed,
-                                      speed_spread=0.4,
-                                      energy_spread=0.2),
-                routing="least-loaded",
+                devices=fleet, routing="least-loaded",
+                aggregate_every=spec.scenario_span / 4.0,
+                energy_budget_j=80.0 if quick else 400.0,
+                thermal_cap_c=26.0, throttle="battery")
+            one(spec, "etuner", False, "default", None,
+                devices=fleet, routing="least-loaded",
                 aggregate_every=spec.scenario_span / 4.0)
             continue
         # prioritized presets (qos) sweep both QoS modes so the artifact
@@ -451,6 +499,30 @@ def validate_bench(doc: Dict, *, min_workloads: int = 3,
             c.get("devices", 0) >= 2 for c in fleet_cells):
         errors.append("fleet preset present but no cell with >= 2 "
                       "devices (v6)")
+    # v7: the fleet preset must carry an env cell (finite battery +
+    # throttle facet) in which the environment demonstrably engaged —
+    # at least one device drained dead, spent time DVFS-throttled, or
+    # was evicted — and no device's ledger energy may exceed its budget
+    env_cells = [c for c in fleet_cells
+                 if c.get("throttle", "none") != "none"
+                 and c.get("energy_budget_j", 0) > 0]
+    if "fleet" in seen and not env_cells:
+        errors.append("fleet preset present but no env cell (finite "
+                      "energy_budget_j + throttle mode, v7)")
+    for c in env_cells:
+        pd = c.get("per_device") or {}
+        if not any(dc.get("battery_dead", 0) > 0
+                   or dc.get("throttle_s", 0) > 0
+                   or dc.get("evicted", 0) > 0 for dc in pd.values()):
+            errors.append(
+                "env cell ran but no device throttled, drained dead or "
+                "was evicted — env not engaged (v7)")
+        for did, dc in pd.items():
+            if dc.get("energy_j", 0) > c["energy_budget_j"] + 1e-6:
+                errors.append(
+                    f"env cell device {did}: ledger energy "
+                    f"{dc.get('energy_j'):.3f} J exceeds the "
+                    f"{c['energy_budget_j']:.3f} J battery budget (v7)")
     return errors
 
 

@@ -73,6 +73,21 @@ def main():
     ap.add_argument("--speed-spread", type=float, default=0.4,
                     help="clone devices draw speed scales from 1 +- this")
     ap.add_argument("--energy-spread", type=float, default=0.2)
+    ap.add_argument("--battery-j", type=float, default=0.0,
+                    help="per-device battery capacity in joules "
+                         "(DESIGN.md §15; 0 = mains power). Pairs with "
+                         "--throttle battery so rounds defer instead of "
+                         "overdrawing; a device draining to its reserve "
+                         "anyway is evicted like a straggler")
+    ap.add_argument("--thermal-cap", type=float, default=0.0,
+                    help="DVFS thermal cap in deg C (0 = no governor): "
+                         "devices at/above the cap step down the "
+                         "frequency ladder — slower but cooler and "
+                         "cheaper per unit work")
+    ap.add_argument("--throttle", default="none",
+                    choices=["none", "battery", "thermal"],
+                    help="ThrottlePolicy facet for the paper methods' "
+                         "policy stacks (DESIGN.md §15)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-compiled", dest="compiled", action="store_false",
                     help="pure-Python per-event fallback (bit-identical)")
@@ -107,6 +122,9 @@ def main():
                         compiled=args.compiled, workload_scale=scale,
                         devices=devices, routing=args.routing,
                         aggregate_every=args.aggregate_every,
+                        energy_budget_j=args.battery_j,
+                        thermal_cap_c=args.thermal_cap,
+                        throttle=args.throttle,
                         telemetry=trace_spec(args.trace_out))
     print(f"{args.method:10s} fleet acc={cell['acc']*100:6.2f}% "
           f"time={cell['time_s']:7.1f}s energy={cell['energy_j']:7.1f}J "
@@ -119,6 +137,9 @@ def main():
               f"requests={per['inferences']:.0f} "
               f"swaps={per['swaps']:.0f} syncs={per['syncs']:.0f} "
               f"time={per['time_s']:6.1f}s energy={per['energy_j']:6.1f}J"
+              + (f" throttled={per['throttle_s']:.0f}s"
+                 if per.get("throttle_s") else "")
+              + ("  [battery dead]" if per.get("battery_dead") else "")
               + ("  [evicted]" if per.get("evicted") else ""))
     if args.trace_out:
         print(f"trace written to {args.trace_out} — load at "

@@ -11,33 +11,40 @@ of `repro.runtime.config.RuntimeConfig`), and the legacy adapter that
 keeps pre-stack monolithic controllers working.
 """
 from repro.core.policies.base import (DriftPolicy, FreezePolicy,
-                                      PublishPolicy, TriggerPolicy)
+                                      PublishPolicy, ThrottlePolicy,
+                                      TriggerPolicy)
 from repro.core.policies.drift import EnergyDriftPolicy, NoDriftPolicy
 from repro.core.policies.freeze import (NoFreezePolicy, SimFreezePolicy,
                                         empty_plan)
 from repro.core.policies.publish import ImmediatePublish, RoundEndPublish
 from repro.core.policies.spec import (DRIFT_POLICIES, FREEZE_POLICIES,
-                                      PUBLISH_POLICIES, TRIGGER_POLICIES,
-                                      PolicySpec, PolicyStackSpec,
-                                      build_drift, build_freeze,
-                                      build_publish, build_trigger,
+                                      PUBLISH_POLICIES, THROTTLE_POLICIES,
+                                      TRIGGER_POLICIES, PolicySpec,
+                                      PolicyStackSpec, build_drift,
+                                      build_freeze, build_publish,
+                                      build_throttle, build_trigger,
                                       etuner_stack_spec)
 from repro.core.policies.stack import (LegacyControllerAdapter, PolicyStack,
                                        adapt_controller)
+from repro.core.policies.throttle import (BudgetThrottle, NullThrottle,
+                                          ThermalThrottle)
 from repro.core.policies.trigger import (ImmediateTrigger, LazyTuneTrigger,
                                          PriorityWeightedTrigger,
                                          StalenessGuard)
 
 __all__ = [
     "TriggerPolicy", "FreezePolicy", "DriftPolicy", "PublishPolicy",
+    "ThrottlePolicy",
     "ImmediateTrigger", "LazyTuneTrigger", "StalenessGuard",
     "PriorityWeightedTrigger",
     "NoFreezePolicy", "SimFreezePolicy", "empty_plan",
     "NoDriftPolicy", "EnergyDriftPolicy",
     "ImmediatePublish", "RoundEndPublish",
+    "NullThrottle", "BudgetThrottle", "ThermalThrottle",
     "PolicyStack", "LegacyControllerAdapter", "adapt_controller",
     "PolicySpec", "PolicyStackSpec", "etuner_stack_spec",
     "build_trigger", "build_freeze", "build_drift", "build_publish",
+    "build_throttle",
     "TRIGGER_POLICIES", "FREEZE_POLICIES", "DRIFT_POLICIES",
-    "PUBLISH_POLICIES",
+    "PUBLISH_POLICIES", "THROTTLE_POLICIES",
 ]

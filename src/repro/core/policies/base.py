@@ -13,6 +13,11 @@ independent questions into one grab-bag object:
 - **when to publish** trained params to serving (`PublishPolicy` — the
   DESIGN.md §5 visibility seam).
 
+A fifth, orthogonal to the paper's four: **whether the device can
+afford it** (`ThrottlePolicy` — battery/thermal gating against the
+`repro.env` device environment, DESIGN.md §15; inert unless the device
+carries an `EnvSpec`).
+
 `PolicyStack` (policies/stack.py) composes one of each back into a full
 `ControllerProtocol` object, so the runtime keeps driving a single
 controller while every axis stays independently swappable, testable and
@@ -95,6 +100,29 @@ class DriftPolicy(Protocol):
     def observe(self, logits) -> bool: ...
 
     def confirm(self, logits) -> bool: ...
+
+    def stats(self) -> dict: ...
+
+
+@runtime_checkable
+class ThrottlePolicy(Protocol):
+    """Whether to spend a fine-tuning round *now*, given the device's
+    physical environment (DESIGN.md §15 — the fifth facet; the other
+    four decide on data/accuracy, this one on joules and kelvin).
+
+    - `allow_round(state, time_s=..., energy_j=...) -> bool`: consulted
+      after the trigger fires and the device is idle. `state` is an
+      `repro.env.EnvState` snapshot (soc / charge_j / reserve_j /
+      temperature_c / level / battery_dead); `time_s`/`energy_j` are the
+      runtime's modeled estimate of the round about to launch
+      (`FineTuneExecutor.estimate_round` — replay batch and worst-case
+      recompile included). False defers: batches stay buffered and the
+      next arrival re-asks. Devices without an env never consult.
+    - `stats()`: reporting dict (merged into the stack's stats).
+    """
+
+    def allow_round(self, state, *, time_s: float = 0.0,
+                    energy_j: float = 0.0) -> bool: ...
 
     def stats(self) -> dict: ...
 

@@ -20,6 +20,8 @@ from repro.core.policies.drift import EnergyDriftPolicy, NoDriftPolicy
 from repro.core.policies.freeze import NoFreezePolicy, SimFreezePolicy
 from repro.core.policies.publish import ImmediatePublish, RoundEndPublish
 from repro.core.policies.stack import PolicyStack
+from repro.core.policies.throttle import (BudgetThrottle, NullThrottle,
+                                          ThermalThrottle)
 from repro.core.policies.trigger import (ImmediateTrigger, LazyTuneTrigger,
                                          PriorityWeightedTrigger,
                                          StalenessGuard)
@@ -122,6 +124,24 @@ PUBLISH_POLICIES = {
 }
 
 
+def _throttle_build(cls_, params, context, valid):
+    unknown = set(params) - valid
+    if unknown:
+        raise ValueError(f"{context}: unknown parameter(s) "
+                         f"{sorted(unknown)}; valid: {sorted(valid)}")
+    return cls_(**params)
+
+
+THROTTLE_POLICIES = {
+    "none": lambda params, context: NullThrottle()
+    if not params else _raise_params(context, []),
+    "battery": lambda params, context: _throttle_build(
+        BudgetThrottle, params, context, {"min_soc"}),
+    "thermal": lambda params, context: _throttle_build(
+        ThermalThrottle, params, context, {"max_temp_c"}),
+}
+
+
 def _raise_params(context, valid):
     raise ValueError(f"{context}: takes no parameters" if not valid
                      else f"{context}: valid parameters: {valid}")
@@ -155,6 +175,11 @@ def build_publish(spec: PolicySpec):
         dict(spec.params), f"publish policy {spec.name!r}")
 
 
+def build_throttle(spec: PolicySpec):
+    return _lookup(THROTTLE_POLICIES, "throttle", spec)(
+        dict(spec.params), f"throttle policy {spec.name!r}")
+
+
 # ---------------------------------------------------------------------------
 # a full stack spec
 
@@ -169,6 +194,10 @@ class PolicyStackSpec:
     drift: PolicySpec = field(default_factory=lambda: PolicySpec("energy"))
     publish: PolicySpec = field(
         default_factory=lambda: PolicySpec("immediate"))
+    # the fifth facet (DESIGN.md §15): env-aware round gating. "none"
+    # (the default) is inert and serialized away, so every pre-env
+    # stack spec round-trips byte-identically.
+    throttle: PolicySpec = field(default_factory=lambda: PolicySpec("none"))
 
     def validate(self) -> "PolicyStackSpec":
         """Check every name/param against the registries (builds throw-
@@ -184,6 +213,7 @@ class PolicyStackSpec:
                              f"no parameters")
         build_drift(self.drift)
         build_publish(self.publish)
+        build_throttle(self.throttle)
         return self
 
     def build(self, model) -> PolicyStack:
@@ -192,24 +222,30 @@ class PolicyStackSpec:
                            trigger=build_trigger(self.trigger),
                            freeze=build_freeze(self.freeze, model),
                            drift=build_drift(self.drift),
-                           publish=build_publish(self.publish))
+                           publish=build_publish(self.publish),
+                           throttle=build_throttle(self.throttle))
 
     def to_dict(self) -> Dict[str, Any]:
-        return {"trigger": self.trigger.to_dict(),
-                "freeze": self.freeze.to_dict(),
-                "drift": self.drift.to_dict(),
-                "publish": self.publish.to_dict()}
+        out = {"trigger": self.trigger.to_dict(),
+               "freeze": self.freeze.to_dict(),
+               "drift": self.drift.to_dict(),
+               "publish": self.publish.to_dict()}
+        if self.throttle != PolicySpec("none"):
+            out["throttle"] = self.throttle.to_dict()
+        return out
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "PolicyStackSpec":
         if not isinstance(d, dict):
             raise ValueError(f"a policy-stack spec must be a dict "
                              f"(got {d!r})")
-        unknown = set(d) - {"trigger", "freeze", "drift", "publish"}
+        unknown = set(d) - {"trigger", "freeze", "drift", "publish",
+                            "throttle"}
         if unknown:
             raise ValueError(
                 f"policy-stack spec: unknown key(s) {sorted(unknown)}; "
-                f"valid: ['trigger', 'freeze', 'drift', 'publish']")
+                f"valid: ['trigger', 'freeze', 'drift', 'publish', "
+                f"'throttle']")
         kw = {k: PolicySpec.from_dict(v) for k, v in d.items()}
         return cls(**kw)
 

@@ -11,6 +11,7 @@ from typing import Optional
 from repro.core.policies.drift import NoDriftPolicy
 from repro.core.policies.freeze import NoFreezePolicy
 from repro.core.policies.publish import ImmediatePublish
+from repro.core.policies.throttle import NullThrottle
 from repro.core.policies.trigger import ImmediateTrigger
 
 
@@ -29,7 +30,7 @@ class PolicyStack:
     """
 
     def __init__(self, model=None, *, trigger=None, freeze=None, drift=None,
-                 publish=None):
+                 publish=None, throttle=None):
         if freeze is None and model is None:
             raise ValueError("PolicyStack needs either a freeze policy or "
                              "a model to derive the default plan from")
@@ -38,6 +39,10 @@ class PolicyStack:
         self.drift = drift if drift is not None else NoDriftPolicy()
         self.publish_policy = publish if publish is not None \
             else ImmediatePublish()
+        # fifth facet (DESIGN.md §15): env-aware round gating, consulted
+        # by the runtime only on devices carrying a live env — the
+        # default NullThrottle keeps every other path untouched
+        self.throttle = throttle if throttle is not None else NullThrottle()
 
     # ---- plan (owned by the freeze policy) -------------------------------
     @property
@@ -81,6 +86,7 @@ class PolicyStack:
         out = dict(self.trigger.stats())
         out.update(self.freeze.stats())
         out.update(self.drift.stats())
+        out.update(self.throttle.stats())
         return out
 
     # ---- compat surfaces (state machines owned by the facets) ------------

@@ -1,0 +1,21 @@
+"""repro.env — per-device physical environment models (DESIGN.md §15).
+
+Makes energy a first-class *constraint* instead of a ledger column:
+each fleet device may carry an `EnvSpec` (on its `DeviceConfig`) that
+instantiates a `DeviceEnv` — a battery drained by the device's ledger
+charges, a first-order thermal RC node driven by its average power, and
+a DVFS governor that rescales the device's cost model under a thermal
+cap. The `ThrottlePolicy` facet of the PolicyStack reads `EnvState`
+snapshots to defer or skip fine-tune rounds; battery-dead devices
+degrade into the fleet's straggler evict + reroute path.
+
+Everything is off by default: no env (or an inactive spec) means no
+state, no observer, no branches taken — bit-exact with every seed-era
+run, which the golden regression pins.
+"""
+from repro.env.models import BatteryModel, DvfsGovernor, ThermalModel
+from repro.env.runtime import DeviceEnv, EnvLedgerObserver, EnvState
+from repro.env.spec import EnvSpec
+
+__all__ = ["BatteryModel", "DeviceEnv", "DvfsGovernor", "EnvLedgerObserver",
+           "EnvSpec", "EnvState", "ThermalModel"]

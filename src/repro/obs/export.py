@@ -100,7 +100,15 @@ def chrome_trace(events: List[TraceEvent]) -> Dict[str, Any]:
                 "slot": e.slot, **e.args}
         rec: Dict[str, Any] = {"name": e.name, "cat": e.cat, "pid": pid,
                                "tid": tid, "ts": e.ts * _US, "args": args}
-        if e.dur is None:
+        if e.cat == "gauge":
+            # env gauges (DESIGN.md §15) render as Perfetto counter
+            # tracks. Counter identity is (pid, name) — gauge names embed
+            # the device (`temperature_c/dev0`) so fleets don't collide —
+            # and counter args must be numeric-only series.
+            rec["ph"] = "C"
+            rec["args"] = {k: v for k, v in e.args.items()
+                           if isinstance(v, (int, float))}
+        elif e.dur is None:
             rec["ph"] = "i"
             rec["s"] = "t"
         else:
@@ -147,7 +155,7 @@ def load_chrome_trace(path: str) -> Dict[str, Any]:
         for key in ("ph", "pid", "tid", "name"):
             if key not in rec:
                 raise ValueError(f"{path}: traceEvents[{i}] missing {key!r}")
-        if rec["ph"] in ("X", "i") and not isinstance(
+        if rec["ph"] in ("X", "i", "C") and not isinstance(
                 rec.get("ts"), (int, float)):
             raise ValueError(f"{path}: traceEvents[{i}] ({rec['ph']!r}) "
                              f"needs a numeric 'ts'")
@@ -183,7 +191,7 @@ def events_from_chrome(doc: Dict[str, Any]) -> List[TraceEvent]:
     up to ordering."""
     out: List[TraceEvent] = []
     for rec in doc.get("traceEvents", []):
-        if rec.get("ph") not in ("X", "i"):
+        if rec.get("ph") not in ("X", "i", "C"):
             continue
         args = dict(rec.get("args", {}))
         device = args.pop("device", None)

@@ -1,3 +1,4 @@
+from repro.env.spec import EnvSpec
 from repro.obs.spec import TelemetrySpec
 from repro.runtime.config import (DeviceConfig, HookSpec, RuntimeConfig,
                                   SlotConfig, build_hook,
@@ -30,4 +31,4 @@ __all__ = ["EdgeCostModel", "PodCostModel", "ContinualRuntime", "RunResult",
            "build_hook", "materialize_stream_benchmarks", "scale_cost",
            "DeviceRuntime", "DeviceFleet", "RoutingPolicy", "StaticAffinity",
            "LeastLoaded", "ROUTING_POLICIES", "FLEET_STREAM", "fleet_devices",
-           "TelemetrySpec"]
+           "TelemetrySpec", "EnvSpec"]

@@ -34,6 +34,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.policies import PolicyStackSpec
+from repro.env.spec import EnvSpec
 from repro.obs.spec import TelemetrySpec
 from repro.runtime.executor import FakeQuantHook, RoundHook, SimSiamHook
 
@@ -150,11 +151,15 @@ class DeviceConfig:
     multiplies throughput (2.0 = rounds finish in half the time),
     `energy_scale` multiplies both power draws (0.5 = half the joules per
     second), and `memory_budget_mb` caps the device's ModelPool residency
-    (0.0 = unbounded, like the single-device default)."""
+    (0.0 = unbounded, like the single-device default). `env` optionally
+    attaches a physical environment (`repro.env.EnvSpec`, DESIGN.md §15:
+    battery budget, thermal RC node, DVFS governor); the default None —
+    and an inactive spec — is today's unconstrained behavior, bit-exact."""
     name: str
     speed_scale: float = 1.0
     energy_scale: float = 1.0
     memory_budget_mb: float = 0.0
+    env: Optional[EnvSpec] = None
 
     def validate(self, context: str = "device") -> "DeviceConfig":
         if not self.name or not isinstance(self.name, str):
@@ -166,6 +171,12 @@ class DeviceConfig:
         if self.memory_budget_mb < 0:
             raise ValueError(f"{context} {self.name!r}: memory_budget_mb "
                              f"must be >= 0")
+        if self.env is not None:
+            if not isinstance(self.env, EnvSpec):
+                raise ValueError(f"{context} {self.name!r}: env must be an "
+                                 f"EnvSpec or None (got "
+                                 f"{type(self.env).__name__})")
+            self.env.validate(f"{context} {self.name!r} env")
         return self
 
     def to_dict(self) -> Dict[str, Any]:
@@ -176,6 +187,8 @@ class DeviceConfig:
             out["energy_scale"] = self.energy_scale
         if self.memory_budget_mb:
             out["memory_budget_mb"] = self.memory_budget_mb
+        if self.env is not None:
+            out["env"] = self.env.to_dict()
         return out
 
     @classmethod
@@ -183,12 +196,16 @@ class DeviceConfig:
         if not isinstance(d, dict) or "name" not in d:
             raise ValueError(f"a device config must be a dict with a "
                              f"'name' key (got {d!r})")
-        valid = {"name", "speed_scale", "energy_scale", "memory_budget_mb"}
+        valid = {"name", "speed_scale", "energy_scale", "memory_budget_mb",
+                 "env"}
         unknown = set(d) - valid
         if unknown:
             raise ValueError(f"device config: unknown key(s) "
                              f"{sorted(unknown)}; valid: {sorted(valid)}")
-        return cls(**d)
+        kw = dict(d)
+        if "env" in kw:
+            kw["env"] = EnvSpec.from_dict(kw["env"])
+        return cls(**kw)
 
 
 def _default_slots() -> Dict[str, SlotConfig]:

@@ -69,6 +69,11 @@ class DeviceRuntime:
         # when telemetry is off) records this device's swap/cka/probe
         # spans; the serving lane tags its instants with the device name.
         self.tracer = fleet.tracer
+        # physical environment (DESIGN.md §15): assigned by the fleet
+        # when this device's DeviceConfig carries an active EnvSpec.
+        # None (the default) keeps every env branch untaken — bit-exact.
+        self.env = None
+        self._dvfs_applied: Dict[str, float] = {}
         host = self.host
         self.server = InferenceServer(self.primary.model,
                                       batch_window=host.inference_window,
@@ -177,6 +182,49 @@ class DeviceRuntime:
             if report is not None:
                 self.complete(st, report)
 
+    # ---- env / throttling (DESIGN.md §15) --------------------------------
+    def apply_dvfs(self) -> None:
+        """Rescale this device's executor cost models to the env's
+        current DVFS level. Rescaling is *relative* (new level over the
+        level already applied) so the calibrated base survives repeated
+        transitions; executors still awaiting their one-shot calibration
+        are skipped — calibration would overwrite the scale wholesale —
+        and pick the level up after their first round."""
+        level = self.env.level
+        exp = self.env.spec.dvfs_power_exponent
+        for name, st in self.slots.items():
+            ex = st.executor
+            if ex.calibrate_cost:
+                continue
+            applied = self._dvfs_applied.get(name, 1.0)
+            if level != applied:
+                rel = level / applied
+                ex.cost = scale_cost(ex.cost, speed=rel, energy=rel ** exp)
+                self._dvfs_applied[name] = level
+
+    def allow_round(self, now: float, stream: int) -> bool:
+        """ThrottlePolicy consultation — the fifth PolicyStack facet.
+        Env-less devices, and controllers without a throttle facet
+        (legacy monoliths), always allow: the bit-exact default."""
+        if self.env is None:
+            return True
+        ctrl = self.fleet.ctrl_for(stream)
+        pol = getattr(ctrl, "throttle", None)
+        if pol is None:
+            return True
+        slot = self.slot_of(stream)
+        t_est, e_est = slot.executor.estimate_round(ctrl.plan, stream)
+        if pol.allow_round(self.env.state(), time_s=t_est, energy_j=e_est):
+            return True
+        if self.tracer:
+            self.tracer.instant("throttle", f"defer/{slot.name}", now,
+                                stream=stream, device=self.name,
+                                slot=slot.name)
+        if self.fleet.telemetry is not None:
+            self.fleet.telemetry.metrics.counter(
+                "throttle_deferrals", device=self.name).inc()
+        return False
+
     def finish_round(self, now: float, stream: int = 0) -> None:
         fleet = self.fleet
         slot = self.slot_of(stream)
@@ -228,7 +276,8 @@ class DeviceRuntime:
                                staleness=ev.time
                                - fleet.last_round_end.get(st, 0.0),
                                priority=fleet.stream_priority.get(st, 0)) \
-                and self.scheduler.idle_at(ev.time, self.name):
+                and self.scheduler.idle_at(ev.time, self.name) \
+                and self.allow_round(ev.time, st):
             self.finish_round(ev.time, st)
 
     def on_inference(self, ev: Event) -> None:
@@ -301,11 +350,15 @@ class DeviceRuntime:
             fleet.pending_change[st] = True
 
     def trailing_flush(self) -> None:
-        # any buffered data still fine-tunes (no data dropped)
+        # any buffered data still fine-tunes (no data dropped) — unless
+        # the device's ThrottlePolicy says it cannot afford the round
+        # (a drained battery must not be overdrawn by the flush)
         for slot in self.slots.values():
             for st in slot.executor.pending_streams:
-                self.finish_round(self.scheduler.busy_until_of(self.name),
-                                  st)
+                now = self.scheduler.busy_until_of(self.name)
+                if not self.allow_round(now, st):
+                    continue
+                self.finish_round(now, st)
                 self.settle(float("inf"))
 
 

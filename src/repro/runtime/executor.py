@@ -349,6 +349,28 @@ class FineTuneExecutor:
         t, e, parts = self.cost.round_cost(flops, recompiles=recompile)
         return flops, t, e, parts
 
+    def estimate_round(self, plan, stream: int = 0):
+        """Modeled ``(time_s, energy_j)`` the round `stream`'s buffer
+        would cost if triggered now — replay batch and worst-case
+        recompile included — without mutating any state (the one-shot
+        cost calibration is mirrored, not applied). This is the
+        `ThrottlePolicy`'s decision input (DESIGN.md §15); assuming the
+        recompile makes the estimate a safe upper bound."""
+        batches = self.buffers.get(stream)
+        if not batches:
+            return 0.0, 0.0
+        n = len(batches) + (1 if self.replay else 0)
+        flops = self.steps.flops(plan, as_jnp(batches[0])) * n
+        cost = self.cost
+        if self.calibrate_cost:
+            per_iter = flops / max(n, 1)
+            cost = dataclasses.replace(
+                cost,
+                flops_per_sec=max(per_iter * 2 / 0.8, 1.0) * self.speed_scale)
+        recompile = 0 if plan in self.compiled_plans else 1
+        t, e, _ = cost.round_cost(flops, recompiles=recompile)
+        return t, e
+
     def execute_round(self, plan, now: float, scheduler, stream: int = 0,
                       *, priority: int = 0,
                       preemptible: bool = False) -> Optional[RoundReport]:

@@ -42,6 +42,7 @@ import numpy as np
 from repro.core.policies import adapt_controller
 from repro.data.arrivals import Event
 from repro.distributed.straggler import StragglerConfig, StragglerTracker
+from repro.env import DeviceEnv, EnvLedgerObserver
 from repro.obs.log import get_logger
 from repro.obs.trace import NULL_TRACER
 from repro.runtime.config import DeviceConfig
@@ -188,6 +189,10 @@ class DeviceFleet:
         self.tracker: Optional[StragglerTracker] = None
         self._evicted: set = set()
         self._flagged: set = set()
+        # physical environment (DESIGN.md §15): device name -> DeviceEnv
+        # for every device whose DeviceConfig carries an active EnvSpec;
+        # empty (the default) keeps every env branch untaken.
+        self.envs: Dict[str, DeviceEnv] = {}
         # observability (DESIGN.md §14): run() swaps in the host's live
         # Telemetry bundle when one is configured; the falsy NULL_TRACER
         # default keeps every instrumented path allocation-free.
@@ -310,6 +315,22 @@ class DeviceFleet:
                 self, spec, d, slots, clone_pool(host, spec, slots),
                 dev_rng))
 
+        # --- physical environments (DESIGN.md §15): one DeviceEnv per
+        # device with an active EnvSpec; the env observer wraps whatever
+        # telemetry observer the ledger already has so every charge's
+        # energy drains the owning device's battery / heats its RC node.
+        # No active env -> no observer swap: the default path is
+        # bit-exact untouched.
+        self.envs = {}
+        for dev in self.devices:
+            env_spec = getattr(dev.spec, "env", None)
+            if env_spec is not None and env_spec.active:
+                dev.env = DeviceEnv(env_spec, dev.name, tracer=self.tracer)
+                self.envs[dev.name] = dev.env
+        if self.envs:
+            ledger.telemetry = EnvLedgerObserver(self.envs,
+                                                 inner=ledger.telemetry)
+
         # per-stream controllers: stream 0 is the primary controller;
         # extra streams get their own from the factory, or share the
         # primary one. Under a ModelPool a stream's controller is its
@@ -338,6 +359,8 @@ class DeviceFleet:
         def on_data(ev: Event, boundary: bool) -> None:
             self._advance(ev.time)
             self._settle_all(ev.time)
+            if self.envs:
+                self._step_envs(ev.time)
             self.device_for(ev.stream).on_data(ev, boundary)
 
         def on_scenario_change(previous: int, ev: Event) -> None:
@@ -346,6 +369,8 @@ class DeviceFleet:
         def on_inference(ev: Event) -> None:
             self._advance(ev.time)
             self._settle_all(ev.time)
+            if self.envs:
+                self._step_envs(ev.time)
             self.device_for(ev.stream).on_inference(ev)
 
         def on_inference_event(ev: Event) -> None:
@@ -357,6 +382,8 @@ class DeviceFleet:
         def on_probe(ev: Event) -> None:
             self._advance(ev.time)
             self._settle_all(ev.time)
+            if self.envs:
+                self._step_envs(ev.time)
             self.device_for(ev.stream).on_probe(ev)
 
         def on_inference_segment(segment: List[Event]) -> None:
@@ -389,6 +416,22 @@ class DeviceFleet:
     def _settle_all(self, now: float) -> None:
         for dev in self.devices:
             dev.settle(now)
+
+    def _step_envs(self, now: float) -> None:
+        """Advance every live environment to `now` (after the devices
+        settled, so the energy each env integrates is the energy the
+        ledger actually charged up to `now`), apply any DVFS rescale to
+        the device's executors, and hand battery-dead devices to the
+        existing eviction path: streams re-route, deltas leave the
+        merge — exactly like a persistent straggler, different cause."""
+        for dev in self.devices:
+            env = dev.env
+            if env is None:
+                continue
+            env.step(now)
+            dev.apply_dvfs()
+            if env.battery_dead and dev.index not in self._evicted:
+                self.evict_device(dev.index, now, reason="battery dead")
 
     def _advance(self, t: float) -> None:
         """Cross the sync boundaries the timeline has passed: settle
@@ -437,7 +480,8 @@ class DeviceFleet:
         Optimizer state stays local (FedAvg merges params only)."""
         candidates = [d for d in self.devices
                       if d.index not in self._evicted
-                      and d.index not in self._flagged]
+                      and d.index not in self._flagged
+                      and not (d.env is not None and d.env.battery_dead)]
         tel = self.telemetry
         for name in self.devices[0].slots:
             group = [d for d in candidates
@@ -505,22 +549,26 @@ class DeviceFleet:
             for b in batches or ():
                 target.slot_of(st).executor.enqueue(b, stream=st)
 
-    def evict_device(self, index: int, ts: float) -> None:
+    def evict_device(self, index: int, ts: float, *,
+                     reason: str = "persistent straggler") -> None:
         """Drop a device for good: its streams re-route, its deltas drop
         out of every future merge, and — when an elastic mesh was
         injected — the mesh shrinks and the survivors' params re-shard
-        onto it (values preserved; distributed/elastic.py)."""
+        onto it (values preserved; distributed/elastic.py). `reason`
+        distinguishes straggler evictions from env-driven ones (a dead
+        battery rides the same path, DESIGN.md §15)."""
         if index in self._evicted:
             return
-        log.warning("t=%.3f: evicting device %s (persistent straggler); "
+        log.warning("t=%.3f: evicting device %s (%s); "
                     "its streams re-route and its deltas leave the merge",
-                    ts, self.devices[index].name)
+                    ts, self.devices[index].name, reason)
         if self.telemetry is not None:
             self.telemetry.metrics.counter(
                 "evictions", device=self.devices[index].name).inc()
         if self.tracer:
             self.tracer.instant("straggler", "evict", ts,
-                                device=self.devices[index].name)
+                                device=self.devices[index].name,
+                                reason=reason)
         if self.tracker is not None:
             self.tracker.evict(index)
         self._evicted.add(index)
@@ -587,6 +635,9 @@ class DeviceFleet:
         makespan = max([scheduler.now]
                        + [scheduler.busy_until_of(d.name)
                           for d in self.devices])
+        for dev in self.devices:
+            if dev.env is not None:
+                dev.env.finalize(makespan)
         per_device: Dict[str, Dict[str, float]] = {}
         for dev in self.devices:
             cell = dict(ledger.per_device.get(
@@ -599,12 +650,24 @@ class DeviceFleet:
             cell["utilization"] = cell["time_s"] / makespan \
                 if makespan > 0 else 0.0
             cell["evicted"] = float(dev.index in self._evicted)
+            cell["battery_dead"] = float(dev.env.battery_dead) \
+                if dev.env is not None else 0.0
+            cell["throttle_s"] = dev.env.throttle_s \
+                if dev.env is not None else 0.0
             per_device[dev.name] = cell
         tel = self.telemetry
         if tel is not None:
             for dev in self.devices:
                 tel.metrics.gauge("utilization", device=dev.name).set(
                     per_device[dev.name]["utilization"])
+                env = dev.env
+                if env is not None:
+                    st = env.state()
+                    tel.metrics.gauge("temperature_c",
+                                      device=dev.name).set(st.temperature_c)
+                    if st.soc is not None:
+                        tel.metrics.gauge("soc",
+                                          device=dev.name).set(st.soc)
             tel.metrics.gauge("recompiles").set(float(
                 sum(st.steps.recompiles for st in slots0.values())
                 if host.pool is not None else host.steps.recompiles))

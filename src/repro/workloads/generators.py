@@ -21,7 +21,8 @@ from typing import List
 
 import numpy as np
 
-from repro.data.arrivals import KIND_ORDER, Event, interarrivals
+from repro.data.arrivals import (_DEFAULT_TRACE, KIND_ORDER, Event,
+                                 interarrivals)
 from repro.workloads.spec import StreamSpec, WorkloadSpec
 
 
@@ -119,6 +120,21 @@ def _arrival_times(dist: str, n: int, window: float,
     if dist == "diurnal":
         return _diurnal_times(n, window, rng, s.diurnal, s.duty_cycle)
     active = window * (s.duty_cycle.on_fraction if s.duty_cycle else 1.0)
+    if dist == "trace-replay":
+        # recorded-timestamp replay: consume the stream's recorded gaps
+        # verbatim (tiled when n outruns the recording, falling back to
+        # the module's VTT-style default trace) — deliberately NOT
+        # rescaled into the window, so the recorded burst geometry
+        # survives every scale knob; only the duty warp applies, like
+        # any other gap-based process. Identical traces across streams
+        # give perfectly correlated arrivals (the flash-crowd preset).
+        gaps = np.asarray(s.trace if len(s.trace) else _DEFAULT_TRACE,
+                          np.float64)
+        t = np.cumsum(np.tile(gaps, int(np.ceil(n / gaps.size)))[:n])
+        if s.duty_cycle is not None:
+            t = _duty_cycle_warp(np.minimum(t, active - 1e-6),
+                                 s.duty_cycle)
+        return t
     if dist == "mmpp":
         t = np.cumsum(_mmpp_gaps(n, active / n, rng, s.mmpp))
     else:

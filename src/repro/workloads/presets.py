@@ -82,6 +82,22 @@ def presets(*, batches_per_scenario: int = 8, inferences: int = 24,
                          batches_per_scenario=batches_per_scenario * 2,
                          inferences=max(inferences // 2, 4))),
                      **geom),
+        # adversarial flash crowd: four cameras replaying the SAME
+        # recorded trace — a long quiet stretch, then a dense burst
+        # hitting every stream at the same instant (a stadium goal, a
+        # doorbell storm). 'trace-replay' honors the recorded gaps
+        # verbatim (no window rescale), so the burst stays exactly as
+        # tight as recorded no matter the scale knobs — the worst case
+        # for triggers, serving latency and (with env enabled) thermal
+        # headroom.
+        WorkloadSpec("flash-crowd",
+                     tuple(cv(benchmark="ni" if i % 2 else "nc",
+                              data_dist="trace-replay",
+                              inf_dist="trace-replay",
+                              trace=(scenario_span * 0.55,)
+                              + (scenario_span / 200.0,) * 23)
+                           for i in range(4)),
+                     **geom),
         # DeviceFleet cell (DESIGN.md §13): a whole fleet of light camera
         # streams — each a fraction of the single-device load, phased so
         # arrivals spread over the scenario span — routed across tens of

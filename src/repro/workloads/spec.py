@@ -17,10 +17,12 @@ attribution are tracked per stream (DESIGN.md §7).
 from __future__ import annotations
 
 import dataclasses
+import math
 from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 
-ARRIVAL_DISTS = ("poisson", "uniform", "normal", "trace", "mmpp", "diurnal")
+ARRIVAL_DISTS = ("poisson", "uniform", "normal", "trace", "mmpp", "diurnal",
+                 "trace-replay")
 DRIFT_SCHEDULES = ("aligned", "staggered")
 
 
@@ -80,6 +82,14 @@ class StreamSpec:
     mmpp: Optional[MMPPConfig] = None
     diurnal: Optional[DiurnalConfig] = None
     duty_cycle: Optional[DutyCycle] = None
+    # Recorded inter-arrival gaps (seconds) for the 'trace-replay'
+    # distribution: consumed verbatim — tiled when the event count
+    # outruns the recording, never rescaled to the window, so the
+    # recorded burst geometry survives every scale knob. Empty falls
+    # back to `repro.data.arrivals._DEFAULT_TRACE` (the VTT-style
+    # bursty stand-in). Contrast with 'trace', which *resamples* the
+    # same recording normalized to the requested mean rate.
+    trace: Tuple[float, ...] = ()
 
 
 @dataclass(frozen=True)
@@ -149,6 +159,14 @@ class WorkloadSpec:
                 raise ValueError(
                     f"workload {self.name!r} stream {i}: on_fraction "
                     f"must be in (0, 1]")
+            if "trace-replay" in (s.data_dist, s.inf_dist):
+                for g in s.trace:
+                    if not (isinstance(g, (int, float))
+                            and math.isfinite(g) and g > 0):
+                        raise ValueError(
+                            f"workload {self.name!r} stream {i}: "
+                            f"trace-replay gaps must be positive finite "
+                            f"seconds (got {g!r})")
         return self
 
     @property

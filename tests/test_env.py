@@ -1,0 +1,241 @@
+"""repro.env (DESIGN.md §15): battery conservation against the ledger,
+thermal RC exactness, DVFS governor transitions, the ThrottlePolicy
+facet, and the two ends of the integration contract — env disabled is
+bit-exact with the pre-env runtime, and a finite battery on a fleet run
+really throttles/evicts devices while the ledger never overdraws the
+budget and the Chrome trace carries gauges + throttle spans."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.policies import (BudgetThrottle, NullThrottle, PolicySpec,
+                                 PolicyStackSpec, ThermalThrottle,
+                                 build_throttle)
+from repro.env import (BatteryModel, DeviceEnv, DvfsGovernor, EnvSpec,
+                       EnvState, ThermalModel)
+from repro.obs.export import events_from_chrome, load_chrome_trace
+from repro.obs.spec import TelemetrySpec
+from repro.runtime import RuntimeConfig, SlotConfig, edgeol_session
+from repro.runtime.config import DeviceConfig
+
+SCALE = dict(batches_per_scenario=3, inferences=6, num_scenarios=2)
+
+
+def _session(workload="two-stream", *, scale=SCALE, slots=None, **cfg_kw):
+    cfg = RuntimeConfig(slots=slots or {"cv": SlotConfig()},
+                        workload=workload, workload_scale=dict(scale),
+                        seed=0, pretrain_epochs=1, compiled=True, **cfg_kw)
+    return edgeol_session(cfg)
+
+
+def _assert_identical(a, b):
+    assert a.rounds == b.rounds
+    assert a.syncs == b.syncs
+    np.testing.assert_array_equal(a.inference_accs, b.inference_accs)
+    np.testing.assert_array_equal(a.val_curve, b.val_curve)
+    assert a.total_time_s == b.total_time_s
+    assert a.total_energy_j == b.total_energy_j
+    assert a.per_stream == b.per_stream
+    assert a.per_device == b.per_device
+
+
+# ---------------------------------------------------------------------------
+# EnvSpec
+
+
+def test_env_spec_roundtrip_and_defaults_omitted():
+    s = EnvSpec(battery_capacity_j=50.0, thermal_cap_c=60.0,
+                dvfs_levels=(1.0, 0.5))
+    d = s.to_dict()
+    assert set(d) == {"battery_capacity_j", "thermal_cap_c", "dvfs_levels"}
+    assert EnvSpec.from_dict(d) == s
+    assert EnvSpec().to_dict() == {}          # all-defaults serializes empty
+    assert not EnvSpec().active               # and is inactive
+    assert EnvSpec(battery_capacity_j=1.0).active
+    assert EnvSpec(thermal_cap_c=40.0).active
+
+
+def test_env_spec_validation_actionable():
+    with pytest.raises(ValueError, match="battery_capacity_j"):
+        EnvSpec(battery_capacity_j=-1.0).validate()
+    with pytest.raises(ValueError, match="dvfs_levels"):
+        EnvSpec(dvfs_levels=(0.5, 1.0)).validate()   # must descend from 1.0
+    with pytest.raises(ValueError, match="reserve"):
+        EnvSpec(battery_reserve_frac=1.0).validate()
+    with pytest.raises(ValueError, match="unknown"):
+        EnvSpec.from_dict({"battery_capacity_mj": 1.0})
+
+
+def test_device_config_env_roundtrip():
+    dc = DeviceConfig("dev1", env=EnvSpec(battery_capacity_j=20.0))
+    dc.validate("test")
+    assert DeviceConfig.from_dict(dc.to_dict()) == dc
+    # env-less config serializes without the key (backward-compatible)
+    assert "env" not in DeviceConfig("dev0").to_dict()
+
+
+# ---------------------------------------------------------------------------
+# physics sub-models
+
+
+def test_battery_drain_harvest_and_dead_threshold():
+    b = BatteryModel(100.0, harvest_w=2.0, reserve_frac=0.1)
+    b.drain(30.0)
+    assert b.charge_j == 70.0 and b.drained_j == 30.0
+    b.harvest(5.0)                            # +10 J
+    assert b.charge_j == 80.0 and b.harvested_j == 10.0
+    b.harvest(100.0)                          # clamped to capacity
+    assert b.charge_j == 100.0
+    assert not b.dead
+    b.drain(91.0)                             # 9 J < 10% reserve
+    assert b.dead and b.soc == pytest.approx(0.09)
+
+
+def test_thermal_rc_step_is_exact_and_monotone():
+    t = ThermalModel(ambient_c=25.0, resistance_c_per_w=2.0,
+                     time_constant_s=30.0)
+    steady = 25.0 + 3.0 * 2.0
+    temps = [t.step(3.0, 10.0) for _ in range(20)]
+    assert all(b > a for a, b in zip(temps, temps[1:]))  # monotone rise
+    assert temps[-1] < steady
+    assert temps[-1] == pytest.approx(steady, abs=1e-2)
+    # exactness: composing two half-steps equals one full step
+    a = ThermalModel(ambient_c=25.0, resistance_c_per_w=2.0,
+                     time_constant_s=30.0)
+    b = ThermalModel(ambient_c=25.0, resistance_c_per_w=2.0,
+                     time_constant_s=30.0)
+    a.step(3.0, 7.0)
+    a.step(3.0, 13.0)
+    b.step(3.0, 20.0)
+    assert a.temp_c == pytest.approx(b.temp_c, rel=1e-12)
+    # cooling relaxes back toward ambient, never below
+    for _ in range(50):
+        t.step(0.0, 10.0)
+    assert t.temp_c == pytest.approx(25.0, abs=1e-3)
+
+
+def test_dvfs_governor_heat_pulse_transitions():
+    g = DvfsGovernor((1.0, 0.75, 0.5), cap_c=60.0, hysteresis_c=5.0)
+    assert g.update(65.0) == 0.75             # step down under the pulse
+    assert g.update(65.0) == 0.5
+    assert g.update(65.0) == 0.5              # floor of the ladder
+    assert g.update(57.0) == 0.5              # hysteresis band: hold
+    assert g.update(54.0) == 0.75             # cooled below cap - hyst
+    assert g.update(54.0) == 1.0
+    assert g.transitions == 4
+    off = DvfsGovernor((1.0, 0.5), cap_c=0.0)
+    assert off.update(500.0) == 1.0           # cap 0 disables the governor
+
+
+# ---------------------------------------------------------------------------
+# ThrottlePolicy facet
+
+
+def test_throttle_policies_decide_and_count():
+    mains = EnvState(device="d", temperature_c=30.0, level=1.0)
+    ok = EnvState(device="d", temperature_c=30.0, level=1.0, soc=0.5,
+                  charge_j=50.0, reserve_j=5.0)
+    dead = EnvState(device="d", temperature_c=30.0, level=1.0, soc=0.02,
+                    charge_j=2.0, reserve_j=5.0, battery_dead=True)
+    assert NullThrottle().allow_round(dead) and NullThrottle().stats() == {}
+    bt = BudgetThrottle(min_soc=0.1)
+    assert bt.allow_round(mains)              # no battery: always allow
+    assert bt.allow_round(ok, energy_j=40.0)  # 40 <= 50 - 5
+    assert not bt.allow_round(ok, energy_j=46.0)
+    assert not bt.allow_round(dead, energy_j=0.1)
+    assert bt.stats() == {"throttle_deferred": 2}
+    tt = ThermalThrottle(max_temp_c=80.0)
+    assert tt.allow_round(ok)
+    hot = EnvState(device="d", temperature_c=85.0, level=0.5)
+    assert not tt.allow_round(hot)
+    assert tt.stats() == {"throttle_deferred": 1}
+
+
+def test_throttle_spec_registry_and_stack_roundtrip():
+    assert isinstance(build_throttle(PolicySpec("none")), NullThrottle)
+    assert isinstance(build_throttle(
+        PolicySpec("battery", {"min_soc": 0.2})), BudgetThrottle)
+    with pytest.raises(ValueError, match="throttle"):
+        build_throttle(PolicySpec("nope"))
+    spec = PolicyStackSpec(throttle=PolicySpec("thermal",
+                                               {"max_temp_c": 70.0}))
+    assert PolicyStackSpec.from_dict(spec.to_dict()) == spec
+    # the default facet serializes away entirely (pre-v7 specs reload)
+    assert "throttle" not in PolicyStackSpec().to_dict()
+
+
+# ---------------------------------------------------------------------------
+# integration: disabled env is bit-exact
+
+
+def test_inactive_env_and_null_throttle_are_bit_exact():
+    devices = (DeviceConfig("dev0"), DeviceConfig("dev1"))
+    base = _session(devices=devices, aggregate_every=50.0).run()
+    # an all-defaults EnvSpec is inactive: no DeviceEnv is built
+    inert = tuple(DeviceConfig(d.name, env=EnvSpec()) for d in devices)
+    withenv = _session(devices=inert, aggregate_every=50.0).run()
+    _assert_identical(base, withenv)
+    # an explicit NullThrottle facet in the stack spec is equally inert
+    pol = PolicyStackSpec(throttle=PolicySpec("none"))
+    cfg_kw = dict(devices=devices, aggregate_every=50.0)
+    withnull = _session(
+        **cfg_kw, slots={"cv": SlotConfig(policies=pol)}).run()
+    _assert_identical(base, withnull)
+
+
+# ---------------------------------------------------------------------------
+# integration: battery conservation against the ledger
+
+
+def test_battery_drain_equals_per_device_ledger_energy():
+    # a huge battery never throttles or dies, so the run is undisturbed
+    # and drained joules must mirror the ledger's per-device energy 1:1
+    env = EnvSpec(battery_capacity_j=1e9)
+    devices = (DeviceConfig("dev0", env=env),
+               DeviceConfig("dev1", env=env, speed_scale=1.5))
+    rt = _session(devices=devices, aggregate_every=50.0)
+    res = rt.run()
+    envs = rt.fleet.envs
+    assert set(envs) == {"dev0", "dev1"}
+    for name, cell in res.per_device.items():
+        assert envs[name].battery.drained_j == pytest.approx(
+            cell["energy_j"], rel=1e-9)
+        assert not envs[name].battery_dead
+
+
+# ---------------------------------------------------------------------------
+# integration: the power loop closes (ISSUE acceptance)
+
+
+def test_finite_battery_fleet_throttles_within_budget(tmp_path):
+    budget = 40.0
+    env = EnvSpec(battery_capacity_j=budget, thermal_cap_c=26.0)
+    devices = (DeviceConfig("dev0", env=env),
+               DeviceConfig("dev1", env=env))
+    pol = PolicyStackSpec(throttle=PolicySpec("battery"))
+    trace = str(tmp_path / "env_trace.json")
+    rt = _session(
+        devices=devices, aggregate_every=50.0,
+        slots={"cv": SlotConfig(policies=pol)},
+        telemetry=TelemetrySpec(enabled=True, chrome_trace=trace))
+    res = rt.run()
+    # >= 1 device throttled (DVFS time or deferred rounds) or evicted
+    engaged = any(cell["throttle_s"] > 0 or cell["battery_dead"] > 0
+                  or cell["evicted"] > 0
+                  for cell in res.per_device.values())
+    deferred = res.controller_stats.get("throttle_deferred", 0)
+    assert engaged or deferred > 0
+    # ledger energy never exceeds the configured budget per device
+    for name, cell in res.per_device.items():
+        assert cell["energy_j"] <= budget + 1e-6
+    # the Chrome trace validates and carries gauges + throttle marks
+    doc = load_chrome_trace(trace)
+    counters = {r["name"] for r in doc["traceEvents"]
+                if r.get("ph") == "C"}
+    assert {"temperature_c/dev0", "soc/dev0",
+            "temperature_c/dev1", "soc/dev1"} <= counters
+    evs = events_from_chrome(doc)
+    assert any(e.cat == "gauge" for e in evs)      # "C" records invert
+    assert any(e.cat == "throttle" for e in evs)   # spans or defer marks
+    assert math.isfinite(res.total_energy_j)

@@ -259,7 +259,9 @@ def _valid_doc():
     stream_cell = {f: 1.0 for f in W.STREAM_FIELDS}
     model_cell = {f: 1.0 for f in W.MODEL_FIELDS}
     device_cell = {f: 1.0 for f in W.DEVICE_FIELDS}
+    cell["energy_budget_j"] = 0.0     # v7: mains-powered by default
     cells = [dict(cell, workload=w, method=m, trigger_policy="default",
+                  throttle="none",
                   per_stream={"0": dict(stream_cell)},
                   per_model={"default": dict(model_cell)},
                   per_device={"dev0": dict(device_cell)})
@@ -328,6 +330,38 @@ def test_bench_schema_validator_flags_violations():
     assert any("utilization" in e for e in W.validate_bench(bad))
     bad = dict(doc, cells=[dict(c, workload="fleet") for c in doc["cells"]])
     assert any(">= 2" in e for e in W.validate_bench(bad, min_workloads=1))
+    # v7: every cell names its throttle mode; a fleet preset must carry
+    # an env cell in which the environment demonstrably engaged, and an
+    # env cell overdrawing its battery budget is a violation
+    bad = dict(doc, cells=[dict(c) for c in doc["cells"]])
+    del bad["cells"][0]["throttle"]
+    assert any("'throttle'" in e for e in W.validate_bench(bad))
+    bad = dict(doc, cells=[dict(c, workload="fleet", devices=1)
+                           for c in doc["cells"]])
+    assert any("env cell" in e for e in W.validate_bench(
+        bad, min_workloads=1))
+    idle = dict(doc["cells"][0]["per_device"]["dev0"],
+                battery_dead=0.0, throttle_s=0.0, energy_j=49.0)
+    env = dict(doc, cells=[dict(c, workload="fleet", throttle="battery",
+                                energy_budget_j=50.0,
+                                per_device={"dev0": dict(idle)})
+                           for c in doc["cells"]])
+    # per_device shows no battery_dead/throttle_s/evicted activity
+    assert any("env not engaged" in e for e in W.validate_bench(
+        env, min_workloads=1))
+    hot = dict(idle, throttle_s=5.0)
+    ok_env = dict(doc, cells=[dict(c, workload="fleet",
+                                   throttle="battery",
+                                   energy_budget_j=50.0,
+                                   per_device={"dev0": dict(hot)})
+                              for c in doc["cells"]])
+    errs = W.validate_bench(ok_env, min_workloads=1)
+    assert not any("env" in e for e in errs)
+    over = dict(hot, energy_j=51.0)   # ledger energy > battery budget
+    bad = dict(ok_env, cells=[dict(c, per_device={"dev0": dict(over)})
+                              for c in ok_env["cells"]])
+    assert any("exceeds" in e for e in W.validate_bench(
+        bad, min_workloads=1))
 
 
 # ---------------------------------------------------------------------------
